@@ -1,0 +1,53 @@
+"""Paper Fig. 17 analogue: end-to-end time-per-output-token — the fully
+fused decode step (one XLA computation) vs a per-op "launch boundary"
+baseline (each layer a separate dispatch), tiny config on 8 host devices.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.configs import get_config, reduced
+from repro.launch.mesh import make_test_mesh
+from repro.launch.serve import build_engine
+
+
+def main(archs=("llama2-7b", "deepseek-v2-lite")):
+    rows = []
+    for arch in archs:
+        cfg = reduced(get_config(arch))
+        mesh = make_test_mesh()
+        params, pf, dec, state, lay, scfg = build_engine(
+            cfg, mesh, max_seq=256, batch_global=4)
+        key = jax.random.PRNGKey(0)
+        prompts = jax.random.randint(key, (4, 64), 0, cfg.vocab_size)
+        fe = None
+        if cfg.frontend is not None:
+            fe = jax.random.normal(key, (4, cfg.frontend.num_positions,
+                                         cfg.frontend.feature_dim))
+        nxt, st = pf(params, state, prompts, fe)
+
+        def one_token(tok, st_):
+            return dec(params, st_, tok)
+
+        t = time_fn(lambda: one_token(nxt, st), iters=15)
+        rows.append(row(f"tpot_fused_{arch}", t,
+                        f"cluster={lay.cluster}"))
+
+        # per-layer dispatch baseline: L separate jit calls (launch-bound)
+        n_calls = cfg.n_layers + 2
+
+        @jax.jit
+        def single_layer_cost(tok):
+            return tok + 1
+
+        t_launch = time_fn(lambda: [single_layer_cost(nxt)
+                                    for _ in range(n_calls)], iters=15)
+        rows.append(row(f"tpot_launch_overhead_{arch}", t_launch,
+                        f"n_dispatches={n_calls},"
+                        f"fused_saves={t_launch / max(t, 1e-9):.2f}x_of_step"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

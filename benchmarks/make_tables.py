@@ -1,0 +1,50 @@
+"""Generate the EXPERIMENTS.md roofline/dry-run tables from dryrun JSON."""
+import json
+import sys
+
+
+def table(rows, multi_pod):
+    hdr = ("| arch | shape | heads×cluster | flops/dev | bytes/dev | "
+           "coll/dev | t_comp ms | t_mem ms | t_coll ms | dominant | "
+           "useful | peak GiB |\n" + "|---" * 12 + "|")
+    lines = [hdr]
+    for r in rows:
+        if r.get("multi_pod") != multi_pod:
+            continue
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — "
+                         f"| — | — | SKIP (long-ctx, full-attn) | — | — |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — "
+                         f"| — | — | ERROR | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {r['heads_sub']}×{r['cluster']} "
+            f"| {r['flops_per_device']:.2e} | {r['bytes_per_device']:.2e} "
+            f"| {r['collective_bytes_per_device']:.2e} "
+            f"| {r['t_compute_s']*1e3:.2f} | {r['t_memory_s']*1e3:.2f} "
+            f"| {r['t_collective_s']*1e3:.2f} | {r['dominant']} "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {r['peak_device_bytes']/2**30:.1f} |")
+    return "\n".join(lines)
+
+
+def main():
+    rows = json.load(open(sys.argv[1]))
+    ok = [r for r in rows if "t_compute_s" in r]
+    skip = [r for r in rows if r.get("skipped")]
+    err = [r for r in rows if "error" in r]
+    out = []
+    out.append(f"Cells: {len(rows)} total — {len(ok)} compiled, "
+               f"{len(skip)} recorded skips, {len(err)} errors.\n")
+    out.append("### Single-pod 16×16 (256 chips) — baseline roofline table\n")
+    out.append(table(rows, False))
+    out.append("\n### Multi-pod 2×16×16 (512 chips) — pod-axis shard proof\n")
+    out.append(table(rows, True))
+    print("\n".join(out))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Roofline aggregation: dryrun JSON → the EXPERIMENTS.md §Roofline table.
+
+Implements the two-point scan extrapolation: XLA's ``cost_analysis`` counts
+a ``while`` (scan) body ONCE, so a full-model compile undercounts FLOPs by
+~n_groups×.  We therefore lower reduced-depth variants (1 and 2 layer
+groups), solve  cost = E + G·n_groups  for the embed/head term E and the
+per-group term G, and report  E + G·n_groups_full  — all derived from
+compiled artifacts, no analytic FLOP counting.
+"""
+import dataclasses
+import json
+from typing import Dict, Optional
+
+from repro.configs import SHAPES, get_config
+from repro.launch.dryrun import (HBM_BW, ICI_BW, PEAK_FLOPS, analyse,
+                                 run_cell)
+
+
+def scan_extrapolated_cell(arch: str, shape_name: str, *,
+                           multi_pod: bool = False,
+                           tcfg_kw: Optional[dict] = None) -> Dict:
+    """Two-point extrapolation of per-device flops/bytes/collective bytes."""
+    import repro.configs.base as base
+    cfg = get_config(arch)
+    period = len(cfg.block_pattern)
+    n_groups = cfg.n_layers // period
+    n_tail = cfg.n_layers - n_groups * period
+
+    def with_layers(n_layers):
+        return dataclasses.replace(cfg, n_layers=n_layers)
+
+    # monkey-patch the registry entry for the reduced-depth lowers
+    from repro.configs.base import _REGISTRY
+    orig = _REGISTRY[arch]
+    results = {}
+    try:
+        for tag, nl in (("g1", period + n_tail), ("g2", 2 * period + n_tail)):
+            _REGISTRY[arch] = lambda nl=nl: with_layers(nl)
+            results[tag] = run_cell(arch, shape_name, multi_pod=multi_pod,
+                                    verbose=False, tcfg_kw=tcfg_kw)
+    finally:
+        _REGISTRY[arch] = orig
+    full = run_cell(arch, shape_name, multi_pod=multi_pod, verbose=False,
+                    tcfg_kw=tcfg_kw)
+    if results["g1"].get("skipped") or "error" in results["g1"]:
+        return full
+
+    out = dict(full)
+    for key in ("flops_per_device", "bytes_per_device",
+                "collective_bytes_per_device"):
+        g = results["g2"][key] - results["g1"][key]     # per-group cost
+        e = results["g1"][key] - g                      # embed/head cost
+        out[key + "_extrap"] = max(e + g * n_groups, full[key])
+    out["t_compute_s"] = out.get("flops_per_device_extrap",
+                                 out["flops_per_device"]) / PEAK_FLOPS
+    out["t_memory_s"] = out.get("bytes_per_device_extrap",
+                                out["bytes_per_device"]) / HBM_BW
+    out["t_collective_s"] = out.get(
+        "collective_bytes_per_device_extrap",
+        out["collective_bytes_per_device"]) / ICI_BW
+    out["dominant"] = max(
+        (("compute", out["t_compute_s"]), ("memory", out["t_memory_s"]),
+         ("collective", out["t_collective_s"])), key=lambda kv: kv[1])[0]
+    n_dev = out["n_devices"]
+    out["useful_flops_ratio"] = out["model_flops_total"] / max(
+        out.get("flops_per_device_extrap", out["flops_per_device"]) * n_dev,
+        1.0)
+    # roofline fraction: how close the dominant-term-bound step time is to
+    # the pure-compute bound
+    t_bound = max(out["t_compute_s"], out["t_memory_s"],
+                  out["t_collective_s"])
+    out["roofline_fraction"] = out["t_compute_s"] / max(t_bound, 1e-30)
+    return out
+
+
+def to_markdown(rows) -> str:
+    hdr = ("| arch | shape | mesh | heads×cluster | t_comp (ms) | t_mem (ms)"
+           " | t_coll (ms) | dominant | useful FLOPs | roofline frac |"
+           " peak GiB/dev |\n|" + "---|" * 11)
+    lines = [hdr]
+    for r in rows:
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — "
+                         f"| SKIP ({r['reason'][:40]}…) | — | — | — |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — "
+                         f"| ERROR | — | — | — |")
+            continue
+        mesh = "2x16x16" if r.get("multi_pod") else "16x16"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} "
+            f"| {r.get('heads_sub','?')}×{r.get('cluster','?')} "
+            f"| {r['t_compute_s']*1e3:.2f} | {r['t_memory_s']*1e3:.2f} "
+            f"| {r['t_collective_s']*1e3:.2f} | {r['dominant']} "
+            f"| {r.get('useful_flops_ratio', 0):.2f} "
+            f"| {r.get('roofline_fraction', 0):.2f} "
+            f"| {r.get('peak_device_bytes', 0)/2**30:.1f} |")
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", required=True)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rows = json.load(open(args.json))
+    md = to_markdown(rows)
+    if args.out:
+        open(args.out, "w").write(md)
+    print(md)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Run the scan-extrapolated roofline over all single-pod cells."""
+import json
+import sys
+
+from repro.configs import SHAPES, get_config, list_archs, shapes_for
+from benchmarks.roofline import scan_extrapolated_cell, to_markdown
+
+
+def main():
+    rows = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        ok = {s.name for s in shapes_for(cfg)}
+        for shape in SHAPES.values():
+            if shape.name not in ok:
+                rows.append({"arch": arch, "shape": shape.name,
+                             "skipped": True,
+                             "reason": "unbounded full-attention KV at 500k"})
+                continue
+            try:
+                r = scan_extrapolated_cell(arch, shape.name)
+                rows.append(r)
+                print(f"{arch} x {shape.name}: dominant={r['dominant']} "
+                      f"useful={r['useful_flops_ratio']:.2f}", flush=True)
+            except Exception as e:  # noqa: BLE001
+                rows.append({"arch": arch, "shape": shape.name,
+                             "error": repr(e)})
+                print(f"{arch} x {shape.name}: ERROR {e!r}", flush=True)
+    with open("/root/repo/roofline_all.json", "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    open("/root/repo/roofline_all.md", "w").write(to_markdown(rows))
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

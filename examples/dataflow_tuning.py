@@ -1,0 +1,30 @@
+"""Cluster-size / dataflow tuning (paper §4.1 Fig. 11 + App. B):
+sweep the analytical model per architecture × context length, print the
+chosen configuration — what ``serving_layout`` does automatically.
+
+    PYTHONPATH=src python examples/dataflow_tuning.py
+"""
+from repro.configs import get_config, list_archs
+from repro.core.autotune import sweep, tune_cluster
+
+
+def main():
+    print(f"{'arch':24s} {'S':>7s}  best  dataflow      est_ms   "
+          "(mem/comp/ici ms)")
+    for arch in list_archs():
+        cfg = get_config(arch)
+        if cfg.is_attention_free:
+            print(f"{arch:24s} {'—':>7s}  inapplicable (attention-free; "
+                  "DESIGN.md §4)")
+            continue
+        for S in (1024, 16384, 131072):
+            best = tune_cluster(cfg, seq_len=S, batch=1, model_axis=16)
+            t = best.terms
+            print(f"{arch:24s} {S:7d}  N={best.cluster_size:<3d} "
+                  f"{best.dataflow:12s} {best.est_seconds*1e3:8.3f}   "
+                  f"({t['mem']*1e3:.3f}/{t['comp']*1e3:.3f}/"
+                  f"{t['ici']*1e3:.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,189 @@
+"""Sharded checkpointing with atomic commits, keep-k retention, async
+save, and elastic re-shard on restore.
+
+Format: one ``.npz``-style directory per step —
+``step_000123/ leaf_00000.npy … manifest.json`` — with the pytree
+structure and per-leaf metadata in the manifest.  Writes go to
+``step_X.tmp`` and are atomically renamed (a crashed save never corrupts
+the latest checkpoint; restart resumes from the last committed step).
+
+Elastic restore: the data-parallel degree may change between runs.
+Parameters are stored replicated-over-data (device-major over model), so
+DP changes are free; ZeRO-sliced optimizer state is stored *gathered*
+(full) and re-sliced by the new run's ranks.  Model-axis size is fixed
+per layout (re-layout via ``models.transformer.to_device_major`` when it
+must change — offline tool, see relayout()).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+PyTree = Any
+
+_BF16 = np.dtype(ml_dtypes.bfloat16)
+
+
+def _to_storable(arr: np.ndarray):
+    """np.save can't represent bfloat16 — store as uint16 view + tag."""
+    if arr.dtype == _BF16:
+        return arr.view(np.uint16), "bfloat16"
+    return arr, str(arr.dtype)
+
+
+def _from_storable(arr: np.ndarray, dtype_tag: str) -> np.ndarray:
+    if dtype_tag == "bfloat16":
+        return arr.view(_BF16)
+    return arr
+
+
+def _leaf_paths(tree: PyTree) -> List[str]:
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return ["/".join(str(p) for p in kp) for kp, _ in paths]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- discovery ----------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m:
+                steps.append(int(m.group(1)))
+        return max(steps) if steps else None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: PyTree, *, extra: Optional[Dict] = None,
+             block: bool = False) -> None:
+        """Snapshot ``tree`` at ``step``.  Device→host transfer happens
+        synchronously (consistent snapshot); disk IO is backgrounded."""
+        leaves, treedef = jax.tree.flatten(tree)
+        host = [np.asarray(l) for l in leaves]      # sync copy
+        if self._thread is not None:
+            self._thread.join()                     # one in flight max
+
+        def write():
+            tmp = os.path.join(self.dir, f"step_{step:08d}.tmp")
+            final = os.path.join(self.dir, f"step_{step:08d}")
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            manifest = {
+                "step": step,
+                "treedef": str(treedef),
+                "n_leaves": len(host),
+                "extra": extra or {},
+                "leaves": [],
+            }
+            for i, arr in enumerate(host):
+                stor, tag = _to_storable(arr)
+                np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), stor)
+                manifest["leaves"].append(
+                    {"shape": list(arr.shape), "dtype": tag})
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)                   # atomic commit
+            self._gc()
+
+        if self.async_save and not block:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(
+            int(m.group(1))
+            for name in os.listdir(self.dir)
+            if (m := re.fullmatch(r"step_(\d+)", name)))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+    def restore(self, like: PyTree, step: Optional[int] = None
+                ) -> Tuple[PyTree, Dict]:
+        """Restore into the structure of ``like`` (shapes must match leaf
+        by leaf — same layout).  Returns (tree, extra)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        leaves, treedef = jax.tree.flatten(like)
+        assert manifest["n_leaves"] == len(leaves), \
+            (manifest["n_leaves"], len(leaves))
+        out = []
+        for i, ref in enumerate(leaves):
+            arr = np.load(os.path.join(d, f"leaf_{i:05d}.npy"))
+            arr = _from_storable(arr, manifest["leaves"][i]["dtype"])
+            assert tuple(arr.shape) == tuple(ref.shape), \
+                (i, arr.shape, ref.shape)
+            out.append(arr)
+        return treedef.unflatten(out), manifest.get("extra", {})
+
+    def restore_elastic(self, like: PyTree, step: Optional[int] = None,
+                        ) -> Tuple[PyTree, Dict]:
+        """Restore allowing the *data-parallel* degree to change: leaves
+        whose stored first-divisible axis differs by an integer factor are
+        re-sliced/tiled (ZeRO state saved gathered ⇒ plain restore; this
+        handles legacy per-rank saves and future re-shards)."""
+        step = step if step is not None else self.latest_step()
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        leaves, treedef = jax.tree.flatten(like)
+        out = []
+        for i, ref in enumerate(leaves):
+            arr = np.load(os.path.join(d, f"leaf_{i:05d}.npy"))
+            arr = _from_storable(arr, manifest["leaves"][i]["dtype"])
+            if tuple(arr.shape) != tuple(ref.shape):
+                arr = _reshard_leaf(arr, tuple(ref.shape))
+            out.append(arr)
+        return treedef.unflatten(out), manifest.get("extra", {})
+
+
+def _reshard_leaf(arr: np.ndarray, target: Tuple[int, ...]) -> np.ndarray:
+    """Best-effort axis-0 re-shard (DP elasticity)."""
+    if arr.ndim != len(target):
+        raise ValueError(f"rank mismatch {arr.shape} -> {target}")
+    for ax, (a, t) in enumerate(zip(arr.shape, target)):
+        if a == t:
+            continue
+        rest_ok = arr.shape[:ax] + arr.shape[ax + 1:] \
+            == target[:ax] + target[ax + 1:]
+        if not rest_ok:
+            raise ValueError(f"cannot reshard {arr.shape} -> {target}")
+        if a % t == 0 or t % a == 0:
+            reps = [1] * arr.ndim
+            if t > a:
+                reps[ax] = t // a
+                return np.tile(arr, reps)
+            idx = [slice(None)] * arr.ndim
+            idx[ax] = slice(0, t)
+            return arr[tuple(idx)]
+    raise ValueError(f"cannot reshard {arr.shape} -> {target}")

@@ -1,0 +1,27 @@
+"""Snowflake Arctic 480B: 128 experts top-2 + dense residual.
+
+[hf:Snowflake/snowflake-arctic-base; hf] 35L d_model=7168 56H (GQA kv=8)
+d_ff=4864 vocab=32000, MoE 128e top-2 with a dense FFN residual branch.
+"""
+from repro.configs.base import ModelConfig, MoEConfig, register
+
+
+@register("arctic-480b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="arctic-480b",
+        family="moe",
+        n_layers=35,
+        d_model=7168,
+        n_heads=56,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=4864,
+        vocab_size=32000,
+        moe=MoEConfig(num_experts=128, top_k=2, expert_d_ff=4864,
+                      dense_ff_residual=True, dense_residual_d_ff=4864,
+                      capacity_factor=1.25),
+        ffn_act="silu",
+        ffn_gated=True,
+        source="[hf:Snowflake/snowflake-arctic-base; hf]",
+    )

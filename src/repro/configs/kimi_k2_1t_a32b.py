@@ -1,0 +1,26 @@
+"""Kimi K2 — trillion-param MoE (paper-table config).
+
+[arXiv:2501.kimi2; unverified] 61L d_model=7168 64H (GQA kv=8)
+expert d_ff=2048 vocab=163840, MoE 384 experts top-8.
+"""
+from repro.configs.base import ModelConfig, MoEConfig, register
+
+
+@register("kimi-k2-1t-a32b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="kimi-k2-1t-a32b",
+        family="moe",
+        n_layers=61,
+        d_model=7168,
+        n_heads=64,
+        n_kv_heads=8,
+        head_dim=112,
+        d_ff=2048,
+        vocab_size=163840,
+        moe=MoEConfig(num_experts=384, top_k=8, expert_d_ff=2048,
+                      capacity_factor=1.25),
+        ffn_act="silu",
+        ffn_gated=True,
+        source="[arXiv:2501.kimi2; unverified]",
+    )

@@ -1,0 +1,29 @@
+"""RecurrentGemma-9B (Griffin): RG-LRU + local attention, 1:2 ratio.
+
+[arXiv:2402.19427; unverified] 38L d_model=4096 16H (GQA kv=1 => MQA)
+d_ff=12288 vocab=256000.  Block pattern: (recurrent, recurrent, local-attn).
+"""
+from repro.configs.base import (ATTN_LOCAL, RECURRENT, ModelConfig, register)
+
+
+@register("recurrentgemma-9b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-9b",
+        family="hybrid",
+        n_layers=38,
+        d_model=4096,
+        n_heads=16,
+        n_kv_heads=1,
+        head_dim=256,
+        d_ff=12288,
+        vocab_size=256000,
+        block_pattern=(RECURRENT, RECURRENT, ATTN_LOCAL),
+        sliding_window=2048,
+        ffn_act="gelu_tanh",
+        ffn_gated=True,
+        rglru_d_state=4096,
+        conv1d_width=4,
+        tie_embeddings=True,
+        source="[arXiv:2402.19427; unverified]",
+    )

@@ -1,0 +1,30 @@
+"""SeamlessM4T-medium: encoder-decoder, multimodal (audio frontend stub).
+
+[arXiv:2308.11596; hf] 12L decoder, d_model=1024 16H (kv=16) d_ff=4096
+vocab=256206.  The speech frontend is a STUB: ``input_specs`` provides
+precomputed frame embeddings (assignment contract).
+"""
+from repro.configs.base import (EncoderConfig, FrontendConfig, ModelConfig,
+                                register)
+
+
+@register("seamless-m4t-medium")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-medium",
+        family="audio",
+        n_layers=12,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,
+        head_dim=64,
+        d_ff=4096,
+        vocab_size=256206,
+        ffn_act="relu",
+        ffn_gated=False,
+        encoder=EncoderConfig(n_layers=12, n_heads=16, n_kv_heads=16,
+                              d_ff=4096),
+        frontend=FrontendConfig(kind="audio", num_positions=1024,
+                                feature_dim=1024),
+        source="[arXiv:2308.11596; hf]",
+    )

@@ -1,0 +1,13 @@
+"""ClusterFusion core: cluster collectives, fused dataflows, autotuning."""
+from repro.core.primitives import (  # noqa: F401
+    SubAxis, axis_index, cluster_flash_combine, cluster_gather,
+    cluster_gather_tiled, cluster_reduce, cluster_reduce_pairs,
+    cluster_reduce_xla, flash_merge, offchip_reduce, traffic_gather,
+    traffic_reduce,
+)
+from repro.core.dataflow import (  # noqa: F401
+    ClusterSpec, KVBlock, MLAWeights, SplitHeadWeights, SplitTokenWeights,
+    init_kv_block, mla_attention, split_head_attention, split_token_attention,
+    traffic_mla, traffic_split_head, traffic_split_token,
+)
+from repro.core.autotune import TunePoint, sweep, tune_cluster  # noqa: F401

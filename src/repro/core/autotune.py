@@ -1,0 +1,118 @@
+"""Cluster-size / dataflow selection (paper §4.1 Fig. 11 + App. B).
+
+The paper's conclusion: *"the optimal cluster size varies across workloads
+… cluster size should be tuned accordingly"* (they measure 4 best for
+32–64 heads, 2 for 128 heads on H100).  On H100 the trade-off is DSMEM
+latency/bandwidth vs active SMs; on TPU the analogous trade-off is:
+
+* larger N ⇒ more chips cooperate on one head ⇒ shorter per-chip KV scan
+  (good: decode is KV-bandwidth-bound) but more ICI rounds (log2 N) and
+  more gather/reduce traffic (paper's traffic model, linear-to-N·log N);
+* larger N also shrinks the head-group axis H = model_axis / N ⇒ fewer
+  heads resident per chip ⇒ more weight replication for GQA KV weights.
+
+We pick N by minimizing an analytical per-token latency model built from
+the paper's traffic formulas plus v5e roofline constants.  This is the
+same *structure* as the paper's Appendix-B analysis, with DSMEM constants
+replaced by ICI/HBM constants.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core import dataflow as df
+
+# v5e hardware constants (per assignment)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+ICI_LAT = 1e-6               # seconds per hop (round latency floor)
+
+
+@dataclass(frozen=True)
+class TunePoint:
+    cluster_size: int
+    dataflow: str               # "split_token" | "split_head" | "mla"
+    est_seconds: float
+    terms: Dict[str, float]
+
+
+def _attn_decode_time(cfg: ModelConfig, seq_len: int, batch: int,
+                      model_axis: int, n: int, flow: str) -> Tuple[float, Dict[str, float]]:
+    """Per-layer decode-step latency estimate for cluster size n."""
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    heads_axis = model_axis // n
+    q_local = max(1, cfg.n_heads // heads_axis)
+    kv_local = max(1, cfg.n_kv_heads // heads_axis)
+    bpe = 2  # bf16
+
+    if cfg.mla is not None and flow == "mla":
+        l_rank = cfg.mla.kv_lora_rank
+        kv_bytes = batch * seq_len * (l_rank + cfg.mla.rope_head_dim) * bpe
+        traffic = df.traffic_mla(hd, l_rank, cfg.n_heads * hd, n,
+                                 bytes_per_el=bpe, batch=batch) * q_local
+        flops = 2 * batch * q_local * seq_len * (l_rank + cfg.mla.rope_head_dim) * 2
+    elif flow == "split_head":
+        kv_bytes = batch * seq_len * kv_local * hd * 2 * bpe  # full S per rank
+        traffic = df.traffic_split_head(seq_len, d, n, batch=batch) * q_local
+        flops = 2 * batch * q_local * seq_len * hd * 2 / n
+    else:  # split_token
+        kv_bytes = batch * seq_len * kv_local * hd * 2 * bpe / n  # S split
+        traffic = df.traffic_split_token(hd, d, n, bytes_per_el=bpe,
+                                         batch=batch) * q_local
+        flops = 2 * batch * q_local * seq_len * hd * 2 / n
+
+    # weight bytes per chip for the fused block (QKV + O slices)
+    w_bytes = (d * (q_local + 2 * kv_local) * hd / (1 if flow == "split_head" else n)
+               + q_local * hd * d / n) * bpe
+    t_mem = (kv_bytes + w_bytes) / HBM_BW
+    t_comp = flops / PEAK_FLOPS
+    t_ici = traffic / (n * ICI_BW) + math.log2(max(n, 2)) * ICI_LAT * (0 if n == 1 else 1)
+    total = max(t_mem, t_comp) + t_ici
+    return total, {"mem": t_mem, "comp": t_comp, "ici": t_ici,
+                   "traffic_bytes": traffic}
+
+
+def tune_cluster(cfg: ModelConfig, *, seq_len: int, batch: int,
+                 model_axis: int = 16,
+                 flows: Optional[List[str]] = None) -> TunePoint:
+    """Pick (cluster_size, dataflow) minimizing the analytical latency.
+
+    Mirrors the paper's tuning conclusion: larger N helps long sequences
+    (KV split) until ICI rounds dominate; SplitHead only competes at short
+    S; MLA uses its own fused dataflow.
+    """
+    if flows is None:
+        flows = ["mla"] if cfg.mla is not None else ["split_token", "split_head"]
+    best: Optional[TunePoint] = None
+    n = 1
+    while n <= model_axis:
+        heads_axis = model_axis // n
+        if cfg.n_heads % heads_axis == 0 or heads_axis <= cfg.n_heads:
+            for flow in flows:
+                t, terms = _attn_decode_time(cfg, seq_len, batch,
+                                             model_axis, n, flow)
+                pt = TunePoint(n, flow, t, terms)
+                if best is None or t < best.est_seconds:
+                    best = pt
+        n *= 2
+    assert best is not None
+    return best
+
+
+def sweep(cfg: ModelConfig, *, seq_len: int, batch: int,
+          model_axis: int = 16) -> List[TunePoint]:
+    """Full (N × dataflow) sweep — used by the Fig. 11 benchmark."""
+    flows = ["mla"] if cfg.mla is not None else ["split_token", "split_head"]
+    pts = []
+    n = 1
+    while n <= model_axis:
+        for flow in flows:
+            t, terms = _attn_decode_time(cfg, seq_len, batch, model_axis, n, flow)
+            pts.append(TunePoint(n, flow, t, terms))
+        n *= 2
+    return pts

@@ -1,0 +1,465 @@
+"""Cluster-centric fused decode dataflows (paper §3.2, Alg. 3/4/5).
+
+These functions run *inside* ``shard_map`` and implement the paper's
+dataflows with the cluster collectives from :mod:`repro.core.primitives`.
+The physical ``model`` mesh axis is factored into two logical sub-axes:
+
+* ``heads`` — partitions (grouped) attention heads across head-groups;
+  independent work, combined only by the Output-Projection reduction
+  (the paper's ``atomicAdd`` across clusters).
+* ``cluster`` — the paper's thread-block cluster: N ranks that cooperate
+  on ONE head-group via ClusterGather / ClusterReduce.
+
+Dataflows:
+
+* :func:`split_token_attention` — paper Alg. 3 ("SplitToken", the main
+  dataflow): head-dim partitioned QKV-Projection → ClusterGather; KV-cache
+  *sequence* partitioned FlashDecoding → ClusterReduce of softmax stats and
+  partial outputs; output-dim partitioned Output-Projection.
+* :func:`split_head_attention` — paper Alg. 5 (App. B.2): head-dim
+  partitioned everywhere; reduces the full score vector (traffic ∝ S) —
+  implemented for the paper's dataflow-comparison experiments.
+* :func:`mla_attention` — paper Alg. 4 (App. B.1): fused weight-absorbed
+  DeepSeek MLA decode.
+
+All three keep every intermediate inside the shard_map body — under jit
+the whole fused block lowers to one XLA computation with only the
+cluster collectives between stages, i.e. the TPU analogue of the paper's
+single fused kernel (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import primitives as prim
+from repro.core.primitives import Axis, SubAxis
+
+
+# ---------------------------------------------------------------------------
+# Cluster specification
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ClusterSpec:
+    """How the model axis is factored for the cluster-centric dataflow."""
+
+    heads: Axis                  # head-group sub-axis (size H)
+    cluster: Axis                # intra-head cluster sub-axis (size N)
+    fused_combine: bool = False  # beyond-paper single-tree flash merge
+    use_xla: bool = False        # XLA-native collectives (reference path)
+
+    @property
+    def n_cluster(self) -> int:
+        return prim._axis_size(self.cluster)
+
+    @property
+    def n_heads_axis(self) -> int:
+        return prim._axis_size(self.heads)
+
+    # -- collective dispatch (faithful tree vs XLA-native reference) -------
+    def reduce(self, x, op="sum"):
+        if self.use_xla and not isinstance(self.cluster, SubAxis):
+            return prim.cluster_reduce_xla(x, self.cluster, op)
+        return prim.cluster_reduce(x, self.cluster, op)
+
+    def gather_tiled(self, x, axis):
+        if self.use_xla and not isinstance(self.cluster, SubAxis):
+            return lax.all_gather(x, self.cluster, axis=axis, tiled=True)
+        return prim.cluster_gather_tiled(x, self.cluster, axis=axis)
+
+    def heads_reduce(self, x):
+        if self.use_xla and not isinstance(self.heads, SubAxis):
+            return lax.psum(x, self.heads)
+        return prim.cluster_reduce(x, self.heads, "sum")
+
+    def flash_combine(self, m, l, o):
+        return prim.cluster_flash_combine(m, l, o, self.cluster,
+                                          fused=self.fused_combine)
+
+
+# ---------------------------------------------------------------------------
+# KV cache block (per layer, per shard)
+# ---------------------------------------------------------------------------
+class KVBlock(NamedTuple):
+    """One rank's slice of a layer's KV cache.
+
+    ``k``/``v``: [S_blk, kv_heads_local, head_dim] — *sequence*-partitioned
+    across the cluster (SplitToken / MLA) or *head-dim*-partitioned
+    (SplitHead).  ``pos``: [S_blk] int32 global position of each slot
+    (−1 ⇒ empty); storing positions makes full, sliding-window and ring
+    caches uniform and keeps masking exact after wrap-around.
+    """
+
+    k: jax.Array
+    v: jax.Array
+    pos: jax.Array
+
+
+def init_kv_block(s_blk: int, kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> KVBlock:
+    return KVBlock(
+        k=jnp.zeros((s_blk, kv_heads, head_dim), dtype),
+        v=jnp.zeros((s_blk, kv_heads, head_dim), dtype),
+        pos=jnp.full((s_blk,), -1, jnp.int32),
+    )
+
+
+def _insert_kv(cache: KVBlock, k_new: jax.Array, v_new: jax.Array,
+               slot_owner: jax.Array, local_slot: jax.Array,
+               my_rank: jax.Array, position: jax.Array) -> KVBlock:
+    """Predicated insert: only the owning cluster rank writes the new KV.
+
+    ``k_new``/``v_new``: [kv_heads_local, head_dim] (batch handled by vmap
+    or by the batch=1-per-step decode convention of the caller).
+    """
+    own = (slot_owner == my_rank)
+    idx = jnp.clip(local_slot, 0, cache.k.shape[0] - 1)
+    cur_k = lax.dynamic_slice_in_dim(cache.k, idx, 1, axis=0)
+    cur_v = lax.dynamic_slice_in_dim(cache.v, idx, 1, axis=0)
+    cur_p = lax.dynamic_slice_in_dim(cache.pos, idx, 1, axis=0)
+    new_k = jnp.where(own, k_new[None].astype(cache.k.dtype), cur_k)
+    new_v = jnp.where(own, v_new[None].astype(cache.v.dtype), cur_v)
+    new_p = jnp.where(own, position[None].astype(jnp.int32), cur_p)
+    return KVBlock(
+        k=lax.dynamic_update_slice_in_dim(cache.k, new_k, idx, axis=0),
+        v=lax.dynamic_update_slice_in_dim(cache.v, new_v, idx, axis=0),
+        pos=lax.dynamic_update_slice_in_dim(cache.pos, new_p, idx, axis=0),
+    )
+
+
+def _apply_rope(x: jax.Array, position: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding for a single position. x: [..., head_dim]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = position.astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _softcap(x: jax.Array, cap: float) -> jax.Array:
+    return jnp.tanh(x / cap) * cap if cap > 0 else x
+
+
+# ---------------------------------------------------------------------------
+# Paper Alg. 3 — SplitToken dataflow (the main contribution)
+# ---------------------------------------------------------------------------
+class SplitTokenWeights(NamedTuple):
+    """Per-(heads-rank, cluster-rank) weight shards for Alg. 3.
+
+    ``wq``  [D, q_local, hd/N]  — head-dim segment of the Q projection
+    ``wk``  [D, kv_local, hd/N]
+    ``wv``  [D, kv_local, hd/N]
+    ``bq``/``bk``/``bv`` optional bias segments (Qwen-2), same trailing dims
+    ``wo``  [q_local*hd, D/N]   — output-dim segment of the O projection
+    """
+
+    wq: jax.Array
+    wk: jax.Array
+    wv: jax.Array
+    wo: jax.Array
+    bq: Optional[jax.Array] = None
+    bk: Optional[jax.Array] = None
+    bv: Optional[jax.Array] = None
+
+
+def split_token_attention(
+    spec: ClusterSpec,
+    x: jax.Array,                 # [B, D] full hidden states (paper: every
+                                  # block reads the entire input)
+    w: SplitTokenWeights,
+    cache: KVBlock,               # sequence-partitioned across the cluster
+    cache_len: jax.Array,         # tokens already in the cache (scalar int32)
+    *,
+    window: int = 0,              # >0 => sliding-window (ring) cache
+    attn_softcap: float = 0.0,
+    rope_theta: float = 10000.0,
+    scale: Optional[float] = None,
+) -> Tuple[jax.Array, KVBlock]:
+    """One decode step of fused QKV-Projection → Attention → Output-Projection.
+
+    Returns ``(o_segment [B, D/N], updated cache)``; the output is
+    partitioned over the cluster axis along the model dim (the paper's
+    atomicAdd tile).  Callers gather with ``spec.gather_tiled`` when the
+    next op needs the full hidden vector.
+    """
+    n = spec.n_cluster
+    b_rank = prim.axis_index(spec.cluster)
+    B = x.shape[0]
+    q_local, hd_n = w.wq.shape[1], w.wq.shape[2]
+    kv_local = w.wk.shape[1]
+    hd = hd_n * n
+    qpk = q_local // kv_local
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    # (1) Segment results of QKV Projection (paper Alg. 3 line 2).
+    q_seg = jnp.einsum("bd,dqh->bqh", x, w.wq)
+    k_seg = jnp.einsum("bd,dkh->bkh", x, w.wk)
+    v_seg = jnp.einsum("bd,dkh->bkh", x, w.wv)
+    if w.bq is not None:
+        q_seg = q_seg + w.bq
+        k_seg = k_seg + w.bk
+        v_seg = v_seg + w.bv
+
+    # (2) ClusterGather the complete q/k/v (line 3).
+    q = spec.gather_tiled(q_seg, axis=2)       # [B, q_local, hd]
+    k = spec.gather_tiled(k_seg, axis=2)       # [B, kv_local, hd]
+    v = spec.gather_tiled(v_seg, axis=2)
+
+    # RoPE needs the complete head vector (rotates across the halves), so it
+    # runs post-gather; position = cache_len.
+    q = _apply_rope(q, cache_len, rope_theta)
+    k = _apply_rope(k, cache_len, rope_theta)
+
+    # (3) Append new KV to the owning rank's cache block.  Sliding-window
+    # layers use a ring cache of exactly `window` slots (sharded over the
+    # cluster), so the slot index wraps.
+    s_blk = cache.k.shape[0]
+    slot = cache_len % (n * s_blk) if window > 0 else cache_len
+    owner, local_slot = slot // s_blk, slot % s_blk
+    # decode convention: one new token per sequence; B folded into kv head
+    # dim via vmap at the serving layer when B > 1 shares a cache.  Here the
+    # cache carries B in its kv_heads axis layout: [S, B*kv_local, hd].
+    cache = _insert_kv(
+        cache,
+        k.reshape(B * kv_local, hd), v.reshape(B * kv_local, hd),
+        owner, local_slot, b_rank, cache_len)
+
+    # (4) FlashDecoding partial over the local sequence block (line 4).
+    # Scores/outputs accumulate in f32 via preferred_element_type — the
+    # bf16 cache is NEVER materialized as an f32 copy (§Perf iter 1: this
+    # halves decode HBM bytes vs casting the cache).
+    kc = cache.k.reshape(s_blk, B, kv_local, hd)
+    vc = cache.v.reshape(s_blk, B, kv_local, hd)
+    qf = q.reshape(B, kv_local, qpk, hd).astype(kc.dtype)
+    s = jnp.einsum("bkqh,sbkh->bkqs", qf, kc,
+                   preferred_element_type=jnp.float32) * scale
+    s = _softcap(s, attn_softcap)
+    valid = cache.pos >= 0
+    valid &= cache.pos <= cache_len
+    if window > 0:
+        valid &= cache.pos > cache_len - window
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1)                                  # [B,kv,q]
+    # guard: ranks whose block is entirely masked contribute exp(-inf)=0
+    m_safe = jnp.where(jnp.isfinite(m), m, -1e30)
+    p = jnp.exp(s - m_safe[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkqs,sbkh->bkqh", p.astype(vc.dtype), vc,
+                   preferred_element_type=jnp.float32)       # unnormalized
+
+    # (5)–(7) ClusterReduce softmax stats, rescale, ClusterReduce outputs.
+    _, l_g, o_g = spec.flash_combine(m_safe, l, o)
+    att = (o_g / jnp.maximum(l_g[..., None], 1e-30))
+    att = att.reshape(B, q_local * hd).astype(x.dtype)
+
+    # (8) Output-Projection tile + cross-cluster (heads) reduction — the
+    # paper writes with atomicAdd; on TPU this is the heads-axis tree sum.
+    o_seg = att @ w.wo                                        # [B, D/N]
+    o_seg = spec.heads_reduce(o_seg)
+    return o_seg, cache
+
+
+# ---------------------------------------------------------------------------
+# Paper Alg. 5 — SplitHead dataflow (App. B.2, comparison variant)
+# ---------------------------------------------------------------------------
+class SplitHeadWeights(NamedTuple):
+    """``wq/wk/wv`` [D, q|kv_local, hd/N]; ``wo`` [q_local*hd/N, D]."""
+
+    wq: jax.Array
+    wk: jax.Array
+    wv: jax.Array
+    wo: jax.Array
+
+
+def split_head_attention(
+    spec: ClusterSpec,
+    x: jax.Array,                 # [B, D]
+    w: SplitHeadWeights,
+    cache: KVBlock,               # HEAD-DIM-partitioned: [S, B*kv_local, hd/N]
+    cache_len: jax.Array,
+    *,
+    rope_theta: float = 10000.0,
+    scale: Optional[float] = None,
+) -> Tuple[jax.Array, KVBlock]:
+    """Alg. 5: partition the head dim in all three stages; ClusterReduce the
+    full score matrix (traffic ∝ S — the paper shows this loses at long S).
+
+    NOTE: RoPE with a split head dim would rotate across ranks; we follow
+    the paper (no RoPE in Alg. 5 exposition) but emulate positionality by
+    rotating *within* each segment — documented deviation, exercised only in
+    the dataflow-comparison benchmark, not in production serving.
+    """
+    n = spec.n_cluster
+    b_rank = prim.axis_index(spec.cluster)
+    B = x.shape[0]
+    q_local, hd_n = w.wq.shape[1], w.wq.shape[2]
+    kv_local = w.wk.shape[1]
+    qpk = q_local // kv_local
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd_n * n)
+
+    # (2) QKV segments stay in "registers" (no gather — Alg. 5 line 2).
+    q_seg = jnp.einsum("bd,dqh->bqh", x, w.wq)
+    k_seg = jnp.einsum("bd,dkh->bkh", x, w.wk)
+    v_seg = jnp.einsum("bd,dkh->bkh", x, w.wv)
+    q_seg = _apply_rope(q_seg, cache_len, rope_theta)
+    k_seg = _apply_rope(k_seg, cache_len, rope_theta)
+
+    # (3) Append to local (head-dim-sharded) cache: every rank owns slot.
+    s_max = cache.k.shape[0]
+    cache = _insert_kv(cache, k_seg.reshape(B * kv_local, hd_n),
+                       v_seg.reshape(B * kv_local, hd_n),
+                       b_rank, cache_len, b_rank, cache_len)
+
+    kc = cache.k.reshape(s_max, B, kv_local, hd_n).astype(jnp.float32)
+    vc = cache.v.reshape(s_max, B, kv_local, hd_n).astype(jnp.float32)
+    qf = q_seg.reshape(B, kv_local, qpk, hd_n).astype(jnp.float32)
+
+    # Partial scores over the FULL sequence, then ClusterReduce (Alg. 5 l.3).
+    s_part = jnp.einsum("bkqh,sbkh->bkqs", qf, kc) * scale
+    s_full = spec.reduce(s_part, "sum")                       # traffic ∝ S
+    valid = (cache.pos >= 0) & (cache.pos <= cache_len)
+    s_full = jnp.where(valid[None, None, None, :], s_full, -jnp.inf)
+    p = jax.nn.softmax(s_full, axis=-1)
+    a_seg = jnp.einsum("bkqs,sbkh->bkqh", p, vc)              # [B,kv,q,hd/N]
+    a_seg = a_seg.reshape(B, q_local * hd_n).astype(x.dtype)
+
+    # (4)–(6) partial Output-Projection over full D, ClusterReduce + heads.
+    o_part = a_seg @ w.wo                                     # [B, D]
+    o_full = spec.reduce(o_part, "sum")
+    o_full = spec.heads_reduce(o_full)
+    return o_full, cache
+
+
+# ---------------------------------------------------------------------------
+# Paper Alg. 4 — fused weight-absorbed MLA dataflow (App. B.1)
+# ---------------------------------------------------------------------------
+class MLAWeights(NamedTuple):
+    """Weight shards for the fused MLA decode (DeepSeek-V2).
+
+    ``wq``    [D, q_local, (nope+rope)/N] — Q-Projection head-dim segment
+    ``wdkv``  [D, (l+rope)/N]             — Down-Projection (latent) segment
+    ``wuk``   [q_local, nope, l/N]        — K-up, absorbed into Q (out-seg)
+    ``wuv``   [q_local, l/N, v]           — V-up, row (l) segment
+    ``wo``    [q_local*v, D/N]            — Output-Projection segment
+    """
+
+    wq: jax.Array
+    wdkv: jax.Array
+    wuk: jax.Array
+    wuv: jax.Array
+    wo: jax.Array
+
+
+def mla_attention(
+    spec: ClusterSpec,
+    x: jax.Array,                 # [B, D]
+    w: MLAWeights,
+    cache: KVBlock,               # latent cache: k=[S_blk, B, l+rope], v unused
+    cache_len: jax.Array,
+    *,
+    nope_dim: int,
+    rope_dim: int,
+    rope_theta: float = 10000.0,
+) -> Tuple[jax.Array, KVBlock]:
+    """Fused MLA decode per paper Alg. 4 (weight-absorbed, Fig. 14 right).
+
+    Schedule (faithful): 3 ClusterGathers (q segments, latent-kv segments,
+    up-projected q) + 3 ClusterReduces (flash stats/outputs in latent space,
+    value-up partial sums, output tiles via the heads reduction).
+    """
+    n = spec.n_cluster
+    b_rank = prim.axis_index(spec.cluster)
+    B = x.shape[0]
+    q_local = w.wq.shape[1]
+    l_n = w.wuk.shape[2]
+    l_rank = l_n * n
+    v_dim = w.wuv.shape[2]
+    scale = 1.0 / math.sqrt(nope_dim + rope_dim)
+
+    # (2)–(4): segment Q and latent-KV projections, ClusterGather both.
+    q_seg = jnp.einsum("bd,dqh->bqh", x, w.wq)         # [B,q,(nope+rope)/N]
+    c_seg = x @ w.wdkv                                  # [B,(l+rope)/N]
+    q_full = spec.gather_tiled(q_seg, axis=2)           # [B,q,nope+rope]
+    c_full = spec.gather_tiled(c_seg, axis=1)           # [B,l+rope]
+    q_nope, q_rope = q_full[..., :nope_dim], q_full[..., nope_dim:]
+    c_lat, c_rope = c_full[..., :l_rank], c_full[..., l_rank:]
+
+    # (5)–(6): Up-Projection segments (weight-absorbed q→latent), gather Q.
+    q_lat_seg = jnp.einsum("bqn,qnl->bql", q_nope, w.wuk)   # [B,q,l/N]
+    q_lat = spec.gather_tiled(q_lat_seg, axis=2)            # [B,q,l]
+
+    q_rope = _apply_rope(q_rope, cache_len, rope_theta)
+    c_rope = _apply_rope(c_rope, cache_len, rope_theta)
+
+    # Append latent+rope entry to the owning rank's cache block.
+    s_blk = cache.k.shape[0]
+    owner, local_slot = cache_len // s_blk, cache_len % s_blk
+    entry = jnp.concatenate([c_lat, c_rope], axis=-1)       # [B, l+rope]
+    cache = _insert_kv(cache, entry, entry[:, :1],           # v-side unused
+                       owner, local_slot, b_rank, cache_len)
+
+    # (7): FlashDecoding partial in latent space over the local block.
+    cc = cache.k.reshape(s_blk, B, l_rank + rope_dim).astype(jnp.float32)
+    cl, cr = cc[..., :l_rank], cc[..., l_rank:]
+    s = (jnp.einsum("bql,sbl->bqs", q_lat.astype(jnp.float32), cl)
+         + jnp.einsum("bqr,sbr->bqs", q_rope.astype(jnp.float32), cr)) * scale
+    valid = (cache.pos >= 0) & (cache.pos <= cache_len)
+    s = jnp.where(valid[None, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1)
+    m_safe = jnp.where(jnp.isfinite(m), m, -1e30)
+    p = jnp.exp(s - m_safe[..., None])
+    l_stat = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bqs,sbl->bql", p, cl)                   # latent-space A_b
+
+    # (8)–(10): ClusterReduce stats + outputs (online-softmax rescale).
+    _, l_g, o_g = spec.flash_combine(m_safe, l_stat, o)
+    a_lat = o_g / jnp.maximum(l_g[..., None], 1e-30)        # [B,q,l]
+
+    # (11)–(12): value Up-Projection partial sums over l segments.
+    a_seg = lax.dynamic_slice_in_dim(a_lat, b_rank * l_n, l_n, axis=2)
+    o_head_part = jnp.einsum("bql,qlv->bqv", a_seg, w.wuv)
+    o_head = spec.reduce(o_head_part, "sum")                # [B,q,v]
+
+    # (13): Output-Projection tile + heads reduction (atomicAdd analogue).
+    o_seg = o_head.reshape(B, q_local * v_dim).astype(x.dtype) @ w.wo
+    o_seg = spec.heads_reduce(o_seg)                        # [B, D/N]
+    return o_seg, cache
+
+
+# ---------------------------------------------------------------------------
+# DSMEM-traffic totals per dataflow (paper §3.2 + App. B) — bytes
+# ---------------------------------------------------------------------------
+def traffic_split_token(head_dim: int, model_dim: int, n: int,
+                        bytes_per_el: int = 2, batch: int = 1) -> float:
+    """Alg. 3 total: Reduce(3h… — paper text) — we follow the corrected
+    App. B formula ``Traffic_Reduce(H, N) + Traffic_Gather(3h, N)`` with
+    h = head_dim/N segments and H = head_dim (the per-head attention output
+    reduced across the cluster)."""
+    h_seg = head_dim / n * 3 * bytes_per_el * batch
+    red = head_dim * bytes_per_el * batch
+    return prim.traffic_gather(h_seg, n) + prim.traffic_reduce(red, n)
+
+
+def traffic_split_head(seq_len: int, model_dim: int, n: int,
+                       bytes_per_el: int = 4, batch: int = 1) -> float:
+    """Alg. 5 total: ``Traffic_Reduce(S, N) + Traffic_Reduce(D, N)``."""
+    return (prim.traffic_reduce(seq_len * bytes_per_el * batch, n)
+            + prim.traffic_reduce(model_dim * bytes_per_el * batch, n))
+
+
+def traffic_mla(head_dim: int, l_rank: int, total_head_dim: int, n: int,
+                bytes_per_el: int = 2, batch: int = 1) -> float:
+    """Alg. 4 total: ``Gather(h) + 2·Gather(l) + Reduce(l) + Reduce(H)``."""
+    b = bytes_per_el * batch
+    return (prim.traffic_gather(head_dim / n * b, n)
+            + 2 * prim.traffic_gather(l_rank / n * b, n)
+            + prim.traffic_reduce(l_rank * b, n)
+            + prim.traffic_reduce(total_head_dim * b, n))

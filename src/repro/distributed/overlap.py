@@ -1,0 +1,46 @@
+"""Compute/communication overlap: ring all-gather ⟂ matmul.
+
+``overlap_ag_matmul`` computes ``all_gather(x, axis) @ w`` without ever
+materializing the gathered operand: a ``lax.fori_loop`` circulates shards
+around the ring with ``ppermute`` while multiplying the *previously
+received* shard — on TPU the ppermute DMA of chunk k+1 overlaps the MXU
+work on chunk k (the classic collective-matmul decomposition, Wang et al.
+ASPLOS'23).  Used by the TP FFN when ``overlap=True`` (§Perf hillclimb).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import primitives as prim
+from repro.core.primitives import Axis
+
+
+def overlap_ag_matmul(x: jax.Array, w: jax.Array, axis: Axis) -> jax.Array:
+    """x: [B, D_loc] (sharded on dim 1 over ``axis``); w: [D, F_any].
+
+    Returns ``concat_gather(x) @ w`` = [B, F_any] computed as a ring of
+    N partial matmuls overlapped with N−1 ppermutes.
+    """
+    n = prim._axis_size(axis)
+    if n == 1:
+        return x @ w
+    phys = prim._axis_name(axis)
+    my = prim.axis_index(axis)
+    d_loc = x.shape[1]
+    perm = prim._ring_perm(axis, 1)
+
+    def body(i, carry):
+        buf, acc = carry
+        # shard currently held = the one originally owned by (my - i) mod n
+        src = (my - i) % n
+        w_slice = lax.dynamic_slice_in_dim(w, src * d_loc, d_loc, axis=0)
+        acc = acc + buf @ w_slice
+        buf = lax.ppermute(buf, phys, perm)     # send on, receive next
+        return buf, acc
+
+    acc0 = jnp.zeros((x.shape[0], w.shape[1]),
+                     jnp.promote_types(x.dtype, w.dtype))
+    _, acc = lax.fori_loop(0, n, body, (x, acc0))
+    return acc.astype(x.dtype)

@@ -1,0 +1,80 @@
+"""GPipe-style pipeline parallelism over the ``pod`` axis.
+
+Cross-pod links (DCN) are an order of magnitude slower than intra-pod ICI,
+so the pod axis is better used as a *pipeline* dimension than as plain DP:
+each pod owns a contiguous span of layers and only one boundary activation
+[µB, S, D] crosses the DCN per microbatch per direction.
+
+Implementation: the classic shifted-microbatch loop inside ``shard_map``
+— ``n_micro + n_stages − 1`` ticks; at each tick stage s processes the
+microbatch that stage s−1 finished last tick, received via
+``ppermute`` over the pod axis.  Backward runs by autodiff through the
+loop (GPipe schedule: full forward, then full backward — activations for
+the backward are rematerialized per microbatch by ``jax.checkpoint``).
+
+This module provides the *forward* pipeline transform; the train step uses
+it through ``pipeline_loss`` which composes it with the loss head on the
+last stage and returns a scalar every rank agrees on.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def pipeline_forward(stage_fn: Callable[[Any, jax.Array], jax.Array],
+                     stage_params: Any,
+                     x_micro: jax.Array,          # [n_micro, µB, S, D]
+                     axis: str) -> jax.Array:
+    """Run microbatches through ``n_stages`` = axis size pipeline stages.
+
+    Every rank holds ITS stage's params (``stage_params``) and the full
+    stack of microbatch inputs (only stage 0 actually consumes them).
+    Returns the outputs for all microbatches, valid on the LAST stage
+    (other ranks hold garbage of the right shape — callers mask).
+    """
+    n_stages = lax.axis_size(axis)
+    stage = lax.axis_index(axis)
+    n_micro = x_micro.shape[0]
+    ticks = n_micro + n_stages - 1
+    fwd_perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def tick(t, carry):
+        inflight, outputs = carry
+        # which microbatch does THIS stage work on at tick t?
+        mb = t - stage
+        live = (mb >= 0) & (mb < n_micro)
+        # stage 0 reads a fresh microbatch; others use the received one
+        fresh = x_micro[jnp.clip(mb, 0, n_micro - 1)]
+        inp = jnp.where(stage == 0, fresh, inflight)
+        out = stage_fn(stage_params, inp)
+        out = jnp.where(live, out, inflight)
+        # last stage records its finished microbatch
+        outputs = lax.dynamic_update_index_in_dim(
+            outputs,
+            jnp.where(live & (stage == n_stages - 1), out,
+                      outputs[jnp.clip(mb, 0, n_micro - 1)]),
+            jnp.clip(mb, 0, n_micro - 1), axis=0)
+        # ship to the next stage (ring; the wraparound edge is ignored)
+        inflight = lax.ppermute(out, axis, fwd_perm)
+        return inflight, outputs
+
+    inflight0 = jnp.zeros_like(x_micro[0])
+    outputs0 = jnp.zeros_like(x_micro)
+    _, outputs = lax.fori_loop(0, ticks, tick, (inflight0, outputs0))
+    return outputs
+
+
+def split_stages(kinds_len: int, n_stages: int) -> list:
+    """Contiguous layer spans per stage (balanced)."""
+    base = kinds_len // n_stages
+    rem = kinds_len % n_stages
+    spans, start = [], 0
+    for s in range(n_stages):
+        n = base + (1 if s < rem else 0)
+        spans.append((start, start + n))
+        start += n
+    return spans

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels (validated with interpret=True on CPU).
+
+Each subpackage: ``<name>.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit wrapper), ``ref.py`` (pure-jnp oracle).
+"""
+from repro.kernels.fused_decode.ops import fused_decode, rope_at  # noqa: F401
+from repro.kernels.flash_decode.ops import flash_decode  # noqa: F401
+from repro.kernels.fused_mla_decode.ops import fused_mla_decode  # noqa: F401
+from repro.kernels.rglru_scan.ops import rglru_scan  # noqa: F401
+from repro.kernels.rwkv6_scan.ops import rwkv6_scan  # noqa: F401

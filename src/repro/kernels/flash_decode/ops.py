@@ -1,0 +1,20 @@
+"""Jitted public wrapper for the FlashDecoding baseline kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_decode.flash_decode import flash_decode_attention
+from repro.kernels.flash_decode.ref import flash_decode_attention_ref
+
+
+@partial(jax.jit, static_argnames=("scale", "attn_softcap", "window",
+                                   "block_s", "interpret", "use_ref"))
+def flash_decode(q, k_cache, v_cache, cache_len, *, scale=None,
+                 attn_softcap=0.0, window=0, block_s=512, interpret=False,
+                 use_ref=False):
+    fn = flash_decode_attention_ref if use_ref else flash_decode_attention
+    return fn(q, k_cache, v_cache, cache_len, scale=scale,
+              attn_softcap=attn_softcap, window=window, block_s=block_s,
+              interpret=interpret)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the FlashDecoding baseline kernel."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_decode_attention_ref(q, k_cache, v_cache, cache_len, *,
+                               scale: Optional[float] = None,
+                               attn_softcap: float = 0.0, window: int = 0,
+                               **_):
+    B, q_loc, hd = q.shape
+    S, kv_loc, _ = k_cache.shape
+    qpk = q_loc // kv_loc
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.astype(jnp.float32).reshape(B, kv_loc, qpk, hd)
+    s = jnp.einsum("bkqh,skh->bkqs", qg, k_cache.astype(jnp.float32)) * scale
+    if attn_softcap > 0:
+        s = jnp.tanh(s / attn_softcap) * attn_softcap
+    pos = jnp.arange(S)
+    valid = pos < cache_len
+    if window > 0:
+        valid &= pos > cache_len - window
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkqs,skh->bkqh", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, q_loc, hd).astype(q.dtype)

@@ -1,0 +1,245 @@
+"""Fused QKV-Projection + FlashDecoding-Attention + Output-Projection
+decode kernel — the TPU realization of the paper's expanded fusion scope
+(DESIGN.md §2, Level 1).
+
+One ``pallas_call`` per decode layer:
+
+* grid = (1 + S_blocks,) — sequential on the TensorCore; grid step 0 is the
+  *projection phase* (q/k/v of the new token computed from the resident
+  hidden states and weights, RoPE applied, kept in VMEM scratch — the
+  analogue of the cluster's ClusterGather'd q/k/v in SMEM); steps 1..S are
+  the *attention phase* (FlashDecoding partial over one KV-cache block per
+  step, online-softmax accumulators carried in VMEM scratch — the
+  sequential analogue of ClusterReduce over concurrent blocks); the last
+  step is the *output phase* (rescale + Output-Projection, one HBM write).
+* HBM traffic = weights + KV cache + x + o (+ the k/v append, which the
+  paper also pays) — no intermediate materialization, exactly the
+  SplitToken property.
+* blocks whose entire range is beyond ``cache_len`` are skipped
+  (``@pl.when``) — decode caches are usually partially filled.
+
+Two modes:
+* ``fuse_out=True``  — returns ``o [B, D_out]`` (O-projection fused);
+  for single-chip-per-head-group layouts (cluster == 1).
+* ``fuse_out=False`` — returns unnormalized ``(acc, m, l)`` partials for
+  the cross-chip ClusterReduce combine (DESIGN.md §2, Level 2); the
+  O-projection then runs after the combine, as in paper Alg. 3 lines 5–8.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(cache_len_ref,                       # scalar prefetch (SMEM)
+            x_ref, wqkv_ref, bqkv_ref, wo_ref, cos_ref, sin_ref,
+            k_blk_ref, v_blk_ref,
+            o_ref, k_new_ref, v_new_ref, m_out_ref, l_out_ref,
+            q_s, k_s, v_s, m_s, l_s, acc_s,
+            *, blk_s: int, n_blocks: int, q_loc: int, kv_loc: int,
+            hd: int, scale: float, cap: float, window: int,
+            fuse_out: bool):
+    j = pl.program_id(0)
+    cache_len = cache_len_ref[0]
+    B = x_ref.shape[0]
+    qpk = q_loc // kv_loc
+
+    # ---------------- phase 0: fused QKV projection --------------------
+    @pl.when(j == 0)
+    def _proj():
+        x = x_ref[...].astype(jnp.float32)               # [B, D]
+        w = wqkv_ref[...].astype(jnp.float32)            # [D, P]
+        qkv = jax.lax.dot(x, w, precision=lax.Precision.DEFAULT)
+        qkv += bqkv_ref[...].astype(jnp.float32)         # [1, P] bias
+        q = qkv[:, : q_loc * hd].reshape(B, q_loc, hd)
+        k = qkv[:, q_loc * hd: (q_loc + kv_loc) * hd].reshape(B, kv_loc, hd)
+        v = qkv[:, (q_loc + kv_loc) * hd:].reshape(B, kv_loc, hd)
+        # RoPE at position cache_len (cos/sin precomputed outside)
+        cos = cos_ref[...].astype(jnp.float32)           # [1, hd//2]
+        sin = sin_ref[...].astype(jnp.float32)
+        half = hd // 2
+
+        def rope(t):
+            t1, t2 = t[..., :half], t[..., half:]
+            return jnp.concatenate([t1 * cos - t2 * sin,
+                                    t2 * cos + t1 * sin], axis=-1)
+
+        q_s[...] = rope(q)
+        k_s[...] = rope(k)
+        v_s[...] = v
+        k_new_ref[...] = rope(k).astype(k_new_ref.dtype)
+        v_new_ref[...] = v.astype(v_new_ref.dtype)
+        m_s[...] = jnp.full_like(m_s[...], -1e30)
+        l_s[...] = jnp.zeros_like(l_s[...])
+        acc_s[...] = jnp.zeros_like(acc_s[...])
+
+    # ---------------- phases 1..n: FlashDecoding over cache blocks -----
+    blk_idx = j - 1
+    blk_start = blk_idx * blk_s
+    in_range = (j > 0) & (j <= n_blocks) & (blk_start < cache_len)
+    lo = cache_len - window if window > 0 else -1
+    live = in_range & (blk_start + blk_s > lo)
+
+    @pl.when(live)
+    def _attend():
+        q = q_s[...].reshape(B, kv_loc, qpk, hd)         # f32 scratch
+        kb = k_blk_ref[...].astype(jnp.float32)          # [blk, kv_loc, hd]
+        vb = v_blk_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q.reshape(B * kv_loc * qpk, hd)
+             .reshape(B, kv_loc, qpk, hd),
+            kb, (((3,), (2,)), ((1,), (1,))),            # contract hd, batch kv
+        )                                                # [kv, B, qpk, blk]
+        s = jnp.moveaxis(s, 0, 1) * scale                # [B, kv, qpk, blk]
+        if cap > 0:
+            s = jnp.tanh(s / cap) * cap
+        pos = blk_start + lax.broadcasted_iota(jnp.int32, (1, 1, 1, blk_s), 3)
+        valid = pos < cache_len
+        if window > 0:
+            valid &= pos > cache_len - window
+        s = jnp.where(valid, s, -1e30)
+        m_prev, l_prev = m_s[...], l_s[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(valid, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        m_s[...] = m_new
+        l_s[...] = l_prev * corr + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p, vb, (((3,), (0,)), ((1,), (1,))),         # [B,kv,qpk,blk]x[blk,kv,hd]
+        )                                                # -> [kv, B, qpk, hd]
+        pv = jnp.moveaxis(pv, 0, 1)
+        acc_s[...] = acc_s[...] * corr[..., None] + pv
+
+    # ---------------- final phase: new-token KV + output ---------------
+    @pl.when(j == n_blocks + 1)
+    def _finalize():
+        # append the new token's (k, v) contribution from scratch
+        q = q_s[...].reshape(B, kv_loc, qpk, hd)
+        k_new = k_s[...]                                  # [B, kv_loc, hd]
+        v_new = v_s[...]
+        s = jnp.einsum("bkqh,bkh->bkq", q, k_new) * scale
+        if cap > 0:
+            s = jnp.tanh(s / cap) * cap
+        m_prev, l_prev = m_s[...], l_s[...]
+        m_new = jnp.maximum(m_prev, s)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_fin = l_prev * corr + p
+        acc = acc_s[...] * corr[..., None] \
+            + p[..., None] * v_new[:, :, None, :]
+        m_s[...] = m_new
+        l_s[...] = l_fin
+        if fuse_out:
+            att = (acc / l_fin[..., None]).reshape(B, q_loc * hd)
+            wo = wo_ref[...].astype(jnp.float32)          # [q_loc*hd, D_out]
+            o_ref[...] = jax.lax.dot(att, wo).astype(o_ref.dtype)
+        else:
+            o_ref[...] = acc.reshape(B, q_loc, hd).astype(o_ref.dtype)
+        m_out_ref[...] = m_s[...].reshape(B, q_loc)
+        l_out_ref[...] = l_fin.reshape(B, q_loc)
+
+
+def fused_decode_attention(
+    x: jax.Array,                 # [B, D]
+    wqkv: jax.Array,              # [D, (q_loc + 2 kv_loc) * hd]
+    bqkv: Optional[jax.Array],    # [(q_loc + 2 kv_loc) * hd] or None
+    wo: jax.Array,                # [q_loc * hd, D_out]
+    k_cache: jax.Array,           # [S, kv_loc, hd]
+    v_cache: jax.Array,           # [S, kv_loc, hd]
+    cache_len: jax.Array,         # scalar int32: tokens already cached
+    cos: jax.Array,               # [hd//2] RoPE at position cache_len
+    sin: jax.Array,
+    *,
+    q_heads: int,
+    kv_heads: int,
+    scale: Optional[float] = None,
+    attn_softcap: float = 0.0,
+    window: int = 0,
+    block_s: int = 512,
+    fuse_out: bool = True,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Returns ``(o, k_new, v_new, m, l)``.
+
+    ``fuse_out=True``: o = [B, D_out] (final).  ``fuse_out=False``:
+    o = [B, q_loc, hd] *unnormalized* accumulator; combine across chips
+    with ``cluster_flash_combine`` and project afterwards.
+    """
+    B, D = x.shape
+    S, kv_loc, hd = k_cache.shape
+    q_loc = q_heads
+    assert kv_loc == kv_heads
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    blk_s = min(block_s, S)
+    assert S % blk_s == 0, (S, blk_s)
+    n_blocks = S // blk_s
+    d_out = wo.shape[1]
+    if bqkv is None:
+        bqkv = jnp.zeros((wqkv.shape[1],), wqkv.dtype)
+
+    kernel = functools.partial(
+        _kernel, blk_s=blk_s, n_blocks=n_blocks, q_loc=q_loc, kv_loc=kv_loc,
+        hd=hd, scale=scale, cap=attn_softcap, window=window,
+        fuse_out=fuse_out)
+
+    grid = (n_blocks + 2,)
+    o_shape = (B, d_out) if fuse_out else (B, q_loc, hd)
+
+    def cache_map(j, *_):
+        b = jnp.clip(j - 1, 0, n_blocks - 1)
+        return (b, 0, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((B, D), lambda j, *_: (0, 0)),                 # x
+                pl.BlockSpec(wqkv.shape, lambda j, *_: (0, 0)),             # wqkv
+                pl.BlockSpec((1, bqkv.shape[0]), lambda j, *_: (0, 0)),     # bqkv
+                pl.BlockSpec(wo.shape, lambda j, *_: (0, 0)),               # wo
+                pl.BlockSpec((1, hd // 2), lambda j, *_: (0, 0)),           # cos
+                pl.BlockSpec((1, hd // 2), lambda j, *_: (0, 0)),           # sin
+                pl.BlockSpec((blk_s, kv_loc, hd), cache_map),           # k
+                pl.BlockSpec((blk_s, kv_loc, hd), cache_map),           # v
+            ],
+            out_specs=[
+                pl.BlockSpec(o_shape, lambda j, *_: (0,) * len(o_shape)),
+                pl.BlockSpec((B, kv_loc, hd), lambda j, *_: (0, 0, 0)),
+                pl.BlockSpec((B, kv_loc, hd), lambda j, *_: (0, 0, 0)),
+                pl.BlockSpec((B, q_loc), lambda j, *_: (0, 0)),
+                pl.BlockSpec((B, q_loc), lambda j, *_: (0, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((B, q_loc, hd), jnp.float32),    # q
+                pltpu.VMEM((B, kv_loc, hd), jnp.float32),   # k_new
+                pltpu.VMEM((B, kv_loc, hd), jnp.float32),   # v_new
+                pltpu.VMEM((B, kv_loc, q_loc // kv_loc), jnp.float32),  # m
+                pltpu.VMEM((B, kv_loc, q_loc // kv_loc), jnp.float32),  # l
+                pltpu.VMEM((B, kv_loc, q_loc // kv_loc, hd), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct(o_shape, x.dtype if fuse_out
+                                 else jnp.float32),
+            jax.ShapeDtypeStruct((B, kv_loc, hd), k_cache.dtype),
+            jax.ShapeDtypeStruct((B, kv_loc, hd), v_cache.dtype),
+            jax.ShapeDtypeStruct((B, q_loc), jnp.float32),
+            jax.ShapeDtypeStruct((B, q_loc), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(jnp.asarray(cache_len, jnp.int32).reshape(1),
+      x, wqkv, bqkv.reshape(1, -1), wo,
+      cos.reshape(1, -1), sin.reshape(1, -1), k_cache, v_cache)
+    return tuple(out)

@@ -1,0 +1,32 @@
+"""Jitted public wrapper for the fused decode kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_decode.fused_decode import fused_decode_attention
+from repro.kernels.fused_decode.ref import fused_decode_attention_ref
+
+
+@partial(jax.jit, static_argnames=("q_heads", "kv_heads", "scale",
+                                   "attn_softcap", "window", "block_s",
+                                   "fuse_out", "interpret", "use_ref"))
+def fused_decode(x, wqkv, bqkv, wo, k_cache, v_cache, cache_len, cos, sin,
+                 *, q_heads, kv_heads, scale=None, attn_softcap=0.0,
+                 window=0, block_s=512, fuse_out=True, interpret=False,
+                 use_ref=False):
+    fn = fused_decode_attention_ref if use_ref else fused_decode_attention
+    return fn(x, wqkv, bqkv, wo, k_cache, v_cache, cache_len, cos, sin,
+              q_heads=q_heads, kv_heads=kv_heads, scale=scale,
+              attn_softcap=attn_softcap, window=window, block_s=block_s,
+              fuse_out=fuse_out, interpret=interpret)
+
+
+def rope_at(position, head_dim: int, theta: float = 10000.0):
+    """cos/sin vectors for a single decode position."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = jnp.asarray(position, jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)

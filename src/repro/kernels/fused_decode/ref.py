@@ -1,0 +1,67 @@
+"""Pure-jnp oracle for the fused decode kernel."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_decode_attention_ref(
+    x: jax.Array, wqkv: jax.Array, bqkv: Optional[jax.Array],
+    wo: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+    cache_len, cos: jax.Array, sin: jax.Array, *,
+    q_heads: int, kv_heads: int, scale: Optional[float] = None,
+    attn_softcap: float = 0.0, window: int = 0, fuse_out: bool = True,
+    **_,
+) -> Tuple[jax.Array, ...]:
+    B, D = x.shape
+    S, kv_loc, hd = k_cache.shape
+    q_loc = q_heads
+    qpk = q_loc // kv_loc
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    qkv = x.astype(jnp.float32) @ wqkv.astype(jnp.float32)
+    if bqkv is not None:
+        qkv = qkv + bqkv.astype(jnp.float32)
+    q = qkv[:, : q_loc * hd].reshape(B, q_loc, hd)
+    k_new = qkv[:, q_loc * hd: (q_loc + kv_loc) * hd].reshape(B, kv_loc, hd)
+    v_new = qkv[:, (q_loc + kv_loc) * hd:].reshape(B, kv_loc, hd)
+
+    half = hd // 2
+    c, s_ = cos.astype(jnp.float32), sin.astype(jnp.float32)
+
+    def rope(t):
+        t1, t2 = t[..., :half], t[..., half:]
+        return jnp.concatenate([t1 * c - t2 * s_, t2 * c + t1 * s_], -1)
+
+    q, k_new = rope(q), rope(k_new)
+
+    # full sequence = cache[:cache_len] ++ new token
+    kc = k_cache.astype(jnp.float32)
+    qg = q.reshape(B, kv_loc, qpk, hd)
+    s_cache = jnp.einsum("bkqh,skh->bkqs", qg, kc) * scale
+    s_self = jnp.einsum("bkqh,bkh->bkq", qg, k_new) * scale
+    if attn_softcap > 0:
+        s_cache = jnp.tanh(s_cache / attn_softcap) * attn_softcap
+        s_self = jnp.tanh(s_self / attn_softcap) * attn_softcap
+    pos = jnp.arange(S)
+    valid = pos < cache_len
+    if window > 0:
+        valid &= pos > cache_len - window
+    s_cache = jnp.where(valid[None, None, None, :], s_cache, -jnp.inf)
+    s_all = jnp.concatenate([s_cache, s_self[..., None]], axis=-1)
+    m = jnp.max(s_all, axis=-1)
+    p = jnp.exp(s_all - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    v_all = v_cache.astype(jnp.float32)
+    acc = jnp.einsum("bkqs,skh->bkqh", p[..., :-1], v_all) \
+        + p[..., -1][..., None] * v_new.astype(jnp.float32)[:, :, None, :]
+    if fuse_out:
+        att = (acc / l[..., None]).reshape(B, q_loc * hd)
+        o = (att @ wo.astype(jnp.float32)).astype(x.dtype)
+    else:
+        o = acc.reshape(B, q_loc, hd)
+    return (o, k_new.astype(k_cache.dtype), v_new.astype(v_cache.dtype),
+            m.reshape(B, q_loc), l.reshape(B, q_loc))

@@ -1,0 +1,187 @@
+"""Fused weight-absorbed MLA decode kernel (paper Alg. 4, Level-1 TPU form).
+
+Phases (one ``pallas_call``, grid sequential):
+  0.  Q-Projection + Down-Projection + K-up absorption (q_lat = q_nope·W_UK)
+      + RoPE, all resident in VMEM scratch; emits the new latent cache entry.
+  1..n.  FlashDecoding in *latent space* over the compressed cache
+      (this is MLA's whole point — the cache is [S, l+rope] shared by all
+      heads, MQA-style).
+  n+1.  New-entry contribution + online-softmax finalize + value
+      Up-Projection (A·W_UV) + Output-Projection, one HBM write.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(cache_len_ref,
+            x_ref, wq_ref, wdkv_ref, wuk_ref, wuv_ref, wo_ref,
+            cos_ref, sin_ref, c_blk_ref,
+            o_ref, c_new_ref,
+            q_s, m_s, l_s, acc_s,
+            *, blk_s: int, n_blocks: int, q_loc: int, nope: int,
+            rope_d: int, l_rank: int, v_dim: int, scale: float,
+            fuse_out: bool):
+    j = pl.program_id(0)
+    cache_len = cache_len_ref[0]
+    B = x_ref.shape[0]
+    lr = l_rank + rope_d
+
+    @pl.when(j == 0)
+    def _proj():
+        x = x_ref[...].astype(jnp.float32)                   # [B, D]
+        q = jax.lax.dot(x, wq_ref[...].astype(jnp.float32))  # [B, q*(n+r)]
+        q = q.reshape(B, q_loc, nope + rope_d)
+        c = jax.lax.dot(x, wdkv_ref[...].astype(jnp.float32))  # [B, l+r]
+        q_nope, q_rope = q[..., :nope], q[..., nope:]
+        c_lat, c_rope = c[..., :l_rank], c[..., l_rank:]
+        # absorb K-up into q:  q_lat [B, q, l]
+        q_lat = jax.lax.dot_general(
+            q_nope, wuk_ref[...].astype(jnp.float32),
+            (((2,), (1,)), ((1,), (0,))))                     # [q, B, l]
+        q_lat = jnp.moveaxis(q_lat, 0, 1)
+        cos = cos_ref[...].astype(jnp.float32)
+        sin = sin_ref[...].astype(jnp.float32)
+        half = rope_d // 2
+
+        def rope(t):
+            t1, t2 = t[..., :half], t[..., half:]
+            return jnp.concatenate([t1 * cos - t2 * sin,
+                                    t2 * cos + t1 * sin], axis=-1)
+
+        q_rope = rope(q_rope)
+        c_rope = rope(c_rope.reshape(B, 1, rope_d)).reshape(B, rope_d)
+        q_s[...] = jnp.concatenate([q_lat, q_rope], axis=-1)  # [B,q,l+r]
+        c_new_ref[...] = jnp.concatenate([c_lat, c_rope],
+                                         axis=-1).astype(c_new_ref.dtype)
+        m_s[...] = jnp.full_like(m_s[...], -1e30)
+        l_s[...] = jnp.zeros_like(l_s[...])
+        acc_s[...] = jnp.zeros_like(acc_s[...])
+
+    blk_start = (j - 1) * blk_s
+    live = (j > 0) & (j <= n_blocks) & (blk_start < cache_len)
+
+    @pl.when(live)
+    def _attend():
+        q = q_s[...]                                          # [B,q,l+r]
+        cb = c_blk_ref[...].astype(jnp.float32)               # [blk, l+r]
+        s = jax.lax.dot_general(q, cb, (((2,), (1,)), ((), ())))
+        s = s * scale                                         # [B,q,blk]
+        pos = blk_start + lax.broadcasted_iota(jnp.int32, (1, 1, blk_s), 2)
+        valid = pos < cache_len
+        s = jnp.where(valid, s, -1e30)
+        m_prev, l_prev = m_s[...], l_s[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.where(valid, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        m_s[...] = m_new
+        l_s[...] = l_prev * corr + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(p, cb[:, :l_rank],
+                                 (((2,), (0,)), ((), ())))    # [B,q,l]
+        acc_s[...] = acc_s[...] * corr[..., None] + pv
+
+    @pl.when(j == n_blocks + 1)
+    def _finalize():
+        q = q_s[...]
+        c_new = c_new_ref[...].astype(jnp.float32)            # [B, l+r]
+        s = jnp.einsum("bql,bl->bq", q, c_new) * scale
+        m_prev, l_prev = m_s[...], l_s[...]
+        m_new = jnp.maximum(m_prev, s)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_fin = l_prev * corr + p
+        acc = acc_s[...] * corr[..., None] \
+            + p[..., None] * c_new[:, None, :l_rank]
+        a_lat = acc / l_fin[..., None]                        # [B,q,l]
+        # value Up-Projection (A · W_UV)  → [B, q, v]
+        o_head = jax.lax.dot_general(
+            a_lat, wuv_ref[...].astype(jnp.float32),
+            (((2,), (1,)), ((1,), (0,))))                     # [q, B, v]
+        o_head = jnp.moveaxis(o_head, 0, 1).reshape(B, q_loc * v_dim)
+        if fuse_out:
+            o_ref[...] = jax.lax.dot(
+                o_head, wo_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+        else:
+            o_ref[...] = o_head.reshape(B, q_loc, v_dim).astype(o_ref.dtype)
+
+
+def fused_mla_decode_attention(
+    x: jax.Array,                 # [B, D]
+    wq: jax.Array,                # [D, q_loc * (nope+rope)]
+    wdkv: jax.Array,              # [D, l_rank + rope]
+    wuk: jax.Array,               # [q_loc, nope, l_rank]
+    wuv: jax.Array,               # [q_loc, l_rank, v_dim]
+    wo: jax.Array,                # [q_loc * v_dim, D_out]
+    c_cache: jax.Array,           # [S, l_rank + rope] latent cache
+    cache_len: jax.Array,
+    cos: jax.Array,               # [rope//2] at position cache_len
+    sin: jax.Array,
+    *,
+    q_heads: int, nope: int, rope_d: int, l_rank: int, v_dim: int,
+    block_s: int = 512, fuse_out: bool = True, interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (o, c_new).  o: [B, D_out] (fused) or [B, q, v] partials."""
+    B, D = x.shape
+    S, lr = c_cache.shape
+    assert lr == l_rank + rope_d
+    scale = 1.0 / math.sqrt(nope + rope_d)
+    blk_s = min(block_s, S)
+    assert S % blk_s == 0
+    n_blocks = S // blk_s
+    d_out = wo.shape[1]
+    o_shape = (B, d_out) if fuse_out else (B, q_heads, v_dim)
+
+    kernel = functools.partial(
+        _kernel, blk_s=blk_s, n_blocks=n_blocks, q_loc=q_heads, nope=nope,
+        rope_d=rope_d, l_rank=l_rank, v_dim=v_dim, scale=scale,
+        fuse_out=fuse_out)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_blocks + 2,),
+            in_specs=[
+                pl.BlockSpec((B, D), lambda j, *_: (0, 0)),
+                pl.BlockSpec(wq.shape, lambda j, *_: (0, 0)),
+                pl.BlockSpec(wdkv.shape, lambda j, *_: (0, 0)),
+                pl.BlockSpec(wuk.shape, lambda j, *_: (0, 0, 0)),
+                pl.BlockSpec(wuv.shape, lambda j, *_: (0, 0, 0)),
+                pl.BlockSpec(wo.shape, lambda j, *_: (0, 0)),
+                pl.BlockSpec((1, rope_d // 2), lambda j, *_: (0, 0)),
+                pl.BlockSpec((1, rope_d // 2), lambda j, *_: (0, 0)),
+                pl.BlockSpec((blk_s, lr),
+                             lambda j, *_: (jnp.clip(j - 1, 0, n_blocks - 1),
+                                            0)),
+            ],
+            out_specs=[
+                pl.BlockSpec(o_shape, lambda j, *_: (0,) * len(o_shape)),
+                pl.BlockSpec((B, lr), lambda j, *_: (0, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((B, q_heads, lr), jnp.float32),
+                pltpu.VMEM((B, q_heads), jnp.float32),
+                pltpu.VMEM((B, q_heads), jnp.float32),
+                pltpu.VMEM((B, q_heads, l_rank), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct(o_shape,
+                                 x.dtype if fuse_out else jnp.float32),
+            jax.ShapeDtypeStruct((B, lr), c_cache.dtype),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(jnp.asarray(cache_len, jnp.int32).reshape(1),
+      x, wq, wdkv, wuk, wuv, wo, cos.reshape(1, -1), sin.reshape(1, -1),
+      c_cache)
+    return tuple(out)

@@ -1,0 +1,24 @@
+"""Jitted public wrapper for the fused MLA decode kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.fused_mla_decode.fused_mla_decode import (
+    fused_mla_decode_attention)
+from repro.kernels.fused_mla_decode.ref import fused_mla_decode_attention_ref
+
+
+@partial(jax.jit, static_argnames=("q_heads", "nope", "rope_d", "l_rank",
+                                   "v_dim", "block_s", "fuse_out",
+                                   "interpret", "use_ref"))
+def fused_mla_decode(x, wq, wdkv, wuk, wuv, wo, c_cache, cache_len, cos, sin,
+                     *, q_heads, nope, rope_d, l_rank, v_dim, block_s=512,
+                     fuse_out=True, interpret=False, use_ref=False):
+    fn = (fused_mla_decode_attention_ref if use_ref
+          else fused_mla_decode_attention)
+    return fn(x, wq, wdkv, wuk, wuv, wo, c_cache, cache_len, cos, sin,
+              q_heads=q_heads, nope=nope, rope_d=rope_d, l_rank=l_rank,
+              v_dim=v_dim, block_s=block_s, fuse_out=fuse_out,
+              interpret=interpret)

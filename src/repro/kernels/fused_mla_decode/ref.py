@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the fused MLA decode kernel."""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_mla_decode_attention_ref(
+    x, wq, wdkv, wuk, wuv, wo, c_cache, cache_len, cos, sin, *,
+    q_heads, nope, rope_d, l_rank, v_dim, fuse_out: bool = True, **_,
+) -> Tuple[jax.Array, jax.Array]:
+    B, D = x.shape
+    S, lr = c_cache.shape
+    scale = 1.0 / math.sqrt(nope + rope_d)
+    xf = x.astype(jnp.float32)
+    q = (xf @ wq.astype(jnp.float32)).reshape(B, q_heads, nope + rope_d)
+    c = xf @ wdkv.astype(jnp.float32)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    c_lat, c_rope = c[..., :l_rank], c[..., l_rank:]
+    q_lat = jnp.einsum("bqn,qnl->bql", q_nope, wuk.astype(jnp.float32))
+    half = rope_d // 2
+    cc, ss = cos.astype(jnp.float32), sin.astype(jnp.float32)
+
+    def rope(t):
+        t1, t2 = t[..., :half], t[..., half:]
+        return jnp.concatenate([t1 * cc - t2 * ss, t2 * cc + t1 * ss], -1)
+
+    q_rope = rope(q_rope)
+    c_rope = rope(c_rope)
+    c_new = jnp.concatenate([c_lat, c_rope], axis=-1)
+
+    cache = c_cache.astype(jnp.float32)
+    s_cache = (jnp.einsum("bql,sl->bqs", q_lat, cache[:, :l_rank])
+               + jnp.einsum("bqr,sr->bqs", q_rope, cache[:, l_rank:])) * scale
+    s_self = (jnp.einsum("bql,bl->bq", q_lat, c_lat)
+              + jnp.einsum("bqr,br->bq", q_rope, c_rope)) * scale
+    valid = jnp.arange(S) < cache_len
+    s_cache = jnp.where(valid[None, None, :], s_cache, -jnp.inf)
+    s_all = jnp.concatenate([s_cache, s_self[..., None]], axis=-1)
+    p = jax.nn.softmax(s_all, axis=-1)
+    a_lat = jnp.einsum("bqs,sl->bql", p[..., :-1], cache[:, :l_rank]) \
+        + p[..., -1][..., None] * c_lat[:, None, :]
+    o_head = jnp.einsum("bql,qlv->bqv", a_lat, wuv.astype(jnp.float32))
+    if fuse_out:
+        o = (o_head.reshape(B, q_heads * v_dim)
+             @ wo.astype(jnp.float32)).astype(x.dtype)
+    else:
+        o = o_head
+    return o, c_new.astype(c_cache.dtype)

@@ -1,0 +1,19 @@
+"""Jitted public wrapper for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.rglru_scan.rglru_scan import rglru_scan_kernel
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+
+
+@partial(jax.jit, static_argnames=("block_t", "block_c", "interpret",
+                                   "use_ref"))
+def rglru_scan(log_a, b, h0, *, block_t=128, block_c=512, interpret=False,
+               use_ref=False):
+    if use_ref:
+        return rglru_scan_ref(log_a, b, h0)
+    return rglru_scan_kernel(log_a, b, h0, block_t=block_t, block_c=block_c,
+                             interpret=interpret)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def rglru_scan_ref(log_a: jax.Array, b: jax.Array, h0: jax.Array, **_):
+    la = log_a.astype(jnp.float32)
+    bb = b.astype(jnp.float32)
+
+    def step(h, inp):
+        la_t, b_t = inp
+        h = jnp.exp(la_t) * h + b_t
+        return h, h
+
+    h_fin, hs = lax.scan(step, h0.astype(jnp.float32),
+                         (jnp.moveaxis(la, 1, 0), jnp.moveaxis(bb, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1).astype(log_a.dtype), h_fin

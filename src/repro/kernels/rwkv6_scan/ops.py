@@ -1,0 +1,19 @@
+"""Jitted public wrapper for the RWKV-6 WKV scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.rwkv6_scan.rwkv6_scan import rwkv6_scan_kernel
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+
+
+@partial(jax.jit, static_argnames=("block_t", "block_h", "interpret",
+                                   "use_ref"))
+def rwkv6_scan(r, k, v, w, u, s0, *, block_t=64, block_h=4, interpret=False,
+               use_ref=False):
+    if use_ref:
+        return rwkv6_scan_ref(r, k, v, w, u, s0)
+    return rwkv6_scan_kernel(r, k, v, w, u, s0, block_t=block_t,
+                             block_h=block_h, interpret=interpret)

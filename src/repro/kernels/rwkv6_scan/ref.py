@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the RWKV-6 WKV scan kernel (same math as
+models/rwkv6._wkv_scan)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.rwkv6 import _wkv_scan
+
+
+def rwkv6_scan_ref(r, k, v, w, u, s0, **_):
+    o, s_fin = _wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                         v.astype(jnp.float32), w.astype(jnp.float32),
+                         u.astype(jnp.float32), s0.astype(jnp.float32))
+    return o.astype(r.dtype), s_fin

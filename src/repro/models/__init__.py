@@ -1,0 +1,8 @@
+"""Pure-JAX model zoo (manual SPMD via ParallelCtx)."""
+from repro.models.ctx import (  # noqa: F401
+    ParallelCtx, make_train_ctx, pick_heads_sub, single_device_ctx,
+)
+from repro.models.transformer import (  # noqa: F401
+    Layout, apply_block, forward, init_device_major, init_logical,
+    layout_for, loss_fn, param_specs, to_device_major, unwrap_local,
+)

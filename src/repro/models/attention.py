@@ -1,0 +1,295 @@
+"""Training / prefill attention (GQA + MLA), manual-SPMD.
+
+Sharding layout (train):
+
+* q heads sharded over the ``heads`` sub-axis (size H);
+* head_dim sharded over the ``cluster`` sub-axis (size N) for the QKV
+  projection — segments are ClusterGather'd before the attention proper
+  (paper Alg. 3 applied to training; with N=1 this is plain Megatron TP);
+* attention compute is *query-sequence* split over the cluster sub-axis
+  (each rank attends a contiguous block of query rows against the full
+  KV) — sequence parallelism inside the attention block;
+* W_O rows sharded over heads, outputs psum'd over the heads sub-axis.
+
+KV weights are stored replicated when ``n_kv < heads_sub`` (GQA/MQA), so
+every heads-rank holds the KV heads its local q heads need.
+
+The chunked flash attention below (``_flash``) is the pure-jnp oracle the
+Pallas kernels are validated against; it is differentiable and
+memory-bounded (online softmax over KV chunks).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.ctx import ParallelCtx
+from repro.models.layers import apply_rope, rope_cos_sin, softcap
+
+
+class AttnParams(NamedTuple):
+    """Local shapes (leading device dim stripped by the unwrapper):
+
+    wq [D, q_loc, hd_seg]; wk/wv [D, kv_loc, hd_seg]; wo [q_loc*hd, D]
+    (hd_seg = head_dim / cluster_size).  Optional biases [*_loc, hd_seg].
+    """
+
+    wq: jax.Array
+    wk: jax.Array
+    wv: jax.Array
+    wo: jax.Array
+    bq: Optional[jax.Array] = None
+    bk: Optional[jax.Array] = None
+    bv: Optional[jax.Array] = None
+
+
+class MLAAttnParams(NamedTuple):
+    """Train-time MLA params (local): wq [D, q_loc, nope+rope];
+    wdkv [D, l+rope]; wuk [q_loc... see mla_attention_train]."""
+
+    wq: jax.Array
+    wdkv: jax.Array
+    wuk: jax.Array          # [q_loc, nope, l]
+    wuv: jax.Array          # [q_loc, l, v_dim]
+    wo: jax.Array           # [q_loc*v_dim, D]
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash attention (jnp oracle, differentiable)
+# ---------------------------------------------------------------------------
+def _flash(q: jax.Array, k: jax.Array, v: jax.Array, *,
+           q_offset: jax.Array | int, causal: bool, window: int,
+           cap: float, scale: float, kv_valid_len: Optional[jax.Array] = None,
+           chunk: int = 512) -> jax.Array:
+    """q: [B, Sq, KV, QPK, hd]; k/v: [B, Sk, KV, hd] → [B, Sq, KV, QPK, hd].
+
+    Online-softmax scan over KV chunks.  ``q_offset`` maps local q rows to
+    global positions (sequence-split attention); ``window > 0`` restricts
+    keys to ``(pos_q − window, pos_q]``.
+    """
+    B, Sq, KV, QPK, hd = q.shape
+    Sk = k.shape[1]
+    chunk = min(chunk, Sk)
+    n_chunks = (Sk + chunk - 1) // chunk
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, KV, k.shape[-1])
+    vc = v.reshape(B, n_chunks, chunk, KV, v.shape[-1])
+    q32 = q.astype(jnp.float32) * scale
+    q_pos = (jnp.arange(Sq) + q_offset)[:, None]            # [Sq, 1]
+
+    def body(carry, inp):
+        m, l, o = carry
+        kblk, vblk, cidx = inp                               # [B,chunk,KV,hd]
+        s = jnp.einsum("bqkgh,bckh->bqkgc", q32, kblk.astype(jnp.float32))
+        s = softcap(s, cap)
+        k_pos = cidx * chunk + jnp.arange(chunk)[None, :]    # [1, chunk]
+        valid = jnp.ones((Sq, chunk), bool)
+        if causal:
+            valid &= k_pos <= q_pos
+        if window > 0:
+            valid &= k_pos > q_pos - window
+        if kv_valid_len is not None:
+            valid &= k_pos < kv_valid_len
+        valid &= k_pos < Sk                                   # padding
+        s = jnp.where(valid[None, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+        corr = jnp.where(jnp.isfinite(m), corr, 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        o_new = o * corr[..., None] + jnp.einsum(
+            "bqkgc,bckh->bqkgh", p, vblk.astype(jnp.float32))
+        return (m_new, l_new, o_new), None
+
+    hd_v = v.shape[-1]                                   # may differ (MLA)
+    m0 = jnp.full((B, Sq, KV, QPK), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, QPK), jnp.float32)
+    o0 = jnp.zeros((B, Sq, KV, QPK, hd_v), jnp.float32)
+    kcs = jnp.moveaxis(kc, 1, 0)
+    vcs = jnp.moveaxis(vc, 1, 0)
+    (m, l, o), _ = lax.scan(body, (m0, l0, o0),
+                            (kcs, vcs, jnp.arange(n_chunks)))
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (train / prefill)
+# ---------------------------------------------------------------------------
+def attention_train(
+    ctx: ParallelCtx,
+    p: AttnParams,
+    x: jax.Array,                 # [B, S, D] (replicated over model)
+    cfg: ModelConfig,
+    kind: str,                    # "attn_global" | "attn_local"
+    *,
+    causal: bool = True,
+    return_kv: bool = False,
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    B, S, D = x.shape
+    n = ctx.cluster_size
+    q_loc, hd_seg = p.wq.shape[1], p.wq.shape[2]
+    kv_loc = p.wk.shape[1]
+    hd = hd_seg * n
+    qpk = q_loc // kv_loc
+    window = cfg.sliding_window if kind == "attn_local" else 0
+
+    # (1) head-dim *segments* of q/k/v (paper Alg. 3 line 2, batched form)
+    q = jnp.einsum("bsd,dqh->bsqh", x, p.wq)
+    k = jnp.einsum("bsd,dkh->bskh", x, p.wk)
+    v = jnp.einsum("bsd,dkh->bskh", x, p.wv)
+    if p.bq is not None:
+        q, k, v = q + p.bq, k + p.bk, v + p.bv
+
+    # (2) ClusterGather the full head dim (no-op when cluster==1)
+    q = ctx.gather_cluster(q, axis=3)
+    k = ctx.gather_cluster(k, axis=3)
+    v = ctx.gather_cluster(v, axis=3)
+
+    cos, sin = rope_cos_sin(jnp.arange(S), hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    kv_out = (k, v) if return_kv else None
+
+    # (3) sequence-split attention over the cluster sub-axis
+    if n > 1:
+        s_blk = S // n
+        c_rank = ctx.cluster_index()
+        q_off = c_rank * s_blk
+        q_blk = lax.dynamic_slice_in_dim(q, q_off, s_blk, axis=1)
+    else:
+        s_blk, q_off, q_blk = S, 0, q
+
+    qg = q_blk.reshape(B, s_blk, kv_loc, qpk, hd)
+    out = _flash(qg, k, v, q_offset=q_off, causal=causal, window=window,
+                 cap=cfg.attn_softcap, scale=1.0 / math.sqrt(hd))
+    out = out.reshape(B, s_blk, q_loc * hd)
+
+    # (4) O-projection (rows over heads) + heads-axis reduction
+    y = out @ p.wo
+    y = ctx.psum_heads(y)
+
+    # re-assemble the sequence (inverse of the seq split)
+    if n > 1:
+        y = ctx.gather_cluster(y, axis=1)
+    return y, kv_out
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (train / prefill) — DeepSeek-V2, non-absorbed form
+# ---------------------------------------------------------------------------
+def mla_attention_train(
+    ctx: ParallelCtx,
+    p: MLAAttnParams,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    return_kv: bool = False,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Training-time MLA: materialize per-head K/V from the latent (the
+    standard non-absorbed formulation; absorption is a decode-time
+    optimization — paper Fig. 14)."""
+    B, S, D = x.shape
+    m = cfg.mla
+    nope, rope_d, l_rank, v_dim = (m.nope_head_dim, m.rope_head_dim,
+                                   m.kv_lora_rank, m.v_head_dim)
+    q_loc = p.wq.shape[1]
+
+    q = jnp.einsum("bsd,dqh->bsqh", x, p.wq)            # [B,S,q,(nope+rope)]
+    c = x @ p.wdkv                                       # [B,S,l+rope]
+    q = ctx.gather_cluster(q, axis=3)
+    c = ctx.gather_cluster(c, axis=2)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    c_lat, c_rope = c[..., :l_rank], c[..., l_rank:]
+
+    cos, sin = rope_cos_sin(jnp.arange(S), rope_d, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    c_rope = apply_rope(c_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    kv_out = jnp.concatenate([c_lat, c_rope], axis=-1) if return_kv else None
+
+    # latent-space attention (absorbed q, as in the fused decode dataflow —
+    # mathematically identical to materializing K)
+    q_lat = jnp.einsum("bsqn,qnl->bsql", q_nope, p.wuk)
+    n = ctx.cluster_size
+    if n > 1:
+        s_blk = S // n
+        q_off = ctx.cluster_index() * s_blk
+        q_lat = lax.dynamic_slice_in_dim(q_lat, q_off, s_blk, axis=1)
+        q_rope_b = lax.dynamic_slice_in_dim(q_rope, q_off, s_blk, axis=1)
+    else:
+        s_blk, q_off, q_rope_b = S, 0, q_rope
+
+    kk = jnp.concatenate([c_lat, c_rope], axis=-1)       # [B,S,l+rope]
+    qq = jnp.concatenate([q_lat, q_rope_b], axis=-1)     # [B,s_blk,q,l+rope]
+    out = _flash(qq[:, :, None, :, :],                   # KV groups = 1
+                 kk[:, :, None, :], c_lat[:, :, None, :],
+                 q_offset=q_off, causal=True, window=0, cap=0.0,
+                 scale=1.0 / math.sqrt(nope + rope_d))
+    a_lat = out[:, :, 0]                                 # [B,s_blk,q,l]
+    o_head = jnp.einsum("bsql,qlv->bsqv", a_lat, p.wuv)
+    y = o_head.reshape(B, s_blk, q_loc * v_dim) @ p.wo
+    y = ctx.psum_heads(y)
+    if n > 1:
+        y = ctx.gather_cluster(y, axis=1)
+    return y, kv_out
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def attn_init(key, cfg: ModelConfig, heads_sub: int, cluster: int,
+              dtype=jnp.bfloat16, *, cross: bool = False) -> AttnParams:
+    """LOCAL attention params for one (heads-rank, cluster-rank).
+
+    Used under vmap-over-shards by the global param builder; shapes are
+    identical on every rank (KV heads replicated when n_kv < heads_sub).
+    """
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    q_loc = cfg.n_heads // heads_sub
+    kv_loc = max(1, cfg.n_kv_heads // heads_sub)
+    hd_seg = hd // cluster
+    ks = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(q_loc * hd * heads_sub)
+    bias = cfg.qkv_bias
+    return AttnParams(
+        wq=(jax.random.normal(ks[0], (d, q_loc, hd_seg)) * s_in).astype(dtype),
+        wk=(jax.random.normal(ks[1], (d, kv_loc, hd_seg)) * s_in).astype(dtype),
+        wv=(jax.random.normal(ks[2], (d, kv_loc, hd_seg)) * s_in).astype(dtype),
+        wo=(jax.random.normal(ks[3], (q_loc * hd, d)) * s_out).astype(dtype),
+        bq=jnp.zeros((q_loc, hd_seg), dtype) if bias else None,
+        bk=jnp.zeros((kv_loc, hd_seg), dtype) if bias else None,
+        bv=jnp.zeros((kv_loc, hd_seg), dtype) if bias else None,
+    )
+
+
+def mla_init(key, cfg: ModelConfig, heads_sub: int, cluster: int,
+             dtype=jnp.bfloat16) -> MLAAttnParams:
+    m = cfg.mla
+    d = cfg.d_model
+    q_loc = cfg.n_heads // heads_sub
+    hr = m.nope_head_dim + m.rope_head_dim
+    ks = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(d)
+    return MLAAttnParams(
+        wq=(jax.random.normal(ks[0], (d, q_loc, hr // cluster)) * s).astype(dtype),
+        wdkv=(jax.random.normal(ks[1], (d, (m.kv_lora_rank + m.rope_head_dim)
+                                        // cluster)) * s).astype(dtype),
+        wuk=(jax.random.normal(ks[2], (q_loc, m.nope_head_dim,
+                                       m.kv_lora_rank)) * 0.05).astype(dtype),
+        wuv=(jax.random.normal(ks[3], (q_loc, m.kv_lora_rank,
+                                       m.v_head_dim)) * 0.05).astype(dtype),
+        wo=(jax.random.normal(ks[4], (q_loc * m.v_head_dim, d))
+            * (1.0 / math.sqrt(cfg.n_heads * m.v_head_dim))).astype(dtype),
+    )

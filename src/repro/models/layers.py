@@ -1,0 +1,178 @@
+"""Shared layers: norms, activations, rotary, FFN (TP), vocab-parallel
+embedding and cross-entropy.
+
+Everything is written against :class:`~repro.models.ctx.ParallelCtx`; when
+no axes are bound the collectives vanish and the code is a plain
+single-device model (the test oracle).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.ctx import ParallelCtx
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+def activation(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding (full-sequence form)
+# ---------------------------------------------------------------------------
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float
+                 ) -> Tuple[jax.Array, jax.Array]:
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # [..., half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [..., S, H, head_dim]; cos/sin: [S, half] (broadcast over heads)."""
+    half = x.shape[-1] // 2
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN with tensor parallelism over the full model axis
+# ---------------------------------------------------------------------------
+class FFNParams(NamedTuple):
+    """Gated: w_in [D, F_loc], w_gate [D, F_loc], w_out [F_loc, D].
+    Ungated: w_gate is None."""
+
+    w_in: jax.Array
+    w_out: jax.Array
+    w_gate: Optional[jax.Array] = None
+
+
+def ffn_apply(ctx: ParallelCtx, p: FFNParams, x: jax.Array, act: str
+              ) -> jax.Array:
+    """Column-sharded up/gate, row-sharded down, psum on the way out
+    (Megatron pattern)."""
+    h = x @ p.w_in
+    if p.w_gate is not None:
+        h = activation(act)(x @ p.w_gate) * h
+    else:
+        h = activation(act)(h)
+    y = h @ p.w_out
+    return ctx.psum_model(y)
+
+
+def ffn_init(key, d_model: int, d_ff_local: int, gated: bool,
+             dtype=jnp.bfloat16) -> FFNParams:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(d_ff_local)
+    return FFNParams(
+        w_in=(jax.random.normal(k1, (d_model, d_ff_local)) * s_in).astype(dtype),
+        w_out=(jax.random.normal(k2, (d_ff_local, d_model)) * s_out).astype(dtype),
+        w_gate=(jax.random.normal(k3, (d_model, d_ff_local)) * s_in).astype(dtype)
+        if gated else None,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Vocab-parallel embedding + LM head + cross entropy (Megatron pattern)
+# ---------------------------------------------------------------------------
+class EmbedParams(NamedTuple):
+    table: jax.Array        # [V_loc, D] — vocab-sharded over the model axis
+
+
+def padded_vocab(vocab: int, shards: int) -> int:
+    return ((vocab + shards - 1) // shards) * shards
+
+
+def embed_init(key, vocab: int, d_model: int, shards: int,
+               dtype=jnp.bfloat16) -> EmbedParams:
+    v_pad = padded_vocab(vocab, shards)
+    table = jax.random.normal(key, (v_pad // shards, d_model)) * 0.02
+    return EmbedParams(table=table.astype(dtype))
+
+
+def embed_lookup(ctx: ParallelCtx, p: EmbedParams, tokens: jax.Array
+                 ) -> jax.Array:
+    """Tokens whose id falls outside this shard contribute zero; a psum over
+    the model axis assembles the full embedding."""
+    v_loc = p.table.shape[0]
+    shard = ctx.model_index()
+    local = tokens - shard * v_loc
+    in_range = (local >= 0) & (local < v_loc)
+    local = jnp.clip(local, 0, v_loc - 1)
+    emb = jnp.take(p.table, local, axis=0)
+    emb = jnp.where(in_range[..., None], emb, 0)
+    return ctx.psum_model(emb)
+
+
+def lm_head_logits(ctx: ParallelCtx, table: jax.Array, x: jax.Array
+                   ) -> jax.Array:
+    """Returns vocab-SHARDED logits [..., V_loc] (never materialize full V)."""
+    return x @ table.T.astype(x.dtype)
+
+
+def vocab_parallel_xent(ctx: ParallelCtx, logits_loc: jax.Array,
+                        targets: jax.Array, valid: Optional[jax.Array] = None
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Cross-entropy over vocab-sharded logits (Megatron algorithm).
+
+    Returns ``(sum_loss, sum_valid)`` — *local* partial sums over this
+    shard's tokens; callers psum over the data axes.
+    """
+    v_loc = logits_loc.shape[-1]
+    shard = ctx.model_index()
+    lf = logits_loc.astype(jnp.float32)
+    # stable logsumexp over the sharded vocab
+    m_loc = jnp.max(lf, axis=-1)
+    if ctx.model is not None:
+        from repro.core import primitives as prim
+        m = prim.cluster_reduce(m_loc, ctx.model, "max")
+    else:
+        m = m_loc
+    se = jnp.sum(jnp.exp(lf - m[..., None]), axis=-1)
+    se = ctx.psum_model(se)
+    lse = jnp.log(se) + m
+    # pick out the target logit (zero if not on this shard, then psum)
+    local = targets - shard * v_loc
+    in_range = (local >= 0) & (local < v_loc)
+    local_c = jnp.clip(local, 0, v_loc - 1)
+    tgt = jnp.take_along_axis(lf, local_c[..., None], axis=-1)[..., 0]
+    tgt = jnp.where(in_range, tgt, 0.0)
+    tgt = ctx.psum_model(tgt)
+    nll = lse - tgt
+    if valid is None:
+        valid = jnp.ones_like(nll, dtype=jnp.float32)
+    else:
+        valid = valid.astype(jnp.float32)
+    return jnp.sum(nll * valid), jnp.sum(valid)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return jnp.tanh(x / cap) * cap if cap and cap > 0 else x

@@ -1,0 +1,228 @@
+"""Mixture-of-Experts FFN with expert parallelism (manual SPMD).
+
+Experts are sharded over the *whole* model axis (EP); activations at the
+FFN input are replicated across the model axis (they just came out of an
+attention psum), so each rank can locally dispatch the tokens routed to
+ITS experts and a single psum combines expert outputs — the same
+communication volume as a dense TP FFN.  Dispatch is capacity-based
+(GShard-style token dropping) with a sort-free scatter build:
+
+  token-slot (t, k) → expert e, weight p
+  position-in-expert via a one-hot running count (exact GShard semantics)
+  slots with position ≥ capacity are dropped
+  gather  x[slot_token]  → [E_loc, C, D]   (static shapes, differentiable)
+  expert GEMMs via batched einsum over the local expert dim
+  scatter-combine with the routing weights, then psum over the model axis
+
+Arctic's dense-residual branch runs a normal TP FFN in parallel and sums.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import MoEConfig
+from repro.models.ctx import ParallelCtx
+from repro.models.layers import FFNParams, activation, ffn_apply, softcap
+
+
+class MoEParams(NamedTuple):
+    """Local shapes: router [D, E] (replicated); w_in/w_gate [E_loc, D, F];
+    w_out [E_loc, F, D]; dense residual FFN params optional."""
+
+    router: jax.Array
+    w_in: jax.Array
+    w_out: jax.Array
+    w_gate: Optional[jax.Array] = None
+    dense: Optional[FFNParams] = None
+
+
+def _capacity(tokens: int, moe: MoEConfig) -> int:
+    c = int(math.ceil(tokens * moe.top_k / moe.num_experts
+                      * moe.capacity_factor))
+    return max(8, ((c + 7) // 8) * 8)            # pad to 8 for TPU layout
+
+
+def route(moe: MoEConfig, router: jax.Array, x: jax.Array
+          ) -> Tuple[jax.Array, jax.Array]:
+    """Top-k routing. x: [T, D] → (expert_idx [T,k], weight [T,k])."""
+    logits = (x.astype(jnp.float32) @ router.astype(jnp.float32))
+    logits = softcap(logits, moe.router_softcap)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = lax.top_k(probs, moe.top_k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    return idx, w
+
+
+def moe_apply(ctx: ParallelCtx, p: MoEParams, x: jax.Array, act: str,
+              moe: MoEConfig) -> jax.Array:
+    """x: [B, S, D] (replicated over model) → [B, S, D]."""
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+    e_loc = p.w_in.shape[0]
+    n_shards = max(1, moe.num_experts // e_loc)
+    shard = ctx.model_index()
+    C = _capacity(T, moe)
+
+    idx, w = route(moe, p.router, xt)                     # [T,k]
+    # GShard position-in-expert, sort-based (O(Tk·logTk) and O(Tk) memory —
+    # the one-hot-cumsum formulation would materialize [Tk, E]): a stable
+    # argsort by expert preserves slot order, so earlier tokens win
+    # capacity exactly as in GShard.
+    flat_e = idx.reshape(-1)                              # [T*k]
+    tk = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    start = jnp.searchsorted(sorted_e, jnp.arange(moe.num_experts))
+    pos_sorted = jnp.arange(tk) - start[sorted_e]
+    pos_in_e = jnp.zeros((tk,), jnp.int32).at[order].set(
+        pos_sorted.astype(jnp.int32))
+    keep = pos_in_e < C
+
+    # keep only slots owned by this shard's experts
+    local_e = flat_e - shard * e_loc
+    mine = (local_e >= 0) & (local_e < e_loc) & keep
+    local_e_c = jnp.clip(local_e, 0, e_loc - 1)
+    slot_addr = local_e_c * C + jnp.clip(pos_in_e, 0, C - 1)
+
+    # scatter token ids into the [E_loc*C] dispatch table; dropped / foreign
+    # slots all write the sentinel row (GShard position assignment makes
+    # every kept (e, pos) unique, so real writes never collide)
+    tok_ids = jnp.repeat(jnp.arange(T), moe.top_k)
+    addr = jnp.where(mine, slot_addr, e_loc * C)
+    table = jnp.full((e_loc * C + 1,), T, jnp.int32)      # T ⇒ empty slot
+    table = table.at[addr].set(jnp.where(mine, tok_ids, T))
+    table = table[: e_loc * C]
+    x_pad = jnp.concatenate([xt, jnp.zeros((1, D), xt.dtype)], axis=0)
+    xe = jnp.take(x_pad, table, axis=0).reshape(e_loc, C, D)
+
+    # expert FFN (batched over local experts)
+    h = jnp.einsum("ecd,edf->ecf", xe, p.w_in)
+    if p.w_gate is not None:
+        h = activation(act)(jnp.einsum("ecd,edf->ecf", xe, p.w_gate)) * h
+    else:
+        h = activation(act)(h)
+    ye = jnp.einsum("ecf,efd->ecd", h, p.w_out)           # [E_loc, C, D]
+
+    # combine: route expert outputs back to their tokens with weights
+    flat_w = w.reshape(-1).astype(ye.dtype)
+    gathered = jnp.take(ye.reshape(e_loc * C, D),
+                        jnp.clip(slot_addr, 0, e_loc * C - 1), axis=0)
+    contrib = jnp.where(mine[:, None], gathered * flat_w[:, None], 0)
+    y = jnp.zeros((T, D), ye.dtype).at[tok_ids].add(contrib)
+    y = ctx.psum_model(y)
+    y = y.astype(x.dtype).reshape(B, S, D)
+
+    if p.dense is not None:                               # Arctic residual
+        y = y + ffn_apply(ctx, p.dense, x, act)
+    return y
+
+
+def aux_load_balance_loss(moe: MoEConfig, router: jax.Array, x: jax.Array
+                          ) -> jax.Array:
+    """Switch-Transformer auxiliary loss (fraction·probability balance)."""
+    T = x.shape[0]
+    logits = x.astype(jnp.float32) @ router.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    idx = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(idx, moe.num_experts), axis=0)
+    prob = jnp.mean(probs, axis=0)
+    return moe.num_experts * jnp.sum(frac * prob)
+
+
+def moe_init(key, d_model: int, moe: MoEConfig, n_shards: int, gated: bool,
+             dtype=jnp.bfloat16) -> MoEParams:
+    e_loc = max(1, moe.num_experts // n_shards)
+    f = moe.expert_d_ff
+    ks = jax.random.split(key, 5)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(f)
+    dense = None
+    if moe.dense_ff_residual:
+        from repro.models.layers import ffn_init
+        dense = ffn_init(ks[4], d_model,
+                         max(1, moe.dense_residual_d_ff // n_shards), gated,
+                         dtype)
+    return MoEParams(
+        router=(jax.random.normal(ks[0], (d_model, moe.num_experts))
+                * s_in).astype(jnp.float32),
+        w_in=(jax.random.normal(ks[1], (e_loc, d_model, f)) * s_in).astype(dtype),
+        w_out=(jax.random.normal(ks[2], (e_loc, f, d_model)) * s_out).astype(dtype),
+        w_gate=(jax.random.normal(ks[3], (e_loc, d_model, f)) * s_in).astype(dtype)
+        if gated else None,
+        dense=dense,
+    )
+
+
+def moe_apply_dff(ctx: ParallelCtx, p: MoEParams, x_rep: jax.Array,
+                  act: str, moe: MoEConfig, dff_axes) -> jax.Array:
+    """Decode-path MoE for models whose expert weights exceed per-device
+    HBM under model-axis EP alone (kimi-1T, arctic-480B): each expert's
+    d_ff is additionally sliced over the data axis, so weights spread over
+    (model × data) = 256 ranks.  ``x_rep`` [T, D] must be replicated over
+    ``dff_axes``; the output psum runs over (dff_axes + model) — partial
+    d_ff products sum exactly like a row-sharded TP FFN.
+
+    Dense-residual branch (arctic) is sliced the same way.
+    """
+    T, D = x_rep.shape
+    e_loc = p.w_in.shape[0]
+    shard = ctx.model_index()
+    C = _capacity(T, moe)
+
+    idx, w = route(moe, p.router, x_rep)
+    flat_e = idx.reshape(-1)
+    tk = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    start = jnp.searchsorted(sorted_e, jnp.arange(moe.num_experts))
+    pos_sorted = jnp.arange(tk) - start[sorted_e]
+    pos_in_e = jnp.zeros((tk,), jnp.int32).at[order].set(
+        pos_sorted.astype(jnp.int32))
+    keep = pos_in_e < C
+    local_e = flat_e - shard * e_loc
+    mine = (local_e >= 0) & (local_e < e_loc) & keep
+    local_e_c = jnp.clip(local_e, 0, e_loc - 1)
+    slot_addr = local_e_c * C + jnp.clip(pos_in_e, 0, C - 1)
+    tok_ids = jnp.repeat(jnp.arange(T), moe.top_k)
+    addr = jnp.where(mine, slot_addr, e_loc * C)
+    table = jnp.full((e_loc * C + 1,), T, jnp.int32)
+    table = table.at[addr].set(jnp.where(mine, tok_ids, T))
+    table = table[: e_loc * C]
+    x_pad = jnp.concatenate([x_rep, jnp.zeros((1, D), x_rep.dtype)], axis=0)
+    xe = jnp.take(x_pad, table, axis=0).reshape(e_loc, C, D)
+
+    # expert GEMMs over the LOCAL d_ff slice; partial products sum via the
+    # (dff_axes + model) psum below
+    h = jnp.einsum("ecd,edf->ecf", xe, p.w_in)
+    if p.w_gate is not None:
+        h = activation(act)(jnp.einsum("ecd,edf->ecf", xe, p.w_gate)) * h
+    else:
+        h = activation(act)(h)
+    ye = jnp.einsum("ecf,efd->ecd", h, p.w_out)
+
+    flat_w = w.reshape(-1).astype(ye.dtype)
+    gathered = jnp.take(ye.reshape(e_loc * C, D),
+                        jnp.clip(slot_addr, 0, e_loc * C - 1), axis=0)
+    contrib = jnp.where(mine[:, None], gathered * flat_w[:, None], 0)
+    y = jnp.zeros((T, D), ye.dtype).at[tok_ids].add(contrib)
+    y = jax.lax.psum(y, dff_axes)
+    y = ctx.psum_model(y)
+    y = y.astype(x_rep.dtype)
+
+    if p.dense is not None:
+        h = x_rep @ p.dense.w_in
+        if p.dense.w_gate is not None:
+            h = activation(act)(x_rep @ p.dense.w_gate) * h
+        else:
+            h = activation(act)(h)
+        yd = h @ p.dense.w_out
+        yd = jax.lax.psum(yd, dff_axes)
+        yd = ctx.psum_model(yd)
+        y = y + yd.astype(y.dtype)
+    return y

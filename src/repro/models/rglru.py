@@ -1,0 +1,178 @@
+"""Griffin / RecurrentGemma recurrent block (RG-LRU).
+
+Block structure (arXiv:2402.19427):
+
+    x ─ linear ─ conv1d(width 4) ─ RG-LRU ─┐
+                                            ⊙ ─ out-linear
+    x ─ linear ───────────── gelu ─────────┘
+
+RG-LRU recurrence (per channel, diagonal — embarrassingly parallel over
+channels, so the model axis shards channels with zero recurrence comm):
+
+    r_t = σ(W_r x_t + b_r)          i_t = σ(W_i x_t + b_i)
+    a_t = exp(−c · softplus(Λ) · r_t)
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Training uses ``lax.associative_scan`` (log-depth — the TPU-native choice);
+decode is a single fused step.  The Pallas kernel in
+``kernels/rglru_scan`` implements the sequential scan with VMEM-resident
+state for the decode/prefill hot path.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.ctx import ParallelCtx
+
+_C = 8.0  # Griffin's fixed constant
+
+
+class RGLRUParams(NamedTuple):
+    """Local shapes (d_loc = rglru_d_state / model_size):
+
+    w_x [D, d_loc], w_gate [D, d_loc]  — input / gate branches
+    conv_w [width, d_loc], conv_b [d_loc]
+    w_r / w_i [nb_loc, bs, bs] — Griffin's gates are *block-diagonal*
+    linear layers with ``n_blocks = n_heads`` blocks (RecurrentGemma's
+    BlockDiagonalLinear); the block structure is part of the published
+    architecture and is what makes the channel sharding exact: blocks are
+    distributed whole across the model axis.
+    lam [d_loc] — Λ parameter; out [d_loc, D].
+    """
+
+    w_x: jax.Array
+    w_gate: jax.Array
+    conv_w: jax.Array
+    conv_b: jax.Array
+    w_r: jax.Array
+    b_r: jax.Array
+    w_i: jax.Array
+    b_i: jax.Array
+    lam: jax.Array
+    w_out: jax.Array
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array            # [B, d_loc] recurrent state
+    conv: jax.Array         # [B, width-1, d_loc] conv tail
+
+
+def _block_linear(w: jax.Array, u: jax.Array) -> jax.Array:
+    """Block-diagonal matmul: w [nb, bs, bs]; u [..., nb*bs]."""
+    nb, bs, _ = w.shape
+    uu = u.reshape(u.shape[:-1] + (nb, bs))
+    return jnp.einsum("...nb,nbc->...nc", uu, w).reshape(u.shape)
+
+
+def _gates(p: RGLRUParams, u: jax.Array):
+    r = jax.nn.sigmoid(_block_linear(p.w_r, u) + p.b_r)
+    i = jax.nn.sigmoid(_block_linear(p.w_i, u) + p.b_i)
+    log_a = -_C * jax.nn.softplus(p.lam) * r          # log a_t  (≤ 0)
+    return log_a, i
+
+
+def rglru_scan(p: RGLRUParams, u: jax.Array) -> jax.Array:
+    """Associative scan over time.  u: [B, S, d_loc] → h: [B, S, d_loc].
+
+    The recurrence h_t = a_t h_{t−1} + b_t is linear ⇒ composable elements
+    (a, b) with (a2, b2)∘(a1, b1) = (a1·a2, a2·b1 + b2).
+    """
+    log_a, i = _gates(p, u.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * u.astype(jnp.float32))
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(u.dtype)
+
+
+def rglru_step(p: RGLRUParams, u: jax.Array, h_prev: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step. u: [B, d_loc]."""
+    log_a, i = _gates(p, u.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    h = a * h_prev.astype(jnp.float32) + \
+        jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * u.astype(jnp.float32))
+    return h.astype(u.dtype), h.astype(h_prev.dtype)
+
+
+def _causal_conv(p: RGLRUParams, x: jax.Array,
+                 tail: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv1d.  x: [B, S, d_loc]."""
+    width = p.conv_w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = tail.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i: i + x.shape[1]] * p.conv_w[i] for i in range(width))
+    return out + p.conv_b
+
+
+def rglru_block(ctx: ParallelCtx, p: RGLRUParams, x: jax.Array
+                ) -> jax.Array:
+    """Full Griffin recurrent block (train / prefill).  x: [B, S, D]."""
+    u = x @ p.w_x                                    # [B,S,d_loc]
+    u = _causal_conv(p, u)
+    h = rglru_scan(p, u)
+    gate = jax.nn.gelu(x @ p.w_gate, approximate=True)
+    y = (h * gate) @ p.w_out
+    return ctx.psum_model(y)
+
+
+def rglru_block_step(ctx: ParallelCtx, p: RGLRUParams, x: jax.Array,
+                     state: RGLRUState) -> Tuple[jax.Array, RGLRUState]:
+    """Decode step.  x: [B, D] → ([B, D], new state)."""
+    u = x @ p.w_x                                    # [B, d_loc]
+    width = p.conv_w.shape[0]
+    hist = jnp.concatenate([state.conv, u[:, None]], axis=1)  # [B,width,d]
+    u_c = jnp.einsum("bwd,wd->bd", hist.astype(jnp.float32),
+                     p.conv_w.astype(jnp.float32)).astype(u.dtype) + p.conv_b
+    h, h_new = rglru_step(p, u_c, state.h)
+    gate = jax.nn.gelu(x @ p.w_gate, approximate=True)
+    y = (h * gate) @ p.w_out
+    y = ctx.psum_model(y)
+    return y, RGLRUState(h=h_new, conv=hist[:, 1:])
+
+
+def rglru_init(key, d_model: int, d_state: int, n_blocks: int,
+               width: int = 4, dtype=jnp.bfloat16) -> RGLRUParams:
+    """Logical init; ``n_blocks`` = number of gate blocks (= n_heads)."""
+    ks = jax.random.split(key, 7)
+    s = 1.0 / math.sqrt(d_model)
+    bs = d_state // n_blocks
+    sb = 1.0 / math.sqrt(bs)
+    # Λ init so that a ∈ (0.9, 0.999) at r = 0.5 (Griffin's stable range)
+    lam = jnp.log(jnp.expm1(
+        -jnp.log(jnp.linspace(0.9, 0.999, d_state)) * 2.0 / _C))
+    return RGLRUParams(
+        w_x=(jax.random.normal(ks[0], (d_model, d_state)) * s).astype(dtype),
+        w_gate=(jax.random.normal(ks[1], (d_model, d_state)) * s).astype(dtype),
+        conv_w=(jax.random.normal(ks[2], (width, d_state)) * 0.2).astype(dtype),
+        conv_b=jnp.zeros((d_state,), dtype),
+        w_r=(jax.random.normal(ks[3], (n_blocks, bs, bs)) * sb).astype(dtype),
+        b_r=jnp.zeros((d_state,), jnp.float32),
+        w_i=(jax.random.normal(ks[4], (n_blocks, bs, bs)) * sb).astype(dtype),
+        b_i=jnp.zeros((d_state,), jnp.float32),
+        lam=lam.astype(jnp.float32),
+        w_out=(jax.random.normal(ks[5], (d_state, d_model)) * sb).astype(dtype),
+    )
+
+
+def rglru_state_init(batch: int, d_state_local: int, width: int = 4,
+                     dtype=jnp.float32) -> RGLRUState:
+    return RGLRUState(
+        h=jnp.zeros((batch, d_state_local), dtype),
+        conv=jnp.zeros((batch, width - 1, d_state_local), dtype),
+    )

@@ -1,0 +1,236 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892) — attention-free,
+data-dependent decay.
+
+Time-mix (per head, state S ∈ R^{hd×hd}):
+
+    w_t = exp(−exp(w_base + tanh(x̃_t A_w) B_w))      (data-dependent decay)
+    S_t = diag(w_t) S_{t−1} + k_tᵀ v_t
+    o_t = r_t · (S_{t−1} + diag(u) k_tᵀ v_t)
+
+Channel-mix:  k = relu(x̃ W_k)²;  out = σ(x̃ W_r) ⊙ (k W_v).
+
+Token shift (x̃ = lerp(x_t, x_{t−1}, μ)) follows Finch; we keep the
+per-projection learned μ and implement the LoRA refinement for the decay
+(the signature "data-dependent" part) only — documented simplification.
+
+Sharding: heads over the ``heads`` sub-axis (channel-mix d_ff over the
+full model axis); the recurrence is head-diagonal ⇒ no comm.  The paper's
+ClusterFusion dataflow is inapplicable here (no QKV/KV-cache structure —
+see DESIGN.md §4); the fused Pallas recurrence kernel lives in
+``kernels/rwkv6_scan``.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.ctx import ParallelCtx
+from repro.models.layers import FFNParams
+
+
+class RWKV6Params(NamedTuple):
+    """Local shapes: h_loc heads of dim hd (D_loc = h_loc·hd).
+
+    mu [5, D] token-shift lerp weights (r,k,v,w,g);
+    w_r/w_k/w_v/w_g [D, D_loc]; w_out [D_loc, D];
+    w_base [D_loc]; lora_a [D, lora]; lora_b [lora, D_loc]; u [D_loc].
+    Channel-mix: mu_c [2, D]; cm_k [D, F_loc]; cm_v [F_loc, D]; cm_r [D, D].
+    """
+
+    mu: jax.Array
+    w_r: jax.Array
+    w_k: jax.Array
+    w_v: jax.Array
+    w_g: jax.Array
+    w_out: jax.Array
+    w_base: jax.Array
+    lora_a: jax.Array
+    lora_b: jax.Array
+    u: jax.Array
+    ln_scale: jax.Array          # group-norm scale over heads
+    mu_c: jax.Array
+    cm_k: jax.Array
+    cm_v: jax.Array
+    cm_r: jax.Array
+
+
+class RWKV6State(NamedTuple):
+    s: jax.Array                 # [B, h_loc, hd, hd] wkv state
+    x_prev_t: jax.Array          # [B, D] last input (time-mix shift)
+    x_prev_c: jax.Array          # [B, D] last input (channel-mix shift)
+
+
+def _shift(x: jax.Array, x0: Optional[jax.Array] = None) -> jax.Array:
+    """x_{t−1} along the sequence axis.  x: [B, S, D]."""
+    pad = jnp.zeros_like(x[:, :1]) if x0 is None else x0[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _decay(p: RWKV6Params, xw: jax.Array) -> jax.Array:
+    """Data-dependent per-channel decay in (0,1): exp(−exp(·))."""
+    delta = jnp.tanh(xw.astype(jnp.float32) @ p.lora_a.astype(jnp.float32)) \
+        @ p.lora_b.astype(jnp.float32)
+    return jnp.exp(-jnp.exp(p.w_base.astype(jnp.float32) + delta))
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """Sequential WKV recurrence (the jnp oracle for the Pallas kernel).
+
+    r/k/v: [B, S, H, hd]; w: [B, S, H, hd]; u: [H, hd]; s0: [B, H, hd, hd].
+    Returns (o [B, S, H, hd], s_final).
+    """
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                       # [B, H, hd]
+        kv = k_t[..., :, None] * v_t[..., None, :]     # [B,H,hd,hd]
+        o_t = jnp.einsum("bhi,bhij->bhj", r_t,
+                         s + u[..., :, None] * kv)
+        s_new = w_t[..., :, None] * s + kv
+        return s_new, o_t
+
+    rs, ks_, vs, ws = (jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    s_fin, os_ = lax.scan(step, s0, (rs, ks_, vs, ws))
+    return jnp.moveaxis(os_, 0, 1), s_fin
+
+
+def rwkv6_time_mix(ctx: ParallelCtx, p: RWKV6Params, x: jax.Array,
+                   head_dim: int, state: Optional[RWKV6State] = None,
+                   ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Time-mix over a full sequence.  x: [B, S, D] → [B, S, D]."""
+    B, S, D = x.shape
+    d_loc = p.w_r.shape[1]
+    h_loc = d_loc // head_dim
+    xs = _shift(x, state.x_prev_t if state is not None else None)
+    mix = lambda i: x + p.mu[i] * (xs - x)
+    xr, xk, xv, xw, xg = (mix(i) for i in range(5))
+
+    r = (xr @ p.w_r).reshape(B, S, h_loc, head_dim).astype(jnp.float32)
+    k = (xk @ p.w_k).reshape(B, S, h_loc, head_dim).astype(jnp.float32)
+    v = (xv @ p.w_v).reshape(B, S, h_loc, head_dim).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p.w_g)
+    w = _decay(p, xw).reshape(B, S, h_loc, head_dim)
+    u = p.u.astype(jnp.float32).reshape(h_loc, head_dim)
+
+    s0 = (jnp.zeros((B, h_loc, head_dim, head_dim), jnp.float32)
+          if state is None else state.s.astype(jnp.float32))
+    o, s_fin = _wkv_scan(r, k, v, w, u, s0)
+
+    # per-head group norm (Finch)
+    o = o.reshape(B, S, h_loc, head_dim)
+    mean = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.var(o, axis=-1, keepdims=True)
+    o = (o - mean) * lax.rsqrt(var + 1e-5)
+    o = (o * p.ln_scale.reshape(h_loc, head_dim)).reshape(B, S, d_loc)
+
+    y = ((o.astype(x.dtype) * g) @ p.w_out)
+    return ctx.psum_heads(y), s_fin
+
+
+def rwkv6_channel_mix(ctx: ParallelCtx, p: RWKV6Params, x: jax.Array,
+                      x_prev: Optional[jax.Array] = None) -> jax.Array:
+    xs = _shift(x, x_prev)
+    xk = x + p.mu_c[0] * (xs - x)
+    xr = x + p.mu_c[1] * (xs - x)
+    k = jnp.square(jax.nn.relu(xk @ p.cm_k))
+    y = ctx.psum_model(k @ p.cm_v)
+    return jax.nn.sigmoid(xr @ p.cm_r) * y
+
+
+def rwkv6_block(ctx: ParallelCtx, p: RWKV6Params, x: jax.Array,
+                head_dim: int, ln1: jax.Array, ln2: jax.Array,
+                eps: float) -> jax.Array:
+    """Full RWKV-6 layer (train / prefill path)."""
+    from repro.models.layers import rms_norm
+    a, _ = rwkv6_time_mix(ctx, p, rms_norm(x, ln1, eps), head_dim)
+    x = x + a
+    x = x + rwkv6_channel_mix(ctx, p, rms_norm(x, ln2, eps))
+    return x
+
+
+def rwkv6_step(ctx: ParallelCtx, p: RWKV6Params, x: jax.Array,
+               head_dim: int, state: RWKV6State
+               ) -> Tuple[jax.Array, jax.Array, RWKV6State]:
+    """Single decode step of the time-mix.  x: [B, D].
+
+    Returns (time_mix_out, channel-mix closure input, new state).  The
+    caller composes with norms/residuals (see transformer.py).
+    """
+    B, D = x.shape
+    d_loc = p.w_r.shape[1]
+    h_loc = d_loc // head_dim
+    xs = state.x_prev_t
+    mix = lambda i: x + p.mu[i] * (xs - x)
+    xr, xk, xv, xw, xg = (mix(i) for i in range(5))
+    r = (xr @ p.w_r).reshape(B, h_loc, head_dim).astype(jnp.float32)
+    k = (xk @ p.w_k).reshape(B, h_loc, head_dim).astype(jnp.float32)
+    v = (xv @ p.w_v).reshape(B, h_loc, head_dim).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p.w_g)
+    w = _decay(p, xw).reshape(B, h_loc, head_dim)
+    u = p.u.astype(jnp.float32).reshape(h_loc, head_dim)
+
+    s = state.s.astype(jnp.float32)
+    kv = k[..., :, None] * v[..., None, :]
+    o = jnp.einsum("bhi,bhij->bhj", r, s + u[..., :, None] * kv)
+    s_new = w[..., :, None] * s + kv
+
+    o = o.reshape(B, h_loc, head_dim)
+    mean = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.var(o, axis=-1, keepdims=True)
+    o = (o - mean) * lax.rsqrt(var + 1e-5)
+    o = (o * p.ln_scale.reshape(h_loc, head_dim)).reshape(B, d_loc)
+    y = ctx.psum_heads((o.astype(x.dtype) * g) @ p.w_out)
+    new_state = RWKV6State(s=s_new.astype(state.s.dtype), x_prev_t=x,
+                           x_prev_c=state.x_prev_c)
+    return y, x, new_state
+
+
+def rwkv6_channel_step(ctx: ParallelCtx, p: RWKV6Params, x: jax.Array,
+                       state: RWKV6State) -> Tuple[jax.Array, RWKV6State]:
+    xs = state.x_prev_c
+    xk = x + p.mu_c[0] * (xs - x)
+    xr = x + p.mu_c[1] * (xs - x)
+    k = jnp.square(jax.nn.relu(xk @ p.cm_k))
+    y = ctx.psum_model(k @ p.cm_v)
+    y = jax.nn.sigmoid(xr @ p.cm_r) * y
+    return y, state._replace(x_prev_c=x)
+
+
+def rwkv6_init(key, d_model: int, head_dim: int, heads_sub: int,
+               n_heads: int, d_ff: int, model_size: int, lora: int = 32,
+               dtype=jnp.bfloat16) -> RWKV6Params:
+    h_loc = max(1, n_heads // heads_sub)
+    d_loc = h_loc * head_dim
+    f_loc = max(1, d_ff // model_size)
+    ks = jax.random.split(key, 12)
+    s = 1.0 / math.sqrt(d_model)
+    return RWKV6Params(
+        mu=(jax.random.uniform(ks[0], (5, d_model))).astype(dtype),
+        w_r=(jax.random.normal(ks[1], (d_model, d_loc)) * s).astype(dtype),
+        w_k=(jax.random.normal(ks[2], (d_model, d_loc)) * s).astype(dtype),
+        w_v=(jax.random.normal(ks[3], (d_model, d_loc)) * s).astype(dtype),
+        w_g=(jax.random.normal(ks[4], (d_model, d_loc)) * s).astype(dtype),
+        w_out=(jax.random.normal(ks[5], (d_loc, d_model))
+               * (1.0 / math.sqrt(d_loc * heads_sub))).astype(dtype),
+        w_base=(jnp.zeros((d_loc,)) - 0.5).astype(jnp.float32),
+        lora_a=(jax.random.normal(ks[6], (d_model, lora)) * s).astype(dtype),
+        lora_b=(jax.random.normal(ks[7], (lora, d_loc)) * 0.01).astype(dtype),
+        u=(jax.random.normal(ks[8], (d_loc,)) * 0.1).astype(jnp.float32),
+        ln_scale=jnp.ones((d_loc,), jnp.float32),
+        mu_c=(jax.random.uniform(ks[9], (2, d_model))).astype(dtype),
+        cm_k=(jax.random.normal(ks[10], (d_model, f_loc)) * s).astype(dtype),
+        cm_v=(jax.random.normal(ks[11], (f_loc, d_model))
+              * (1.0 / math.sqrt(f_loc))).astype(dtype),
+        cm_r=(jax.random.normal(ks[0], (d_model, d_model)) * s).astype(dtype),
+    )
+
+
+def rwkv6_state_init(batch: int, n_heads_local: int, head_dim: int,
+                     d_model: int, dtype=jnp.float32) -> RWKV6State:
+    return RWKV6State(
+        s=jnp.zeros((batch, n_heads_local, head_dim, head_dim), dtype),
+        x_prev_t=jnp.zeros((batch, d_model), jnp.bfloat16),
+        x_prev_c=jnp.zeros((batch, d_model), jnp.bfloat16),
+    )

@@ -1,0 +1,883 @@
+"""Model assembly: logical init → device-major layout → scanned forward.
+
+Parameter story (see DESIGN.md §5):
+
+* ``init_logical`` builds the *published* architecture's tensors (e.g.
+  ``wq [D, n_heads, head_dim]``) — this is what checkpoints store and what
+  the single-device oracle consumes.
+* ``to_device_major`` re-lays every tensor out as ``[model_size, *local]``
+  (device-major), optionally stacked ``[n_groups, model_size, *local]`` for
+  the scanned layer groups.  The shard_map in_spec is then uniformly
+  ``P("model", …)`` / ``P(None, "model", …)`` — sub-axis factorisations
+  (heads × cluster) and GQA KV replication are all resolved at layout
+  time by pure reshape/transpose/repeat, so a jitted init with
+  ``out_shardings`` distributes correctly at any scale.
+* Model code receives LOCAL params (leading device dim stripped).
+
+Layer groups: the block pattern (period P) is scanned over
+``n_layers // P`` groups with remat; remainder layers run unrolled.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import (ATTN_GLOBAL, ATTN_LOCAL, RECURRENT, RWKV6,
+                                ModelConfig)
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.attention import AttnParams, MLAAttnParams
+from repro.models.ctx import ParallelCtx, pick_heads_sub
+from repro.models.layers import (EmbedParams, FFNParams, embed_lookup,
+                                 ffn_apply, lm_head_logits, padded_vocab,
+                                 rms_norm, softcap, vocab_parallel_xent)
+from repro.models.moe import MoEParams
+from repro.models.rglru import RGLRUParams
+from repro.models.rwkv6 import RWKV6Params
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class Layout:
+    """Device-major layout parameters for one model axis."""
+
+    model_size: int = 1
+
+    @property
+    def heads_sub(self) -> int:
+        return self._heads_sub
+
+    def __init__(self, model_size: int = 1, heads_sub: int = 0):
+        object.__setattr__(self, "model_size", model_size)
+        object.__setattr__(self, "_heads_sub", heads_sub or model_size)
+
+    @property
+    def cluster(self) -> int:
+        return self.model_size // self._heads_sub
+
+
+def layout_for(cfg: ModelConfig, model_size: int) -> Layout:
+    return Layout(model_size, pick_heads_sub(cfg.n_heads, cfg.n_kv_heads,
+                                             model_size))
+
+
+# ===========================================================================
+# Logical init
+# ===========================================================================
+def _norm(d):
+    return jnp.zeros((d,), jnp.float32)
+
+
+def _dense(key, shape, scale, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def init_logical_block(key, cfg: ModelConfig, kind: str,
+                       dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """One layer's logical parameters."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 8)
+    blk: Dict[str, Any] = {"ln1": _norm(d), "ln2": _norm(d)}
+    if cfg.use_post_norm:
+        blk["post_ln1"] = _norm(d)
+        blk["post_ln2"] = _norm(d)
+    s_in = 1.0 / math.sqrt(d)
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        if cfg.mla is not None:
+            m = cfg.mla
+            hr = m.nope_head_dim + m.rope_head_dim
+            blk["attn"] = MLAAttnParams(
+                wq=_dense(ks[0], (d, cfg.n_heads, hr), s_in, dtype),
+                wdkv=_dense(ks[1], (d, m.kv_lora_rank + m.rope_head_dim),
+                            s_in, dtype),
+                wuk=_dense(ks[2], (cfg.n_heads, m.nope_head_dim,
+                                   m.kv_lora_rank), 0.05, dtype),
+                wuv=_dense(ks[3], (cfg.n_heads, m.kv_lora_rank,
+                                   m.v_head_dim), 0.05, dtype),
+                wo=_dense(ks[4], (cfg.n_heads * m.v_head_dim, d),
+                          1.0 / math.sqrt(cfg.n_heads * m.v_head_dim), dtype),
+            )
+        else:
+            bias = cfg.qkv_bias
+            blk["attn"] = AttnParams(
+                wq=_dense(ks[0], (d, cfg.n_heads, hd), s_in, dtype),
+                wk=_dense(ks[1], (d, cfg.n_kv_heads, hd), s_in, dtype),
+                wv=_dense(ks[2], (d, cfg.n_kv_heads, hd), s_in, dtype),
+                wo=_dense(ks[3], (cfg.n_heads * hd, d),
+                          1.0 / math.sqrt(cfg.n_heads * hd), dtype),
+                bq=jnp.zeros((cfg.n_heads, hd), dtype) if bias else None,
+                bk=jnp.zeros((cfg.n_kv_heads, hd), dtype) if bias else None,
+                bv=jnp.zeros((cfg.n_kv_heads, hd), dtype) if bias else None,
+            )
+    elif kind == RECURRENT:
+        ds = cfg.rglru_d_state or d
+        blk["rglru"] = rglru_mod.rglru_init(ks[0], d, ds,
+                                            n_blocks=cfg.n_heads,
+                                            width=cfg.conv1d_width,
+                                            dtype=dtype)
+    elif kind == RWKV6:
+        blk["rwkv"] = rwkv_mod.rwkv6_init(
+            ks[0], d, cfg.rwkv_head_dim, heads_sub=1,
+            n_heads=d // cfg.rwkv_head_dim, d_ff=cfg.d_ff, model_size=1,
+            dtype=dtype)
+        return blk                               # rwkv owns both sub-layers
+    # FFN / MoE (not for RWKV which has its own channel-mix)
+    if cfg.moe is not None and kind != RECURRENT:
+        blk["ffn"] = moe_mod.moe_init(ks[5], d, cfg.moe, n_shards=1,
+                                      gated=cfg.ffn_gated, dtype=dtype)
+    else:
+        from repro.models.layers import ffn_init
+        blk["ffn"] = ffn_init(ks[5], d, cfg.d_ff, cfg.ffn_gated, dtype)
+    return blk
+
+
+def init_logical_encoder_block(key, cfg: ModelConfig,
+                               dtype=jnp.bfloat16) -> Dict[str, Any]:
+    e = cfg.encoder
+    d = cfg.d_model
+    hd = d // e.n_heads
+    ks = jax.random.split(key, 6)
+    s_in = 1.0 / math.sqrt(d)
+    from repro.models.layers import ffn_init
+    return {
+        "ln1": _norm(d), "ln2": _norm(d),
+        "attn": AttnParams(
+            wq=_dense(ks[0], (d, e.n_heads, hd), s_in, dtype),
+            wk=_dense(ks[1], (d, e.n_kv_heads, hd), s_in, dtype),
+            wv=_dense(ks[2], (d, e.n_kv_heads, hd), s_in, dtype),
+            wo=_dense(ks[3], (e.n_heads * hd, d),
+                      1.0 / math.sqrt(e.n_heads * hd), dtype),
+        ),
+        "ffn": ffn_init(ks[4], d, e.d_ff, cfg.ffn_gated, dtype),
+    }
+
+
+def init_logical(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Full logical parameter tree (published shapes)."""
+    d = cfg.d_model
+    kinds = cfg.layer_kinds
+    period = len(cfg.block_pattern)
+    n_groups = cfg.n_layers // period
+    n_tail = cfg.n_layers - n_groups * period
+    keys = jax.random.split(key, cfg.n_layers + 8)
+
+    blocks: List[Any] = []
+    for p in range(period):
+        # stack group params for scan: leaves [n_groups, ...]
+        per_group = [init_logical_block(keys[g * period + p], cfg, kinds[p],
+                                        dtype) for g in range(n_groups)]
+        blocks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_group))
+    tail = [init_logical_block(keys[n_groups * period + t], cfg,
+                               kinds[n_groups * period + t], dtype)
+            for t in range(n_tail)]
+
+    kb = keys[cfg.n_layers:]
+    params: Dict[str, Any] = {
+        "embed": _dense(kb[0], (padded_vocab(cfg.vocab_size, 1), d), 0.02,
+                        dtype),
+        "final_norm": _norm(d),
+        "blocks": blocks,
+        "tail": tail,
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense(kb[1], (padded_vocab(cfg.vocab_size, 1), d),
+                                   1.0 / math.sqrt(d), dtype)
+    if cfg.frontend is not None:
+        params["frontend_proj"] = _dense(
+            kb[2], (cfg.frontend.feature_dim, d),
+            1.0 / math.sqrt(cfg.frontend.feature_dim), dtype)
+    if cfg.encoder is not None:
+        enc_keys = jax.random.split(kb[3], cfg.encoder.n_layers)
+        per = [init_logical_encoder_block(k, cfg, dtype) for k in enc_keys]
+        params["encoder"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+        params["enc_final_norm"] = _norm(d)
+        # decoder cross-attention (one per decoder layer, stacked)
+        ca_keys = jax.random.split(kb[4], cfg.n_layers)
+        hd = cfg.resolved_head_dim
+        s_in = 1.0 / math.sqrt(d)
+        per_ca = [{
+            "ln": _norm(d),
+            "attn": AttnParams(
+                wq=_dense(jax.random.fold_in(k, 0), (d, cfg.n_heads, hd),
+                          s_in, dtype),
+                wk=_dense(jax.random.fold_in(k, 1), (d, cfg.n_kv_heads, hd),
+                          s_in, dtype),
+                wv=_dense(jax.random.fold_in(k, 2), (d, cfg.n_kv_heads, hd),
+                          s_in, dtype),
+                wo=_dense(jax.random.fold_in(k, 3), (cfg.n_heads * hd, d),
+                          1.0 / math.sqrt(cfg.n_heads * hd), dtype),
+            )} for k in ca_keys]
+        params["cross_attn"] = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                            *per_ca)
+    return params
+
+
+# ===========================================================================
+# Device-major layout (logical → [model_size, *local])
+# ===========================================================================
+def _dm_replicate(x, ms):
+    return jnp.broadcast_to(x[None], (ms,) + x.shape)
+
+
+def _dm_split(x, ms, axis):
+    """Split ``axis`` into ms shards → leading device dim."""
+    n = x.shape[axis]
+    assert n % ms == 0, (x.shape, ms, axis)
+    shaped = x.reshape(x.shape[:axis] + (ms, n // ms) + x.shape[axis + 1:])
+    return jnp.moveaxis(shaped, axis, 0)
+
+
+def _dm_heads(x, lay: Layout, head_axis: int, hd_axis: Optional[int],
+              n_kv_repl: int = 1):
+    """Shard ``head_axis`` over heads_sub (with optional replication for
+    GQA KV) and ``hd_axis`` over cluster; device order = heads-major."""
+    hs, cl, ms = lay.heads_sub, lay.cluster, lay.model_size
+    if n_kv_repl > 1:
+        x = jnp.repeat(x, n_kv_repl, axis=head_axis)
+    nh = x.shape[head_axis]
+    x = x.reshape(x.shape[:head_axis] + (hs, nh // hs)
+                  + x.shape[head_axis + 1:])
+    x = jnp.moveaxis(x, head_axis, 0)                    # [hs, ...]
+    if hd_axis is not None:
+        a = hd_axis + 1                                  # one new dim, front
+        hdn = x.shape[a]
+        x = x.reshape(x.shape[:a] + (cl, hdn // cl) + x.shape[a + 1:])
+        x = jnp.moveaxis(x, a, 1)                        # [hs, cl, ...]
+    else:
+        x = jnp.broadcast_to(x[:, None], (hs, cl) + x.shape[1:])
+    return x.reshape((ms,) + x.shape[2:])
+
+
+def _layout_attn(a: AttnParams, cfg: ModelConfig, lay: Layout) -> AttnParams:
+    hs = lay.heads_sub
+    kv_repl = max(1, hs // cfg.n_kv_heads)
+    d = cfg.d_model
+    hd = a.wq.shape[-1]
+    nh = a.wq.shape[1]
+    wo = a.wo.reshape(nh, hd, d)
+    return AttnParams(
+        wq=_dm_heads(a.wq, lay, head_axis=1, hd_axis=2),
+        wk=_dm_heads(a.wk, lay, head_axis=1, hd_axis=2, n_kv_repl=kv_repl),
+        wv=_dm_heads(a.wv, lay, head_axis=1, hd_axis=2, n_kv_repl=kv_repl),
+        # wo rows sharded by head over heads_sub, replicated over cluster
+        wo=_dm_heads(wo, lay, head_axis=0, hd_axis=None).reshape(
+            lay.model_size, (nh // hs) * hd, d),
+        bq=None if a.bq is None else _dm_heads(a.bq, lay, 0, 1),
+        bk=None if a.bk is None else _dm_heads(a.bk, lay, 0, 1,
+                                               n_kv_repl=kv_repl),
+        bv=None if a.bv is None else _dm_heads(a.bv, lay, 0, 1,
+                                               n_kv_repl=kv_repl),
+    )
+
+
+def _layout_mla(a: MLAAttnParams, cfg: ModelConfig, lay: Layout
+                ) -> MLAAttnParams:
+    ms, hs, cl = lay.model_size, lay.heads_sub, lay.cluster
+    m = cfg.mla
+    nh = cfg.n_heads
+    d = cfg.d_model
+    wo = a.wo.reshape(nh, m.v_head_dim, d)
+    # wdkv: cluster-sharded cols, replicated across heads groups
+    wdkv = _dm_split(a.wdkv, cl, axis=1)                 # [cl, D, seg]
+    wdkv = jnp.broadcast_to(wdkv[None], (hs,) + wdkv.shape).reshape(
+        (ms,) + wdkv.shape[1:])
+    return MLAAttnParams(
+        wq=_dm_heads(a.wq, lay, head_axis=1, hd_axis=2),
+        wdkv=wdkv,
+        wuk=_dm_heads(a.wuk, lay, head_axis=0, hd_axis=None),
+        wuv=_dm_heads(a.wuv, lay, head_axis=0, hd_axis=None),
+        wo=_dm_heads(wo, lay, head_axis=0, hd_axis=None).reshape(
+            ms, (nh // hs) * m.v_head_dim, d),
+    )
+
+
+def _layout_ffn(f: FFNParams, lay: Layout) -> FFNParams:
+    ms = lay.model_size
+    return FFNParams(
+        w_in=_dm_split(f.w_in, ms, axis=1),
+        w_out=_dm_split(f.w_out, ms, axis=0),
+        w_gate=None if f.w_gate is None else _dm_split(f.w_gate, ms, axis=1),
+    )
+
+
+def _layout_moe(p: MoEParams, lay: Layout) -> MoEParams:
+    ms = lay.model_size
+    return MoEParams(
+        router=_dm_replicate(p.router, ms),
+        w_in=_dm_split(p.w_in, ms, axis=0),
+        w_out=_dm_split(p.w_out, ms, axis=0),
+        w_gate=None if p.w_gate is None else _dm_split(p.w_gate, ms, axis=0),
+        dense=None if p.dense is None else _layout_ffn(p.dense, lay),
+    )
+
+
+def _layout_rglru(p: RGLRUParams, lay: Layout) -> RGLRUParams:
+    """Gate blocks (= heads) distribute whole over the model axis; all other
+    tensors shard on the d_state channel dim (block-major ⇒ consistent)."""
+    ms = lay.model_size
+    return RGLRUParams(
+        w_x=_dm_split(p.w_x, ms, 1), w_gate=_dm_split(p.w_gate, ms, 1),
+        conv_w=_dm_split(p.conv_w, ms, 1), conv_b=_dm_split(p.conv_b, ms, 0),
+        w_r=_dm_split(p.w_r, ms, 0),
+        b_r=_dm_split(p.b_r, ms, 0),
+        w_i=_dm_split(p.w_i, ms, 0),
+        b_i=_dm_split(p.b_i, ms, 0),
+        lam=_dm_split(p.lam, ms, 0),
+        w_out=_dm_split(p.w_out, ms, 0),
+    )
+
+
+def _layout_rwkv(p: RWKV6Params, cfg: ModelConfig, lay: Layout) -> RWKV6Params:
+    ms, hs = lay.model_size, lay.heads_sub
+    hd = cfg.rwkv_head_dim
+    nh = cfg.d_model // hd
+
+    def by_head_cols(w):                         # [D, D_all] cols by head
+        x = w.reshape(w.shape[0], nh, hd)
+        return _dm_heads(x, lay, head_axis=1, hd_axis=None).reshape(
+            ms, w.shape[0], (nh // hs) * hd)
+
+    def by_head_vec(v):                          # [D_all] by head
+        x = v.reshape(nh, hd)
+        return _dm_heads(x, lay, head_axis=0, hd_axis=None).reshape(ms, -1)
+
+    w_out = p.w_out.reshape(nh, hd, cfg.d_model)
+    return RWKV6Params(
+        mu=_dm_replicate(p.mu, ms),
+        w_r=by_head_cols(p.w_r), w_k=by_head_cols(p.w_k),
+        w_v=by_head_cols(p.w_v), w_g=by_head_cols(p.w_g),
+        w_out=_dm_heads(w_out, lay, head_axis=0, hd_axis=None).reshape(
+            ms, (nh // hs) * hd, cfg.d_model),
+        w_base=by_head_vec(p.w_base),
+        lora_a=_dm_replicate(p.lora_a, ms),
+        lora_b=by_head_cols(p.lora_b.reshape(p.lora_a.shape[1], -1)
+                            if p.lora_b.ndim == 2 else p.lora_b),
+        u=by_head_vec(p.u),
+        ln_scale=by_head_vec(p.ln_scale),
+        mu_c=_dm_replicate(p.mu_c, ms),
+        cm_k=_dm_split(p.cm_k, ms, 1),
+        cm_v=_dm_split(p.cm_v, ms, 0),
+        cm_r=_dm_replicate(p.cm_r, ms),
+    )
+
+
+def _layout_block(blk: Dict[str, Any], cfg: ModelConfig, lay: Layout,
+                  encoder: bool = False) -> Dict[str, Any]:
+    ms = lay.model_size
+    out: Dict[str, Any] = {}
+    for name, val in blk.items():
+        if name.startswith("ln") or name.startswith("post_ln"):
+            out[name] = _dm_replicate(val, ms)
+        elif name == "attn":
+            if isinstance(val, MLAAttnParams):
+                out[name] = _layout_mla(val, cfg, lay)
+            elif encoder:
+                # encoder shares the decoder's (heads_sub × cluster)
+                # factoring — runtime ctx is one per model
+                e = cfg.encoder
+                assert e.n_heads % lay.heads_sub == 0, (e.n_heads, lay)
+                kv_repl = max(1, lay.heads_sub // e.n_kv_heads)
+                out[name] = AttnParams(
+                    wq=_dm_heads(val.wq, lay, 1, 2),
+                    wk=_dm_heads(val.wk, lay, 1, 2, n_kv_repl=kv_repl),
+                    wv=_dm_heads(val.wv, lay, 1, 2, n_kv_repl=kv_repl),
+                    wo=_dm_heads(val.wo.reshape(e.n_heads, -1, cfg.d_model),
+                                 lay, 0, None).reshape(
+                        ms, (e.n_heads // lay.heads_sub) * val.wq.shape[-1],
+                        cfg.d_model),
+                )
+            else:
+                out[name] = _layout_attn(val, cfg, lay)
+        elif name == "rglru":
+            out[name] = _layout_rglru(val, lay)
+        elif name == "rwkv":
+            out[name] = _layout_rwkv(val, cfg, lay)
+        elif name == "ffn":
+            out[name] = (_layout_moe(val, lay) if isinstance(val, MoEParams)
+                         else _layout_ffn(val, lay))
+        elif name == "ln":
+            out[name] = _dm_replicate(val, ms)
+        else:
+            raise KeyError(name)
+    return out
+
+
+def to_device_major(cfg: ModelConfig, lay: Layout, logical: Dict[str, Any]
+                    ) -> Dict[str, Any]:
+    ms = lay.model_size
+    out: Dict[str, Any] = {}
+    vmap_blk = lambda blk, enc=False: jax.vmap(
+        lambda b: _layout_block(b, cfg, lay, enc), in_axes=0, out_axes=1
+    )(blk)
+    out["blocks"] = [vmap_blk(b) for b in logical["blocks"]]
+    out["tail"] = [_layout_block(b, cfg, lay) for b in logical["tail"]]
+    v_pad = padded_vocab(cfg.vocab_size, ms)
+    emb = logical["embed"]
+    if emb.shape[0] < v_pad:
+        emb = jnp.pad(emb, ((0, v_pad - emb.shape[0]), (0, 0)))
+    out["embed"] = _dm_split(emb, ms, 0)
+    out["final_norm"] = _dm_replicate(logical["final_norm"], ms)
+    if "lm_head" in logical:
+        lm = logical["lm_head"]
+        if lm.shape[0] < v_pad:
+            lm = jnp.pad(lm, ((0, v_pad - lm.shape[0]), (0, 0)))
+        out["lm_head"] = _dm_split(lm, ms, 0)
+    if "frontend_proj" in logical:
+        out["frontend_proj"] = _dm_replicate(logical["frontend_proj"], ms)
+    if "encoder" in logical:
+        out["encoder"] = vmap_blk(logical["encoder"], enc=True)
+        out["enc_final_norm"] = _dm_replicate(logical["enc_final_norm"], ms)
+        out["cross_attn"] = vmap_blk(logical["cross_attn"])
+    return out
+
+
+def init_device_major(cfg: ModelConfig, lay: Layout, key,
+                      dtype=jnp.bfloat16) -> Dict[str, Any]:
+    return to_device_major(cfg, lay, init_logical(cfg, key, dtype))
+
+
+# ===========================================================================
+# Sharding specs for the device-major tree
+# ===========================================================================
+def param_specs(cfg: ModelConfig, params: PyTree, model_axis: str = "model"):
+    """PartitionSpec tree — every leaf is device-major: [model, …]
+    (scanned-group leaves are [model, n_groups, …])."""
+    from jax.sharding import PartitionSpec as P
+    return jax.tree.map(
+        lambda leaf: P(model_axis, *([None] * (leaf.ndim - 1))), params)
+
+
+def unwrap_local(params: PyTree) -> PyTree:
+    """Strip the (sharded-to-1) device dim inside shard_map bodies."""
+    return jax.tree.map(lambda leaf: leaf[0], params)
+
+
+# ===========================================================================
+# Forward (train / prefill)
+# ===========================================================================
+def apply_block(ctx: ParallelCtx, cfg: ModelConfig, kind: str,
+                blk: Dict[str, Any], x: jax.Array, *,
+                causal: bool = True, return_kv: bool = False,
+                enc_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+                cross_blk: Optional[Dict[str, Any]] = None):
+    eps = cfg.norm_eps
+    kv = None
+    if kind == RWKV6:
+        p: RWKV6Params = blk["rwkv"]
+        a, _ = rwkv_mod.rwkv6_time_mix(ctx, p, rms_norm(x, blk["ln1"], eps),
+                                       cfg.rwkv_head_dim)
+        x = x + a
+        c = rwkv_mod.rwkv6_channel_mix(ctx, p, rms_norm(x, blk["ln2"], eps))
+        return x + c, kv
+    if kind == RECURRENT:
+        a = rglru_mod.rglru_block(ctx, blk["rglru"],
+                                  rms_norm(x, blk["ln1"], eps))
+    elif cfg.mla is not None:
+        a, kv = attn_mod.mla_attention_train(
+            ctx, blk["attn"], rms_norm(x, blk["ln1"], eps), cfg,
+            return_kv=return_kv)
+    else:
+        a, kv = attn_mod.attention_train(
+            ctx, blk["attn"], rms_norm(x, blk["ln1"], eps), cfg, kind,
+            return_kv=return_kv)
+    if "post_ln1" in blk:
+        a = rms_norm(a, blk["post_ln1"], eps)
+    x = x + a
+    if cross_blk is not None and enc_kv is not None:
+        ca = cross_attention(ctx, cross_blk["attn"],
+                             rms_norm(x, cross_blk["ln"], eps), enc_kv, cfg)
+        x = x + ca
+    h = rms_norm(x, blk["ln2"], eps)
+    f = (moe_mod.moe_apply(ctx, blk["ffn"], h, cfg.ffn_act, cfg.moe)
+         if isinstance(blk["ffn"], MoEParams)
+         else ffn_apply(ctx, blk["ffn"], h, cfg.ffn_act))
+    if "post_ln2" in blk:
+        f = rms_norm(f, blk["post_ln2"], eps)
+    return x + f, kv
+
+
+def cross_attention(ctx: ParallelCtx, p: AttnParams, x: jax.Array,
+                    enc_out: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Decoder cross-attention; K/V projected from the encoder output."""
+    B, S, D = x.shape
+    n = ctx.cluster_size
+    q_loc, hd_seg = p.wq.shape[1], p.wq.shape[2]
+    kv_loc = p.wk.shape[1]
+    hd = hd_seg * n
+    qpk = q_loc // kv_loc
+    q = jnp.einsum("bsd,dqh->bsqh", x, p.wq)
+    k = jnp.einsum("bpd,dkh->bpkh", enc_out, p.wk)
+    v = jnp.einsum("bpd,dkh->bpkh", enc_out, p.wv)
+    q = ctx.gather_cluster(q, axis=3)
+    k = ctx.gather_cluster(k, axis=3)
+    v = ctx.gather_cluster(v, axis=3)
+    if n > 1:
+        s_blk = S // n
+        q_off = ctx.cluster_index() * s_blk
+        q = lax.dynamic_slice_in_dim(q, q_off, s_blk, axis=1)
+    else:
+        s_blk = S
+    qg = q.reshape(B, s_blk, kv_loc, qpk, hd)
+    out = attn_mod._flash(qg, k, v, q_offset=0, causal=False, window=0,
+                          cap=0.0, scale=1.0 / math.sqrt(hd))
+    y = out.reshape(B, s_blk, q_loc * hd) @ p.wo
+    y = ctx.psum_heads(y)
+    if n > 1:
+        y = ctx.gather_cluster(y, axis=1)
+    return y
+
+
+def _enc_view(cfg: ModelConfig) -> ModelConfig:
+    """Config view for encoder blocks (bidirectional, no softcaps)."""
+    import dataclasses
+    e = cfg.encoder
+    return dataclasses.replace(cfg, n_heads=e.n_heads, n_kv_heads=e.n_kv_heads,
+                               attn_softcap=0.0, qkv_bias=False, mla=None,
+                               head_dim=cfg.d_model // e.n_heads)
+
+
+def encode(ctx: ParallelCtx, cfg: ModelConfig, params: Dict[str, Any],
+           frontend_embeds: jax.Array, *, remat: bool = True,
+           fsdp=None) -> jax.Array:
+    """Encoder stack over (stub-)frontend embeddings → [B, P, D]."""
+    x = frontend_embeds.astype(params["frontend_proj"].dtype) \
+        @ params["frontend_proj"]
+    ecfg = _enc_view(cfg)
+
+    def enc_body(h, blk):
+        if fsdp is not None:
+            ax, dpa = fsdp
+            blk = fsdp_gather(blk, ax["encoder"], dpa, in_scan=True)
+        a, _ = attn_mod.attention_train(
+            ctx, blk["attn"], rms_norm(h, blk["ln1"], cfg.norm_eps),
+            ecfg, ATTN_GLOBAL, causal=False)
+        h = h + a
+        f = ffn_apply(ctx, blk["ffn"], rms_norm(h, blk["ln2"], cfg.norm_eps),
+                      cfg.ffn_act)
+        return h + f, None
+
+    body = _remat(enc_body) if remat else enc_body
+    x, _ = lax.scan(body, x, params["encoder"])
+    return rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _remat(fn):
+    return jax.checkpoint(fn,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+
+
+def forward(ctx: ParallelCtx, cfg: ModelConfig, params: Dict[str, Any],
+            tokens: jax.Array,
+            frontend_embeds: Optional[jax.Array] = None,
+            *, remat: bool = True, fsdp=None) -> jax.Array:
+    """Token (+frontend) → final hidden states [B, S, D].
+
+    VLM: frontend embeddings replace the first ``num_positions`` token
+    embeddings.  Enc-dec: frontend feeds the encoder; decoder cross-attends.
+
+    ``fsdp=(ax_tree, dp_axes)``: scanned-group params arrive dp-sliced and
+    are all-gathered per group inside the scan (ZeRO-3); non-stacked
+    leaves must be pre-gathered by the caller (``fsdp_gather_top``).
+    """
+    kinds = cfg.layer_kinds
+    period = len(cfg.block_pattern)
+    n_groups = cfg.n_layers // period
+    x = embed_lookup(ctx, EmbedParams(params["embed"]), tokens)
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if cfg.frontend is not None and cfg.encoder is None:
+        # VLM: splice patch embeddings into the prefix
+        fe = frontend_embeds.astype(x.dtype) @ params["frontend_proj"]
+        npos = fe.shape[1]
+        x = jnp.concatenate([fe, x[:, npos:]], axis=1)
+
+    if cfg.encoder is not None:
+        enc_out = encode(ctx, cfg, params, frontend_embeds, remat=remat,
+                         fsdp=fsdp)
+
+        def group_body_cross(h, inp):
+            blks, ca = inp
+            if fsdp is not None:
+                ax, dpa = fsdp
+                blks = tuple(fsdp_gather(b, a, dpa, in_scan=True)
+                             for b, a in zip(blks, ax["blocks"]))
+                ca = fsdp_gather(ca, ax["cross_attn"], dpa, in_scan=True)
+            for p_i in range(period):
+                h, _ = apply_block(ctx, cfg, kinds[p_i], blks[p_i], h,
+                                   enc_kv=enc_out, cross_blk=ca)
+            return h, None
+
+        body = _remat(group_body_cross) if remat else group_body_cross
+        x, _ = lax.scan(body, x, (tuple(params["blocks"]),
+                                  params["cross_attn"]))
+    else:
+        def group_body(h, blks):
+            if fsdp is not None:
+                ax, dpa = fsdp
+                blks = tuple(fsdp_gather(b, a, dpa, in_scan=True)
+                             for b, a in zip(blks, ax["blocks"]))
+            for p_i in range(period):
+                h, _ = apply_block(ctx, cfg, kinds[p_i], blks[p_i], h)
+            return h, None
+
+        body = _remat(group_body) if remat else group_body
+        if params["blocks"]:
+            x, _ = lax.scan(body, x, tuple(params["blocks"]))
+    for t_i, blk in enumerate(params["tail"]):
+        x, _ = apply_block(ctx, cfg, kinds[n_groups * period + t_i], blk, x)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(ctx: ParallelCtx, cfg: ModelConfig, params: Dict[str, Any],
+            batch: Dict[str, jax.Array], *, remat: bool = True,
+            fsdp=None) -> Tuple[jax.Array, jax.Array]:
+    """Next-token loss.  batch: tokens [B,S], targets [B,S], valid [B,S]
+    (+ frontend_embeds for audio/vlm).  Returns local (sum_nll, sum_valid)."""
+    if fsdp is not None:
+        params = fsdp_gather_top(params, *fsdp)
+    h = forward(ctx, cfg, params, batch["tokens"],
+                batch.get("frontend_embeds"), remat=remat, fsdp=fsdp)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits_loc = lm_head_logits(ctx, table, h)
+    if cfg.logit_softcap:
+        logits_loc = softcap(logits_loc, cfg.logit_softcap)
+    return vocab_parallel_xent(ctx, logits_loc, batch["targets"],
+                               batch.get("valid"))
+
+
+# ===========================================================================
+# Gradient synchronization spec (Megatron's "allreduce layernorm grads",
+# generalized to the heads × cluster sub-axis layout)
+# ===========================================================================
+# A leaf whose copies are replicated over some device subgroup receives only
+# a *partial* gradient on each copy (the loss flows through each rank's own
+# path); the true gradient is the subgroup sum.  Markers:
+#   None       — fully sharded, no sync
+#   "model"    — replicated over the whole model axis
+#   "heads"    — replicated across head groups (MLA latent projection)
+#   "cluster"  — replicated across the cluster sub-axis (W_O tiles, RWKV
+#                head params, MLA up-projections)
+#   ("copies", r) — GQA KV weights replicated r× along the heads sub-axis
+_MODEL_SYNC_NAMES = frozenset({
+    "ln1", "ln2", "post_ln1", "post_ln2", "ln", "final_norm",
+    "enc_final_norm", "frontend_proj", "router", "mu", "mu_c", "lora_a",
+    "cm_r",
+})
+
+
+def _attn_sync(cfg: ModelConfig, lay: Layout, encoder: bool):
+    n_kv = cfg.encoder.n_kv_heads if encoder else cfg.n_kv_heads
+    kv_repl = max(1, lay.heads_sub // n_kv)
+    kv = ("copies", kv_repl) if kv_repl > 1 else None
+    return AttnParams(wq=None, wk=kv, wv=kv, wo="cluster",
+                      bq=None, bk=kv, bv=kv)
+
+
+def _block_sync(blk: Dict[str, Any], cfg: ModelConfig, lay: Layout,
+                encoder: bool = False) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for name, val in blk.items():
+        if name in _MODEL_SYNC_NAMES:
+            out[name] = "model"
+        elif name == "attn":
+            if isinstance(val, MLAAttnParams):
+                out[name] = MLAAttnParams(wq=None, wdkv="heads",
+                                          wuk="cluster", wuv="cluster",
+                                          wo="cluster")
+            else:
+                a = _attn_sync(cfg, lay, encoder)
+                if val.bq is None:
+                    a = a._replace(bq=None, bk=None, bv=None)
+                out[name] = a
+        elif name == "rglru":
+            out[name] = jax.tree.map(lambda _: None, val)
+        elif name == "rwkv":
+            out[name] = RWKV6Params(
+                mu="model", w_r="cluster", w_k="cluster", w_v="cluster",
+                w_g="cluster", w_out="cluster", w_base="cluster",
+                lora_a="model", lora_b="cluster", u="cluster",
+                ln_scale="cluster", mu_c="model", cm_k=None, cm_v=None,
+                cm_r="model")
+        elif name == "ffn":
+            if isinstance(val, MoEParams):
+                out[name] = MoEParams(
+                    router="model", w_in=None, w_out=None,
+                    w_gate=None if val.w_gate is not None else None,
+                    dense=None if val.dense is None
+                    else jax.tree.map(lambda _: None, val.dense))
+            else:
+                out[name] = jax.tree.map(lambda _: None, val)
+        else:
+            raise KeyError(name)
+    return out
+
+
+def grad_sync_tree(cfg: ModelConfig, lay: Layout, params: PyTree) -> PyTree:
+    """Marker tree matching ``params`` (device-major) structure."""
+    def blocks_like(blk_tree, encoder=False):
+        # markers are shape-independent: reuse the block structure
+        names = {k: v for k, v in blk_tree.items()}
+        return _block_sync(names, cfg, lay, encoder)
+
+    out: Dict[str, Any] = {}
+    for k, v in params.items():
+        if k == "blocks":
+            out[k] = [blocks_like(b) for b in v]
+        elif k == "tail":
+            out[k] = [blocks_like(b) for b in v]
+        elif k == "encoder":
+            out[k] = blocks_like(v, encoder=True)
+        elif k == "cross_attn":
+            out[k] = {"ln": "model",
+                      "attn": _attn_sync(cfg, lay, encoder=False)._replace(
+                          bq=None, bk=None, bv=None)
+                      if v["attn"].bq is None
+                      else _attn_sync(cfg, lay, encoder=False)}
+        elif k in ("embed", "lm_head"):
+            out[k] = None
+        elif k in ("final_norm", "enc_final_norm", "frontend_proj"):
+            out[k] = "model"
+        else:
+            raise KeyError(k)
+    return out
+
+
+def sync_grads(ctx: ParallelCtx, grads: PyTree, sync: PyTree) -> PyTree:
+    """Apply the subgroup psums prescribed by ``grad_sync_tree``."""
+    if ctx.model is None:
+        return grads
+    from repro.core import primitives as prim
+    from repro.core.primitives import SubAxis
+    model_name = (ctx.model.name if isinstance(ctx.model, SubAxis)
+                  else ctx.model)
+    cluster_size = ctx.cluster_size
+
+    def one(g, mark):
+        if mark is None or g is None:
+            return g
+        if mark == "model":
+            return ctx.psum_model(g)
+        if mark == "heads":
+            return prim.cluster_reduce(g, ctx.heads, "sum")
+        if mark == "cluster":
+            return (prim.cluster_reduce(g, ctx.cluster, "sum")
+                    if cluster_size > 1 else g)
+        if isinstance(mark, tuple) and mark[0] == "copies":
+            sub = SubAxis(model_name, mark[1], minor_size=cluster_size)
+            return prim.cluster_reduce(g, sub, "sum")
+        raise ValueError(mark)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(sync)
+    return treedef.unflatten([one(g, m) for g, m in zip(flat_g, flat_m)])
+
+
+# ===========================================================================
+# FSDP (ZeRO-3): params sharded over the data axes, gathered at use
+# ===========================================================================
+# fsdp_axes marks, per leaf, which LOCAL axis is sliced over data (None =
+# replicated / not sliceable).  Stacked (scanned) leaves are sliced on an
+# axis AFTER the group dim so the scan can consume groups whole; the gather
+# then happens inside the scan body — peak memory holds one group's full
+# params plus 1/dp of everything else.  jax.grad through the gather
+# produces reduce-scattered (pre-sliced, dp-summed) gradients for free.
+_STACKED_KEYS = ("blocks", "encoder", "cross_attn")
+
+
+def _fsdp_ax_of(shape, dp: int, skip: int) -> Optional[int]:
+    for ax in range(skip, len(shape)):
+        if shape[ax] >= dp and shape[ax] % dp == 0:
+            return ax
+    return None
+
+
+def fsdp_axes(params: PyTree, dp: int) -> PyTree:
+    """Axis markers relative to the unwrapped-local leaf ([G, …] for
+    stacked leaves, [...] otherwise)."""
+    out = {}
+    for k, v in params.items():
+        skip = 1 if k in _STACKED_KEYS else 0
+        out[k] = jax.tree.map(
+            lambda l, s=skip: _fsdp_ax_of(tuple(l.shape[1:]), dp, s), v)
+    return out
+
+
+def fsdp_shard_abstract(params_abs: PyTree, ax_tree: PyTree, dp: int
+                        ) -> PyTree:
+    """Shrink abstract (device-major global) leaves by the dp slice."""
+    def one(l, ax):
+        if ax is None:
+            return l
+        g_ax = ax + 1                       # global leaf has the model dim
+        shape = list(l.shape)
+        shape[g_ax] //= dp
+        return jax.ShapeDtypeStruct(tuple(shape), l.dtype)
+
+    flat, td = jax.tree.flatten(params_abs)
+    axf = td.flatten_up_to(ax_tree)
+    return td.unflatten([one(l, a) for l, a in zip(flat, axf)])
+
+
+def fsdp_param_specs(cfg: ModelConfig, params_abs: PyTree, ax_tree: PyTree,
+                     dp_axes, model_axis: str = "model") -> PyTree:
+    from jax.sharding import PartitionSpec as P
+
+    def one(l, ax):
+        entries = [model_axis] + [None] * (l.ndim - 1)
+        if ax is not None:
+            entries[ax + 1] = dp_axes
+        return P(*entries)
+
+    flat, td = jax.tree.flatten(params_abs)
+    axf = td.flatten_up_to(ax_tree)
+    return td.unflatten([one(l, a) for l, a in zip(flat, axf)])
+
+
+def fsdp_gather(tree: PyTree, ax_tree: PyTree, dp_axes, *,
+                in_scan: bool = False) -> PyTree:
+    """All-gather sliced leaves back to full local shape.  ``in_scan``:
+    the leading group dim has been consumed by the scan ⇒ axes shift −1."""
+    def one(l, ax):
+        if ax is None:
+            return l
+        a = ax - 1 if in_scan else ax
+        return lax.all_gather(l, dp_axes, axis=a, tiled=True)
+
+    flat, td = jax.tree.flatten(tree)
+    axf = td.flatten_up_to(ax_tree)
+    return td.unflatten([one(l, a) for l, a in zip(flat, axf)])
+
+
+def fsdp_slice(tree: PyTree, ax_tree: PyTree, dp: int, rank,
+               *, in_scan: bool = False) -> PyTree:
+    def one(l, ax):
+        if ax is None:
+            return l
+        a = ax - 1 if in_scan else ax
+        size = l.shape[a] // dp
+        return lax.dynamic_slice_in_dim(l, rank * size, size, axis=a)
+
+    flat, td = jax.tree.flatten(tree)
+    axf = td.flatten_up_to(ax_tree)
+    return td.unflatten([one(l, a) for l, a in zip(flat, axf)])
+
+
+def fsdp_gather_top(params: PyTree, ax_tree: PyTree, dp_axes) -> PyTree:
+    """Gather the non-stacked subtrees (embed / lm_head / tail / norms);
+    stacked groups gather lazily inside the scans."""
+    out = {}
+    for k, v in params.items():
+        if k in _STACKED_KEYS:
+            out[k] = v
+        else:
+            out[k] = fsdp_gather(v, ax_tree[k], dp_axes)
+    return out

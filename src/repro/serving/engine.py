@@ -1,0 +1,361 @@
+"""Decode engine: ClusterFusion serving path.
+
+``decode_step`` is the paper's product: per attention layer it runs the
+cluster-centric fused dataflow (Alg. 3 SplitToken / Alg. 4 MLA) over the
+``heads × cluster`` factoring of the model axis, with all intermediates
+inside the shard_map body (one XLA computation per step, collectives =
+exactly the ClusterGather/ClusterReduce schedule).  Attention-free blocks
+(RG-LRU / RWKV-6) keep O(1) state — the paper's technique is inapplicable
+there (DESIGN.md §4) and they use their own fused steps.
+
+Cache layout (SplitToken): per attention layer, per device —
+``k/v [S_blk, B_loc·kv_loc, hd]`` with the *sequence* sharded over the
+cluster sub-axis (paper's KV-sequence partition) and kv-heads over the
+heads sub-axis; ``pos [S_blk]`` stores global positions (ring semantics
+for sliding-window layers).  Batch is sharded over the data axes; all
+sequences advance in lockstep (continuous batching happens a level above,
+in the request scheduler).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import (ATTN_GLOBAL, ATTN_LOCAL, RECURRENT, RWKV6,
+                                ModelConfig)
+from repro.core import dataflow as df
+from repro.core import primitives as prim
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.attention import AttnParams, MLAAttnParams
+from repro.models.ctx import ParallelCtx
+from repro.models.layers import (EmbedParams, embed_lookup, ffn_apply,
+                                 lm_head_logits, rms_norm, softcap)
+from repro.models.moe import MoEParams, moe_apply
+from repro.models.transformer import unwrap_local
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_seq: int                   # cache capacity (global positions)
+    batch_local: int               # per-device batch
+    fused_combine: bool = False    # beyond-paper single-tree flash merge
+    dataflow: str = "split_token"  # split_token | split_head (bench only)
+    # giant-MoE weight spreading: expert d_ff additionally sliced over the
+    # "data" axis (kimi-1T / arctic-480B decode; DESIGN.md §5)
+    dff_shard: bool = False
+
+
+# ---------------------------------------------------------------------------
+# Cache init (per device)
+# ---------------------------------------------------------------------------
+def _attn_cache(cfg: ModelConfig, scfg: ServeConfig, ctx: ParallelCtx,
+                kind: str, dtype=jnp.bfloat16) -> df.KVBlock:
+    n = ctx.cluster_size
+    hs = ctx.heads_size
+    kv_loc = max(1, cfg.n_kv_heads // hs)
+    hd = cfg.resolved_head_dim
+    B = scfg.batch_local
+    if cfg.mla is not None:
+        lr = cfg.mla.kv_lora_rank + cfg.mla.rope_head_dim
+        s_blk = scfg.max_seq // n
+        return df.KVBlock(k=jnp.zeros((s_blk, B, lr), dtype),
+                          v=jnp.zeros((s_blk, B, 1), dtype),
+                          pos=jnp.full((s_blk,), -1, jnp.int32))
+    span = cfg.sliding_window if kind == ATTN_LOCAL else scfg.max_seq
+    span = min(span, scfg.max_seq)
+    s_blk = max(1, span // n)
+    return df.KVBlock(k=jnp.zeros((s_blk, B * kv_loc, hd), dtype),
+                      v=jnp.zeros((s_blk, B * kv_loc, hd), dtype),
+                      pos=jnp.full((s_blk,), -1, jnp.int32))
+
+
+def init_decode_state(cfg: ModelConfig, scfg: ServeConfig, ctx: ParallelCtx
+                      ) -> Dict[str, Any]:
+    """Per-device decode state: stacked caches per pattern position +
+    recurrent states + cache_len (+ encoder KV slots for enc-dec)."""
+    kinds = cfg.layer_kinds
+    period = len(cfg.block_pattern)
+    n_groups = cfg.n_layers // period
+    B = scfg.batch_local
+    hs = ctx.heads_size
+    ms = max(ctx.model_size, 1)
+
+    def stack(fn, n):
+        items = [fn() for _ in range(n)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *items)
+
+    state: Dict[str, Any] = {"cache_len": jnp.zeros((), jnp.int32)}
+    per_pos: List[Any] = []
+    for p, kind in enumerate(cfg.block_pattern):
+        if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+            per_pos.append(stack(
+                lambda k=kind: _attn_cache(cfg, scfg, ctx, k), n_groups))
+        elif kind == RECURRENT:
+            ds_loc = (cfg.rglru_d_state or cfg.d_model) // ms
+            per_pos.append(stack(
+                lambda: rglru_mod.rglru_state_init(B, ds_loc,
+                                                   cfg.conv1d_width),
+                n_groups))
+        elif kind == RWKV6:
+            nh_loc = (cfg.d_model // cfg.rwkv_head_dim) // hs
+            per_pos.append(stack(
+                lambda: rwkv_mod.rwkv6_state_init(B, nh_loc,
+                                                  cfg.rwkv_head_dim,
+                                                  cfg.d_model), n_groups))
+    state["layers"] = per_pos
+    n_tail = cfg.n_layers - n_groups * period
+    state["tail"] = [
+        _attn_cache(cfg, scfg, ctx, kinds[n_groups * period + t])
+        if kinds[n_groups * period + t] in (ATTN_GLOBAL, ATTN_LOCAL)
+        else (rglru_mod.rglru_state_init(
+            B, (cfg.rglru_d_state or cfg.d_model) // ms, cfg.conv1d_width)
+            if kinds[n_groups * period + t] == RECURRENT
+            else rwkv_mod.rwkv6_state_init(
+                B, (cfg.d_model // cfg.rwkv_head_dim) // hs,
+                cfg.rwkv_head_dim, cfg.d_model))
+        for t in range(n_tail)]
+    if cfg.encoder is not None:
+        kv_loc = max(1, cfg.n_kv_heads // hs)
+        hd = cfg.resolved_head_dim
+        P = cfg.frontend.num_positions
+        state["enc_kv"] = {
+            "k": jnp.zeros((cfg.n_layers, P, B * kv_loc, hd), jnp.bfloat16),
+            "v": jnp.zeros((cfg.n_layers, P, B * kv_loc, hd), jnp.bfloat16),
+        }
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Weight adapters: train layout (AttnParams) → dataflow weight shards
+# ---------------------------------------------------------------------------
+def _split_token_weights(ctx: ParallelCtx, p: AttnParams
+                         ) -> df.SplitTokenWeights:
+    """Train layout already shards heads over `heads` and head_dim over
+    `cluster` for wq/wk/wv; wo is [q_loc*hd, D] replicated over cluster —
+    the dataflow needs the cluster's D-column slice, taken dynamically."""
+    n = ctx.cluster_size
+    d = p.wo.shape[1]
+    c = ctx.cluster_index()
+    d_n = d // n
+    wo_seg = lax.dynamic_slice_in_dim(p.wo, c * d_n, d_n, axis=1)
+    return df.SplitTokenWeights(wq=p.wq, wk=p.wk, wv=p.wv, wo=wo_seg,
+                                bq=p.bq, bk=p.bk, bv=p.bv)
+
+
+def _mla_weights(ctx: ParallelCtx, p: MLAAttnParams, cfg: ModelConfig
+                 ) -> df.MLAWeights:
+    n = ctx.cluster_size
+    c = ctx.cluster_index()
+    m = cfg.mla
+    d = p.wo.shape[1]
+    d_n = d // n
+    l_n = m.kv_lora_rank // n
+    return df.MLAWeights(
+        wq=p.wq,
+        wdkv=p.wdkv,
+        wuk=lax.dynamic_slice_in_dim(p.wuk, c * l_n, l_n, axis=2),
+        wuv=lax.dynamic_slice_in_dim(p.wuv, c * l_n, l_n, axis=1),
+        wo=lax.dynamic_slice_in_dim(p.wo, c * d_n, d_n, axis=1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-block decode
+# ---------------------------------------------------------------------------
+def _spec(ctx: ParallelCtx) -> df.ClusterSpec:
+    return df.ClusterSpec(heads=ctx.heads or "model",
+                          cluster=ctx.cluster or "model",
+                          fused_combine=ctx.fused_combine,
+                          use_xla=ctx.use_xla_collectives)
+
+
+def decode_block(ctx: ParallelCtx, cfg: ModelConfig, kind: str,
+                 blk: Dict[str, Any], x: jax.Array, cache, cache_len,
+                 scfg: ServeConfig, enc_kv=None):
+    """x: [B, D] → ([B, D], new cache).  Attention via the paper dataflow."""
+    eps = cfg.norm_eps
+    if kind == RWKV6:
+        p = blk["rwkv"]
+        a, _, cache = rwkv_mod.rwkv6_step(
+            ctx, p, rms_norm(x, blk["ln1"], eps), cfg.rwkv_head_dim, cache)
+        x = x + a
+        c, cache = rwkv_mod.rwkv6_channel_step(
+            ctx, p, rms_norm(x, blk["ln2"], eps), cache)
+        return x + c, cache
+    if kind == RECURRENT:
+        a, cache = rglru_mod.rglru_block_step(
+            ctx, blk["rglru"], rms_norm(x, blk["ln1"], eps), cache)
+    elif cfg.mla is not None:
+        spec = _spec(ctx)
+        w = _mla_weights(ctx, blk["attn"], cfg)
+        o_seg, cache = df.mla_attention(
+            spec, rms_norm(x, blk["ln1"], eps), w, cache, cache_len,
+            nope_dim=cfg.mla.nope_head_dim, rope_dim=cfg.mla.rope_head_dim,
+            rope_theta=cfg.rope_theta)
+        a = ctx.gather_cluster(o_seg, axis=1)
+    else:
+        spec = _spec(ctx)
+        w = _split_token_weights(ctx, blk["attn"])
+        window = cfg.sliding_window if kind == ATTN_LOCAL else 0
+        o_seg, cache = df.split_token_attention(
+            spec, rms_norm(x, blk["ln1"], eps), w, cache, cache_len,
+            window=window, attn_softcap=cfg.attn_softcap,
+            rope_theta=cfg.rope_theta)
+        a = ctx.gather_cluster(o_seg, axis=1)
+    if "post_ln1" in blk:
+        a = rms_norm(a, blk["post_ln1"], eps)
+    x = x + a
+    if enc_kv is not None:
+        ca = _cross_decode(ctx, blk["cross"], x, enc_kv, cfg)
+        x = x + ca
+    h = rms_norm(x, blk["ln2"], eps)
+    if isinstance(blk["ffn"], MoEParams):
+        if scfg.dff_shard:
+            from repro.models.moe import moe_apply_dff
+            h_all = lax.all_gather(h, "data", axis=0, tiled=True)
+            y_all = moe_apply_dff(ctx, blk["ffn"], h_all, cfg.ffn_act,
+                                  cfg.moe, dff_axes="data")
+            rank = lax.axis_index("data")
+            f = lax.dynamic_slice_in_dim(y_all, rank * h.shape[0],
+                                         h.shape[0], axis=0)
+        else:
+            f = moe_apply(ctx, blk["ffn"], h[:, None, :], cfg.ffn_act,
+                          cfg.moe)[:, 0]
+    else:
+        f = ffn_apply(ctx, blk["ffn"], h, cfg.ffn_act)
+    if "post_ln2" in blk:
+        f = rms_norm(f, blk["post_ln2"], eps)
+    return x + f, cache
+
+
+def _cross_decode(ctx, cross_blk, x, enc_kv, cfg: ModelConfig):
+    """Decoder cross-attention against static encoder K/V."""
+    p: AttnParams = cross_blk["attn"]
+    B, D = x.shape
+    n = ctx.cluster_size
+    q_loc, hd_seg = p.wq.shape[1], p.wq.shape[2]
+    hd = hd_seg * n
+    h = rms_norm(x, cross_blk["ln"], cfg.norm_eps)
+    q_seg = jnp.einsum("bd,dqh->bqh", h, p.wq)
+    q = ctx.gather_cluster(q_seg, axis=2)            # [B, q_loc, hd]
+    k, v = enc_kv                                    # [P, B*kv_loc, hd]
+    P = k.shape[0]
+    kv_loc = k.shape[1] // B
+    qpk = q_loc // kv_loc
+    qg = q.reshape(B, kv_loc, qpk, hd).astype(jnp.float32)
+    kc = k.reshape(P, B, kv_loc, hd).astype(jnp.float32)
+    vc = v.reshape(P, B, kv_loc, hd).astype(jnp.float32)
+    s = jnp.einsum("bkqh,pbkh->bkqp", qg, kc) / math.sqrt(hd)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkqp,pbkh->bkqh", pr, vc).reshape(B, q_loc * hd)
+    y = (o.astype(x.dtype) @ p.wo)
+    return ctx.psum_heads(y)
+
+
+# ---------------------------------------------------------------------------
+# Full decode step
+# ---------------------------------------------------------------------------
+def greedy_sample(ctx: ParallelCtx, logits_loc: jax.Array) -> jax.Array:
+    """Greedy over vocab-sharded logits: pair-wise tree reduce on
+    (max_value, argmax_global_index)."""
+    v_loc = logits_loc.shape[-1]
+    shard = ctx.model_index()
+    lf = logits_loc.astype(jnp.float32)
+    loc_max = jnp.max(lf, axis=-1)
+    loc_idx = jnp.argmax(lf, axis=-1).astype(jnp.int32) + shard * v_loc
+    if ctx.model is None:
+        return loc_idx
+
+    def merge(a, b):
+        mv, mi = a
+        nv, ni = b
+        take_b = nv > mv
+        return jnp.where(take_b, nv, mv), jnp.where(take_b, ni, mi)
+
+    _, idx = prim.cluster_reduce_pairs((loc_max, loc_idx), ctx.model, merge)
+    return idx
+
+
+def decode_step(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
+                params_dm: PyTree, state: Dict[str, Any],
+                tokens: jax.Array) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One decode step: tokens [B_loc] → (next_tokens [B_loc], new state).
+
+    Everything (embedding, L layers of fused attention dataflow, FFN,
+    head, sampling) is one computation — the TPU analogue of the paper's
+    single-CUDA-graph decode step, with kernel-launch overhead replaced by
+    a single XLA dispatch.
+    """
+    params = unwrap_local(params_dm)
+    kinds = cfg.layer_kinds
+    period = len(cfg.block_pattern)
+    n_groups = cfg.n_layers // period
+    cache_len = state["cache_len"]
+
+    x = embed_lookup(ctx, EmbedParams(params["embed"]), tokens)
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+
+    if cfg.encoder is not None:
+        enc_kv_all = state["enc_kv"]
+
+    # Caches ride in the scan CARRY and are updated with a dynamic-index
+    # slice write — XLA performs the update in place (the carry buffer is
+    # dead after the write), instead of staging a full per-layer copy
+    # through scan ys (§Perf iter 3: ~3× decode HBM-byte reduction).
+    n_groups_t = jnp.arange(max(n_groups, 1))
+
+    def group_body(carry, inp):
+        x, caches = carry
+        if cfg.encoder is not None:
+            blks, gi, ca, ek, ev = inp
+        else:
+            blks, gi = inp
+            ca = ek = ev = None
+        new_caches = []
+        for p_i in range(period):
+            cache_i = jax.tree.map(lambda l: l[gi], caches[p_i])
+            blk = blks[p_i]
+            enc = None
+            if ca is not None:
+                blk = dict(blk)
+                blk["cross"] = ca
+                enc = (ek, ev)
+            x, nc = decode_block(ctx, cfg, kinds[p_i], blk, x,
+                                 cache_i, cache_len, scfg, enc)
+            new_caches.append(jax.tree.map(
+                lambda full, upd: lax.dynamic_update_index_in_dim(
+                    full, upd.astype(full.dtype), gi, axis=0),
+                caches[p_i], nc))
+        return (x, tuple(new_caches)), None
+
+    xs = ((tuple(params["blocks"]), n_groups_t, params["cross_attn"],
+           enc_kv_all["k"], enc_kv_all["v"]) if cfg.encoder is not None
+          else (tuple(params["blocks"]), n_groups_t))
+    (x, new_caches), _ = lax.scan(
+        group_body, (x, tuple(state["layers"])), xs)
+
+    new_state = dict(state)
+    new_state["layers"] = list(new_caches)
+    new_tail = []
+    for t_i, blk in enumerate(params["tail"]):
+        x, nc = decode_block(ctx, cfg, kinds[n_groups * period + t_i], blk,
+                             x, state["tail"][t_i], cache_len, scfg)
+        new_tail.append(nc)
+    new_state["tail"] = new_tail
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = lm_head_logits(ctx, table, x)
+    if cfg.logit_softcap:
+        logits = softcap(logits, cfg.logit_softcap)
+    nxt = greedy_sample(ctx, logits)
+    new_state["cache_len"] = cache_len + 1
+    return nxt, new_state

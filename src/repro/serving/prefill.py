@@ -1,0 +1,203 @@
+"""Prefill: run the prompt through the train-path forward, collect per-layer
+KV (or recurrent states), and scatter them into the decode cache layout
+(sequence blocks over the cluster sub-axis, ring layout for sliding-window
+layers).  Returns the first generated token.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import (ATTN_GLOBAL, ATTN_LOCAL, RECURRENT, RWKV6,
+                                ModelConfig)
+from repro.core import dataflow as df
+from repro.models import attention as attn_mod
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.ctx import ParallelCtx
+from repro.models.layers import (EmbedParams, embed_lookup, ffn_apply,
+                                 lm_head_logits, rms_norm, softcap)
+from repro.models.moe import MoEParams, moe_apply
+from repro.models.transformer import (apply_block, cross_attention, encode,
+                                      unwrap_local)
+from repro.serving.engine import ServeConfig, greedy_sample
+
+PyTree = Any
+
+
+def _fill_global(cache: df.KVBlock, kv: jax.Array, c_rank, s_prompt: int
+                 ) -> df.KVBlock:
+    """kv: [S, rows, hd] full-sequence values → this rank's seq block."""
+    s_blk = cache.k.shape[0]
+    idx = c_rank * s_blk + jnp.arange(s_blk)
+    valid = idx < s_prompt
+    take = jnp.clip(idx, 0, s_prompt - 1)
+    pos = jnp.where(valid, idx, -1).astype(jnp.int32)
+    return df.KVBlock(
+        k=jnp.where(valid[:, None, None], kv[0][take], 0).astype(cache.k.dtype),
+        v=jnp.where(valid[:, None, None], kv[1][take], 0).astype(cache.v.dtype),
+        pos=pos)
+
+
+def _fill_ring(cache: df.KVBlock, kv: jax.Array, c_rank, s_prompt: int,
+               window: int) -> df.KVBlock:
+    """Sliding-window ring: slot s holds the largest p < s_prompt with
+    p ≡ s (mod window)."""
+    s_blk = cache.k.shape[0]
+    base = c_rank * s_blk + jnp.arange(s_blk)          # global slot index
+    have = base < s_prompt
+    kwrap = jnp.maximum(s_prompt - 1 - base, 0) // window
+    p = base + kwrap * window
+    take = jnp.clip(p, 0, s_prompt - 1)
+    pos = jnp.where(have, p, -1).astype(jnp.int32)
+    return df.KVBlock(
+        k=jnp.where(have[:, None, None], kv[0][take], 0).astype(cache.k.dtype),
+        v=jnp.where(have[:, None, None], kv[1][take], 0).astype(cache.v.dtype),
+        pos=pos)
+
+
+def _prefill_block(ctx: ParallelCtx, cfg: ModelConfig, kind: str,
+                   blk: Dict[str, Any], x: jax.Array, cache, c_rank,
+                   scfg: ServeConfig, enc_out=None, cross_blk=None):
+    """Prefill one layer; returns (x, decode-ready cache)."""
+    B, S, D = x.shape
+    eps = cfg.norm_eps
+    if kind == RWKV6:
+        p = blk["rwkv"]
+        h1 = rms_norm(x, blk["ln1"], eps)
+        a, s_fin = rwkv_mod.rwkv6_time_mix(ctx, p, h1, cfg.rwkv_head_dim)
+        x = x + a
+        h2 = rms_norm(x, blk["ln2"], eps)
+        c = rwkv_mod.rwkv6_channel_mix(ctx, p, h2)
+        x = x + c
+        st = cache._replace(s=s_fin.astype(cache.s.dtype),
+                            x_prev_t=h1[:, -1], x_prev_c=h2[:, -1])
+        return x, st
+    if kind == RECURRENT:
+        p = blk["rglru"]
+        h1 = rms_norm(x, blk["ln1"], eps)
+        u = h1 @ p.w_x
+        u_c = rglru_mod._causal_conv(p, u)
+        h_seq = rglru_mod.rglru_scan(p, u_c)
+        gate = jax.nn.gelu(h1 @ p.w_gate, approximate=True)
+        a = ctx.psum_model((h_seq * gate) @ p.w_out)
+        x = x + a
+        width = p.conv_w.shape[0]
+        st = cache._replace(h=h_seq[:, -1].astype(cache.h.dtype),
+                            conv=u[:, S - width + 1:].astype(cache.conv.dtype))
+        h2 = rms_norm(x, blk["ln2"], eps)
+        f = (moe_apply(ctx, blk["ffn"], h2, cfg.ffn_act, cfg.moe)
+             if isinstance(blk["ffn"], MoEParams)
+             else ffn_apply(ctx, blk["ffn"], h2, cfg.ffn_act))
+        return x + f, st
+    # attention layers: reuse the train block with KV collection
+    x, kv = apply_block(ctx, cfg, kind, blk, x, return_kv=True,
+                        enc_kv=enc_out, cross_blk=cross_blk)
+    if cfg.mla is not None:
+        c_seq = kv                                   # [B, S, l+rope]
+        ckv = jnp.moveaxis(c_seq, 1, 0)              # [S, B, l+rope]
+        newc = _fill_global(cache, (ckv, ckv[..., :1]), c_rank, S)
+        return x, newc
+    k, v = kv                                        # [B, S, kv_loc, hd]
+    rows = k.shape[0] * k.shape[2]
+    ks = jnp.moveaxis(k, 1, 0).reshape(S, rows, k.shape[3])
+    vs = jnp.moveaxis(v, 1, 0).reshape(S, rows, v.shape[3])
+    if kind == ATTN_LOCAL:
+        newc = _fill_ring(cache, (ks, vs), c_rank, S, cfg.sliding_window)
+    else:
+        newc = _fill_global(cache, (ks, vs), c_rank, S)
+    return x, newc
+
+
+def prefill(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
+            params_dm: PyTree, state: Dict[str, Any], tokens: jax.Array,
+            frontend_embeds: Optional[jax.Array] = None, fsdp=None
+            ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """tokens [B_loc, S_prompt] → (first generated token [B_loc], state).
+
+    ``fsdp=(ax_tree, dp_axes)``: params arrive dp-sliced; non-stacked
+    leaves gather here, scanned groups gather per group in the scan."""
+    params = unwrap_local(params_dm)
+    if fsdp is not None:
+        from repro.models.transformer import fsdp_gather, fsdp_gather_top
+        params = fsdp_gather_top(params, *fsdp)
+    kinds = cfg.layer_kinds
+    period = len(cfg.block_pattern)
+    n_groups = cfg.n_layers // period
+    B, S = tokens.shape
+    c_rank = ctx.cluster_index()
+
+    x = embed_lookup(ctx, EmbedParams(params["embed"]), tokens)
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if cfg.frontend is not None and cfg.encoder is None:
+        fe = frontend_embeds.astype(x.dtype) @ params["frontend_proj"]
+        x = jnp.concatenate([fe, x[:, fe.shape[1]:]], axis=1)
+
+    enc_out = None
+    new_state = dict(state)
+    if cfg.encoder is not None:
+        enc_out = encode(ctx, cfg, params, frontend_embeds, remat=False)
+        # project per-layer cross K/V once; store for decode
+        ca = params["cross_attn"]
+
+        def proj_kv(ca_l):
+            p = ca_l["attn"]
+            k = jnp.einsum("bpd,dkh->bpkh", enc_out, p.wk)
+            v = jnp.einsum("bpd,dkh->bpkh", enc_out, p.wv)
+            k = ctx.gather_cluster(k, axis=3)
+            v = ctx.gather_cluster(v, axis=3)
+            P = k.shape[1]
+            return (jnp.moveaxis(k, 1, 0).reshape(P, -1, k.shape[3]),
+                    jnp.moveaxis(v, 1, 0).reshape(P, -1, v.shape[3]))
+
+        eks, evs = jax.vmap(proj_kv)(ca)
+        new_state["enc_kv"] = {"k": eks.astype(jnp.bfloat16),
+                               "v": evs.astype(jnp.bfloat16)}
+
+    def group_body(x, inp):
+        if cfg.encoder is not None:
+            blks, caches, ca_l = inp
+        else:
+            blks, caches = inp
+            ca_l = None
+        if fsdp is not None:
+            from repro.models.transformer import fsdp_gather
+            ax, dpa = fsdp
+            blks = tuple(fsdp_gather(b, a, dpa, in_scan=True)
+                         for b, a in zip(blks, ax["blocks"]))
+            if ca_l is not None:
+                ca_l = fsdp_gather(ca_l, ax["cross_attn"], dpa, in_scan=True)
+        new_caches = []
+        for p_i in range(period):
+            x, nc = _prefill_block(ctx, cfg, kinds[p_i], blks[p_i], x,
+                                   caches[p_i], c_rank, scfg,
+                                   enc_out=enc_out, cross_blk=ca_l)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    xs = ((tuple(params["blocks"]), tuple(state["layers"]),
+           params["cross_attn"]) if cfg.encoder is not None
+          else (tuple(params["blocks"]), tuple(state["layers"])))
+    x, new_caches = lax.scan(group_body, x, xs)
+    new_state["layers"] = list(new_caches)
+    new_tail = []
+    for t_i, blk in enumerate(params["tail"]):
+        x, nc = _prefill_block(ctx, cfg, kinds[n_groups * period + t_i],
+                               blk, x, state["tail"][t_i], c_rank, scfg)
+        new_tail.append(nc)
+    new_state["tail"] = new_tail
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    last = x[:, -1]
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = lm_head_logits(ctx, table, last)
+    if cfg.logit_softcap:
+        logits = softcap(logits, cfg.logit_softcap)
+    nxt = greedy_sample(ctx, logits)
+    new_state["cache_len"] = jnp.asarray(S, jnp.int32)
+    return nxt, new_state

@@ -1,0 +1,162 @@
+"""Optimizers (pytree-based, no external deps): AdamW and Adafactor.
+
+Adafactor matters at the top of our architecture pool: kimi-k2's 1T
+parameters cannot afford 8 bytes/param of Adam moments on 512 v5e chips
+(see EXPERIMENTS.md §Dry-run memory table) — factored second moments cut
+optimizer state to ~1.05 copies.
+
+Both optimizers support ZeRO-1 slicing (the train step shards their state
+over the data axis; see train_step.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    # adafactor
+    decay_offset: int = 0
+    min_dim_size_to_factor: int = 128
+
+
+class AdamWState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+    step: jax.Array
+
+
+class AdafactorState(NamedTuple):
+    vr: PyTree                     # row second moments (or full v)
+    vc: PyTree                     # col second moments (or empty)
+    step: jax.Array
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float,
+                        pre_norm: Optional[jax.Array] = None) -> PyTree:
+    n = pre_norm if pre_norm is not None else global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw_init(params: PyTree) -> AdamWState:
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(mu=jax.tree.map(z, params),
+                      nu=jax.tree.map(z, params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(cfg: OptConfig, grads: PyTree, state: AdamWState,
+                 params: PyTree) -> Tuple[PyTree, AdamWState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - cfg.b1 ** t
+    c2 = 1.0 - cfg.b2 ** t
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        u = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - cfg.lr * u).astype(p.dtype), m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(params)
+    res = [upd(g, m, v, p) for g, m, v, p
+           in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([r[0] for r in res])
+    new_m = treedef.unflatten([r[1] for r in res])
+    new_v = treedef.unflatten([r[2] for r in res])
+    return new_p, AdamWState(mu=new_m, nu=new_v, step=step)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; Shazeer & Stern 2018)
+# ---------------------------------------------------------------------------
+def _factorable(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= 128 and p.shape[-2] >= 128
+
+
+def adafactor_init(params: PyTree) -> AdafactorState:
+    def vr(p):
+        if _factorable(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def vc(p):
+        if _factorable(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((1,), jnp.float32)
+
+    return AdafactorState(vr=jax.tree.map(vr, params),
+                          vc=jax.tree.map(vc, params),
+                          step=jnp.zeros((), jnp.int32))
+
+
+def adafactor_update(cfg: OptConfig, grads: PyTree, state: AdafactorState,
+                     params: PyTree) -> Tuple[PyTree, AdafactorState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** -0.8
+
+    def upd(g, vr, vc, p):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + 1e-30
+        if _factorable(p):
+            vr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            v_hat = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+        else:
+            vr = beta2 * vr + (1 - beta2) * g2
+            v_hat = vr
+        u = g / jnp.sqrt(v_hat + cfg.eps)
+        # update clipping (RMS ≤ 1) per the paper
+        rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+        u = u / jnp.maximum(1.0, rms_u)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - cfg.lr * u).astype(p.dtype), vr, vc
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(state.vr)
+    flat_c = treedef.flatten_up_to(state.vc)
+    flat_p = treedef.flatten_up_to(params)
+    res = [upd(g, r, c, p) for g, r, c, p
+           in zip(flat_g, flat_r, flat_c, flat_p)]
+    new_p = treedef.unflatten([r[0] for r in res])
+    new_r = treedef.unflatten([r[1] for r in res])
+    new_c = treedef.unflatten([r[2] for r in res])
+    return new_p, AdafactorState(vr=new_r, vc=new_c, step=step)
+
+
+def opt_init(cfg: OptConfig, params: PyTree):
+    return (adamw_init if cfg.name == "adamw" else adafactor_init)(params)
+
+
+def opt_update(cfg: OptConfig, grads, state, params):
+    fn = adamw_update if cfg.name == "adamw" else adafactor_update
+    return fn(cfg, grads, state, params)

@@ -1,0 +1,270 @@
+"""The manual-SPMD training step.
+
+One ``shard_map`` over the whole mesh; inside (per device):
+
+  1. microbatch loop (grad accumulation, ``lax.scan`` over µbatches)
+     around ``jax.grad`` of the local loss (model collectives — psum over
+     the model axis, ClusterGather over the cluster sub-axis — are *inside*
+     the differentiated function, so their transposes are generated
+     automatically);
+  2. gradient all-reduce over the data axes — plain bf16/f32 psum or int8
+     compressed with error feedback (``--grad-compress``);
+  3. ZeRO-1 optimizer update: each data-rank updates a 1/D slice of the
+     optimizer state (sliced on the leading device-major axis when
+     divisible, else replicated), then the updated params are
+     ``all_gather``'d back over the data axis.
+
+Loss normalization: global mean over valid tokens (psum'd counts), so
+gradient scale is batch-size invariant.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.compression import (EFState, compressed_psum,
+                                           init_ef_state, plain_psum_mean)
+from repro.models.ctx import ParallelCtx
+from repro.models.transformer import loss_fn, sync_grads, unwrap_local
+from repro.training.optimizer import (OptConfig, clip_by_global_norm,
+                                      global_norm, opt_init, opt_update)
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    microbatches: int = 1
+    grad_compress: bool = False
+    zero1: bool = True
+    remat: bool = True
+    fsdp: bool = False             # ZeRO-3: params dp-sliced, gathered at use
+    grad_dtype: str = "f32"        # f32 | bf16 (accumulator dtype at scale)
+
+
+def _split_micro(batch: Dict[str, jax.Array], n: int) -> Dict[str, jax.Array]:
+    return {k: (v.reshape((n, v.shape[0] // n) + v.shape[1:])
+                if v is not None else None)
+            for k, v in batch.items()}
+
+
+def local_loss_and_grad(ctx: ParallelCtx, cfg: ModelConfig,
+                        params_dm: PyTree, batch: Dict[str, jax.Array],
+                        n_micro: int, remat: bool, fsdp=None,
+                        grad_dtype=jnp.float32):
+    """Microbatched (sum_nll, sum_cnt, grads) on this device's shard.
+
+    With ``fsdp=(ax_tree, dp_axes)`` the gradients of dp-sliced leaves come
+    back sliced AND dp-summed (the transpose of the gather is a
+    reduce-scatter)."""
+
+    def loss_of(p_dm, mb):
+        local = unwrap_local(p_dm)
+        nll, cnt = loss_fn(ctx, cfg, local, mb, remat=remat, fsdp=fsdp)
+        return nll, cnt
+
+    def one_micro(carry, mb):
+        nll_a, cnt_a, g_a = carry
+        (nll, cnt), g = jax.value_and_grad(
+            lambda p: loss_of(p, mb), has_aux=True)(params_dm)
+        g_a = jax.tree.map(lambda a, b: a + b.astype(grad_dtype), g_a, g)
+        return (nll_a + nll, cnt_a + cnt, g_a), None
+
+    if n_micro == 1:
+        (nll, cnt), grads = jax.value_and_grad(
+            lambda p: loss_of(p, batch), has_aux=True)(params_dm)
+        return nll, cnt, jax.tree.map(lambda g: g.astype(grad_dtype), grads)
+
+    micro = _split_micro(batch, n_micro)
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, grad_dtype), params_dm)
+    (nll, cnt, grads), _ = lax.scan(
+        one_micro, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+                    g0), micro)
+    return nll, cnt, grads
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 slicing helpers (leading axis = device-major dim, size 1 inside
+# shard_map — so we slice on the FIRST dim of size divisible by dp_size)
+# ---------------------------------------------------------------------------
+def _z_axis(leaf, dp: int) -> int:
+    for ax in range(leaf.ndim):
+        if leaf.shape[ax] % dp == 0 and leaf.shape[ax] >= dp:
+            return ax
+    return -1
+
+
+def zero1_slice(tree: PyTree, dp: int, rank) -> PyTree:
+    def sl(leaf):
+        ax = _z_axis(leaf, dp)
+        if ax < 0:
+            return leaf
+        size = leaf.shape[ax] // dp
+        return lax.dynamic_slice_in_dim(leaf, rank * size, size, axis=ax)
+
+    return jax.tree.map(sl, tree)
+
+
+def zero1_allgather(tree_sliced: PyTree, full_like: PyTree, dp: int,
+                    axes) -> PyTree:
+    def ag(s, f):
+        ax = _z_axis(f, dp)
+        if ax < 0:
+            return s
+        return lax.all_gather(s, axes, axis=ax, tiled=True)
+
+    return jax.tree.map(ag, tree_sliced, full_like)
+
+
+def make_train_step(ctx: ParallelCtx, cfg: ModelConfig, tcfg: TrainConfig,
+                    dp_axes: Tuple[str, ...], dp_size: int,
+                    sync_tree=None, fsdp_ax=None):
+    """Returns train_step(params_dm, opt_state, ef_state, batch) →
+    (params, opt_state, ef_state, metrics).  Call inside shard_map.
+
+    ``sync_tree`` — output of ``grad_sync_tree``: subgroup psums for
+    replicated-leaf gradients (Megatron layernorm-grad sync, generalized).
+    """
+
+    fsdp_info = None
+    fsdp_mask = None
+    if tcfg.fsdp and fsdp_ax is not None:
+        fsdp_info = (fsdp_ax, dp_axes)
+        flat_p = jax.tree.leaves(
+            jax.tree.map(lambda *_: 0, jax.tree.structure(fsdp_ax)))  # unused
+
+    def _is_fsdp_leaf_tree(params_dm):
+        flat, td = jax.tree.flatten(params_dm)
+        axf = td.flatten_up_to(fsdp_ax)
+        return td.unflatten([a is not None for a in axf])
+
+    def step(params_dm, opt_state, ef_state, batch):
+        gdt = jnp.bfloat16 if tcfg.grad_dtype == "bf16" else jnp.float32
+        nll, cnt, grads = local_loss_and_grad(
+            ctx, cfg, params_dm, batch, tcfg.microbatches, tcfg.remat,
+            fsdp=fsdp_info, grad_dtype=gdt)
+        nll_g = lax.psum(nll, dp_axes)
+        cnt_g = lax.psum(cnt, dp_axes)
+        # grads currently hold d(sum_nll_local)/dp — convert to global mean
+        grads = jax.tree.map(lambda g: g / jnp.maximum(cnt_g, 1.0), grads)
+        if fsdp_info is not None:
+            is_f = _is_fsdp_leaf_tree(params_dm)
+        else:
+            is_f = jax.tree.map(lambda _: False, params_dm)
+        # dp all-reduce: FSDP leaves are already dp-summed (reduce-scatter
+        # from the gather transpose) — only the rest needs the psum
+        if tcfg.grad_compress:
+            grads_nf, ef_state = compressed_psum(grads, ef_state, dp_axes,
+                                                 n_ranks=1)
+            flat_g, td = jax.tree.flatten(grads)
+            flat_n = td.flatten_up_to(grads_nf)
+            flat_f = td.flatten_up_to(is_f)
+            grads = td.unflatten([g if f else n for g, n, f
+                                  in zip(flat_g, flat_n, flat_f)])
+        else:
+            flat_g, td = jax.tree.flatten(grads)
+            flat_f = td.flatten_up_to(is_f)
+            grads = td.unflatten([
+                g if f else lax.psum(g, dp_axes)
+                for g, f in zip(flat_g, flat_f)])
+        if sync_tree is not None:
+            grads = sync_grads(ctx, grads, sync_tree)
+        # gradient norm: FSDP leaves contribute their dp-summed-slice norm
+        # psum'd over dp; the rest once; then psum over model so every rank
+        # clips identically
+        flat_g, td = jax.tree.flatten(grads)
+        flat_f = td.flatten_up_to(is_f)
+        sq_f = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                   for g, f in zip(flat_g, flat_f) if f) + 0.0
+        sq_n = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                   for g, f in zip(flat_g, flat_f) if not f) + 0.0
+        sq = lax.psum(jnp.asarray(sq_f, jnp.float32), dp_axes) + sq_n
+        gnorm = jnp.sqrt(ctx.psum_model(sq))
+        if tcfg.opt.grad_clip > 0:
+            grads = clip_by_global_norm(grads, tcfg.opt.grad_clip, gnorm)
+
+        if dp_size > 1 and (tcfg.zero1 or fsdp_info is not None):
+            rank = lax.axis_index(dp_axes)
+            g_sl = _mixed_slice(grads, is_f, dp_size, rank, tcfg.zero1)
+            p_sl = _mixed_slice(params_dm, is_f, dp_size, rank, tcfg.zero1)
+            new_p_sl, new_opt = opt_update(tcfg.opt, g_sl, opt_state, p_sl)
+            new_params = _mixed_allgather(new_p_sl, params_dm, is_f,
+                                          dp_size, dp_axes, tcfg.zero1)
+        else:
+            new_params, new_opt = opt_update(tcfg.opt, grads, opt_state,
+                                             params_dm)
+        metrics = {"loss": nll_g / jnp.maximum(cnt_g, 1.0),
+                   "grad_norm": gnorm,
+                   "tokens": cnt_g}
+        return new_params, new_opt, ef_state, metrics
+
+    return step
+
+
+def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, params_dm: PyTree,
+                     dp_size: int, rank=None, fsdp_ax=None):
+    """Optimizer state over the ZeRO-1 slice (or full params).
+
+    With FSDP, dp-sliced leaves are already opt-slice-shaped; only the
+    rest gets the ZeRO-1 slice."""
+    if dp_size > 1 and rank is not None and (tcfg.zero1 or tcfg.fsdp):
+        if tcfg.fsdp and fsdp_ax is not None:
+            flat, td = jax.tree.flatten(params_dm)
+            axf = td.flatten_up_to(fsdp_ax)
+            is_f = td.unflatten([a is not None for a in axf])
+            params_for_opt = _mixed_slice(params_dm, is_f, dp_size, rank,
+                                          tcfg.zero1)
+        else:
+            params_for_opt = zero1_slice(params_dm, dp_size, rank)
+    else:
+        params_for_opt = params_dm
+    opt_state = opt_init(tcfg.opt, params_for_opt)
+    # error-feedback residuals live on the FULL gradient (compression
+    # happens before the ZeRO-1 slice)
+    ef = init_ef_state(params_dm) if tcfg.grad_compress else None
+    return opt_state, ef
+
+
+def _mixed_slice(tree: PyTree, is_fsdp: PyTree, dp: int, rank,
+                 zero1: bool) -> PyTree:
+    """FSDP leaves pass through (already sliced); the rest gets the ZeRO-1
+    slice (or passes through when zero1 is off)."""
+    flat, td = jax.tree.flatten(tree)
+    flat_f = td.flatten_up_to(is_fsdp)
+    out = []
+    for leaf, f in zip(flat, flat_f):
+        if f or not zero1:
+            out.append(leaf)
+        else:
+            ax = _z_axis(leaf, dp)
+            if ax < 0:
+                out.append(leaf)
+            else:
+                size = leaf.shape[ax] // dp
+                out.append(lax.dynamic_slice_in_dim(leaf, rank * size, size,
+                                                    axis=ax))
+    return td.unflatten(out)
+
+
+def _mixed_allgather(tree_sliced: PyTree, full_like: PyTree, is_fsdp: PyTree,
+                     dp: int, axes, zero1: bool) -> PyTree:
+    """FSDP leaves STAY sliced; ZeRO-1 leaves gather back to full."""
+    flat_s, td = jax.tree.flatten(tree_sliced)
+    flat_full = td.flatten_up_to(full_like)
+    flat_f = td.flatten_up_to(is_fsdp)
+    out = []
+    for s, fl, f in zip(flat_s, flat_full, flat_f):
+        if f or not zero1:
+            out.append(s)
+        else:
+            ax = _z_axis(fl, dp)
+            out.append(s if ax < 0
+                       else lax.all_gather(s, axes, axis=ax, tiled=True))
+    return td.unflatten(out)

@@ -1,0 +1,83 @@
+"""Checkpoint manager: atomic commit, keep-k, async, resume, elastic."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _tree(seed):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (4, 8)),
+            "b": {"c": jnp.arange(6.0), "d": jnp.int32(seed)}}
+
+
+def test_roundtrip_and_keep_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for step in (10, 20, 30):
+        mgr.save(step, _tree(step))
+    assert mgr.latest_step() == 30
+    names = sorted(os.listdir(tmp_path))
+    assert names == ["step_00000020", "step_00000030"]      # keep-k GC'd 10
+    restored, _ = mgr.restore(_tree(0))
+    np.testing.assert_allclose(np.asarray(restored["a"]),
+                               np.asarray(_tree(30)["a"]))
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    t = _tree(7)
+    mgr.save(1, t)
+    mgr.wait()
+    restored, extra = mgr.restore(t)
+    np.testing.assert_allclose(np.asarray(restored["b"]["c"]),
+                               np.asarray(t["b"]["c"]))
+
+
+def test_crash_during_save_leaves_prior_intact(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    mgr.save(1, _tree(1), extra={"step": 1})
+    # simulate a crashed save: stale .tmp directory
+    os.makedirs(tmp_path / "step_00000002.tmp")
+    assert mgr.latest_step() == 1                            # tmp ignored
+    restored, extra = mgr.restore(_tree(0))
+    assert extra["step"] == 1
+
+
+def test_elastic_restore_dp_change(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    big = {"w": jnp.arange(32.0).reshape(8, 4)}
+    mgr.save(5, big)
+    small = {"w": jnp.zeros((4, 4))}
+    restored, _ = mgr.restore_elastic(small)
+    np.testing.assert_allclose(np.asarray(restored["w"]),
+                               np.arange(16.0).reshape(4, 4))
+
+
+def test_train_driver_resume(tmp_path):
+    """End-to-end: train 10 steps w/ checkpoints, kill, resume — the loss
+    stream continues from the same data position (exact resume)."""
+    from helpers import run_multidevice
+    run_multidevice(f"""
+    from repro.launch.train import run
+    l1 = run("minitron-4b", steps=12, ckpt_dir={str(tmp_path)!r},
+             log_every=100)
+    # fresh process state: resume and compare overlap determinism
+    l2 = run("minitron-4b", steps=4, ckpt_dir={str(tmp_path)!r},
+             log_every=100)
+    print("RESUME OK", l1[-1], l2[0])
+    assert abs(l1[-1] - l2[0]) < 1.0   # continues training (same scale)
+    """, timeout=1200)
+
+
+def test_straggler_monitor():
+    from repro.launch.train import StragglerMonitor
+    mon = StragglerMonitor()
+    flags = [mon.record(0.1) for _ in range(20)]
+    assert not any(flags)
+    assert mon.record(0.5)              # 5× p50 flagged
+    assert not mon.record(0.1)

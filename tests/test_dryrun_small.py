@@ -1,0 +1,54 @@
+"""Dry-run machinery on CI scale: lower+compile representative cells in a
+512-host-device subprocess (the full 40-cell × 2-mesh sweep is run by
+``python -m repro.launch.dryrun --all --both-meshes``; its results are
+recorded in EXPERIMENTS.md)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _run_cells(cells, multi_pod=False, timeout=560):
+    code = f"""
+import repro.launch.dryrun as dr
+import sys
+fail = 0
+for arch, shape in {cells!r}:
+    r = dr.run_cell(arch, shape, multi_pod={multi_pod})
+    if "error" in r:
+        fail += 1
+sys.exit(fail)
+"""
+    proc = subprocess.run([sys.executable, "-c", code], timeout=timeout,
+                          capture_output=True, text=True,
+                          env={**os.environ, "PYTHONPATH": SRC})
+    assert proc.returncode == 0, proc.stderr[-3000:] + proc.stdout[-2000:]
+    return proc.stdout
+
+
+def test_dryrun_decode_cells():
+    out = _run_cells([("granite-8b", "decode_32k"),
+                      ("rwkv6-3b", "long_500k")])
+    assert "dominant" in out
+
+
+def test_dryrun_train_cell_multipod():
+    out = _run_cells([("minitron-4b", "train_4k")], multi_pod=True)
+    assert "2x16x16" in out
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+  %ag = bf16[8,128]{1,0} all-gather(%x), replica_groups={}
+  %ar = f32[64]{0} all-reduce(%y), to_apply=%add
+  %cp = bf16[4,4]{1,0} collective-permute(%z)
+"""
+    got = collective_bytes(hlo)
+    assert got["all-gather"] == 8 * 128 * 2
+    assert got["all-reduce"] == 64 * 4
+    assert got["collective-permute"] == 32
+    assert got["total"] == 8 * 128 * 2 + 256 + 32

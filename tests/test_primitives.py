@@ -1,0 +1,116 @@
+"""Cluster collective primitives (Alg. 1/2): tree schedules vs XLA
+reference on an 8-device host mesh (subprocess) + traffic-model units."""
+import numpy as np
+import pytest
+
+from repro.core import primitives as prim
+from helpers import run_multidevice
+
+
+def test_traffic_model_exact():
+    # paper §3.2 closed forms
+    assert prim.traffic_reduce(10, 4) == 10 * 2 * 4
+    assert prim.traffic_reduce(7, 8) == 7 * 3 * 8
+    assert prim.traffic_gather(10, 4) == 10 * (4 - 1) * 4
+    assert prim.traffic_gather(5, 16) == 5 * 15 * 16
+    assert prim.traffic_reduce(10, 1) == 0 and prim.traffic_gather(10, 1) == 0
+
+
+def test_traffic_gather_matches_message_doubling():
+    # Gather sends size·(1+2+…+N/2) per rank = size·(N−1)
+    for n in (2, 4, 8, 16):
+        per_rank = sum(2 ** r for r in range(int(np.log2(n))))
+        assert prim.traffic_gather(3, n) == 3 * per_rank * n
+
+
+def test_cluster_reduce_and_gather_vs_xla():
+    run_multidevice("""
+    from repro.core import primitives as prim
+    mesh = jax.make_mesh((8,), ("c",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    x = jnp.arange(8 * 16, dtype=jnp.float32).reshape(8, 16)
+
+    def run(fn):
+        return jax.jit(shard_map(fn, mesh=mesh, in_specs=P("c", None),
+                                 out_specs=P("c", None)))(x)
+
+    r = run(lambda v: prim.cluster_reduce(v, "c", "sum"))
+    np.testing.assert_allclose(np.asarray(r)[0], np.asarray(x).sum(0))
+    r = run(lambda v: prim.cluster_reduce(v, "c", "max"))
+    np.testing.assert_allclose(np.asarray(r)[0], np.asarray(x).max(0))
+    gm = jax.jit(shard_map(
+        lambda v: jnp.max(jnp.abs(prim.cluster_gather(v, "c")
+                                  - jax.lax.all_gather(v, "c"))).reshape(1, 1),
+        mesh=mesh, in_specs=P("c", None), out_specs=P("c", None)))(x)
+    assert float(jnp.max(gm)) == 0.0
+    # sub-axis collectives: model=8 factored as heads 2 × cluster 4
+    heads = prim.SubAxis("c", 2, minor_size=4)
+    clus = prim.SubAxis("c", 4, minor_size=1)
+    def sub(v):
+        a = prim.cluster_reduce(v, clus, "sum")     # within groups of 4
+        b = prim.cluster_reduce(v, heads, "sum")    # across the two groups
+        return jnp.stack([a, b])
+    out = jax.jit(shard_map(lambda v: sub(v)[None], mesh=mesh,
+                            in_specs=P("c", None),
+                            out_specs=P("c", None, None)))(x)
+    out = np.asarray(out)
+    xs = np.asarray(x)
+    for g in range(2):
+        expect = xs[g * 4:(g + 1) * 4].sum(0)
+        for r_ in range(4):
+            np.testing.assert_allclose(out[g * 4 + r_, 0, 0], expect)
+    for r_ in range(4):
+        expect = xs[r_] + xs[r_ + 4]
+        np.testing.assert_allclose(out[r_, 1, 0], expect)
+        np.testing.assert_allclose(out[r_ + 4, 1, 0], expect)
+    print("PRIM OK")
+    """)
+
+
+def test_flash_combine_fused_vs_faithful_vs_oracle():
+    run_multidevice("""
+    from repro.core import primitives as prim
+    mesh = jax.make_mesh((8,), ("c",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    key = jax.random.PRNGKey(0)
+    m = jax.random.normal(key, (8, 4))
+    l = jax.random.uniform(key, (8, 4)) + 0.5
+    o = jax.random.normal(jax.random.PRNGKey(1), (8, 4, 16))
+
+    def combine(fused):
+        def f(mm, ll, oo):
+            gm, gl, go = prim.cluster_flash_combine(
+                mm[0], ll[0], oo[0], "c", fused=fused)
+            return (go / gl[:, None])[None]
+        return jax.jit(shard_map(
+            f, mesh=mesh,
+            in_specs=(P("c", None), P("c", None), P("c", None, None)),
+            out_specs=P("c", None, None)))(m, l, o)
+
+    mg = np.max(np.asarray(m), axis=0)
+    lg = (np.exp(np.asarray(m) - mg) * np.asarray(l)).sum(0)
+    og = (np.exp(np.asarray(m) - mg)[..., None] * np.asarray(o)).sum(0) \
+        / lg[:, None]
+    for fused in (True, False):
+        out = np.asarray(combine(fused))
+        for r in range(8):
+            np.testing.assert_allclose(out[r], og, rtol=1e-5, atol=1e-5)
+    print("COMBINE OK")
+    """)
+
+
+def test_offchip_vs_onchip_reduce_equivalence():
+    run_multidevice("""
+    from repro.core import primitives as prim
+    mesh = jax.make_mesh((8,), ("c",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    x = jnp.arange(8 * 4, dtype=jnp.float32).reshape(8, 4)
+    on = jax.jit(shard_map(lambda v: prim.cluster_reduce(v, "c", "sum"),
+                           mesh=mesh, in_specs=P("c", None),
+                           out_specs=P("c", None)))(x)
+    off = jax.jit(shard_map(lambda v: prim.offchip_reduce(v[0], "c")[None],
+                            mesh=mesh, in_specs=P("c", None),
+                            out_specs=P("c", None)))(x)
+    np.testing.assert_allclose(np.asarray(on), np.asarray(off))
+    print("OFFCHIP OK")
+    """)
