@@ -8,7 +8,7 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from benchmarks.common import row, time_fn

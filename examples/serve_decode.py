@@ -25,6 +25,10 @@ def main():
     ap.add_argument("--arch", default="gemma2-27b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--tokens", type=int, default=24)
+    ap.add_argument("--backend", default="xla",
+                    choices=("xla", "pallas", "auto"),
+                    help="local-stage compute backend (pallas runs the "
+                         "fused decode kernels; interpret mode on CPU)")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
@@ -40,12 +44,15 @@ def main():
     for fused_combine in (False, True):
         params, pf, dec, state, lay, _ = build_engine(
             cfg, mesh, max_seq=64, batch_global=args.batch,
-            fused_combine=fused_combine)
+            fused_combine=fused_combine, backend=args.backend,
+            interpret=(args.backend != "xla"
+                       and jax.default_backend() == "cpu"))
         t0 = time.time()
         toks, _ = generate(cfg, params, pf, dec, state, prompts,
                            args.tokens, fe)
         dt = time.time() - t0
         label = "fused-merge" if fused_combine else "paper-faithful"
+        label += f"/{args.backend}"
         outs[fused_combine] = np.asarray(toks)
         print(f"{label:16s} combine: {args.tokens} tok × {args.batch} seq "
               f"in {dt:.2f}s  (cluster={lay.cluster})")

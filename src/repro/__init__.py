@@ -1,0 +1,7 @@
+"""ClusterFusion reproduction package.
+
+Importing the package installs the JAX version-compat shims
+(:mod:`repro.compat`) so the rest of the codebase — and inline test
+bodies — can target one API surface regardless of the pinned JAX.
+"""
+from repro import compat  # noqa: F401  (side effect: compat.install())

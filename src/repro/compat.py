@@ -1,0 +1,94 @@
+"""JAX version-compat layer.
+
+The codebase targets the current JAX API surface; the pinned runtime JAX
+(0.4.x) predates three renames we rely on:
+
+* ``jax.shard_map``            — lives in ``jax.experimental.shard_map``
+  and spells the replication-check kwarg ``check_rep`` (now ``check_vma``);
+* ``jax.make_mesh(axis_types=...)`` — the kwarg does not exist yet (all
+  meshes are "auto" in 0.4.x, so dropping it is semantics-preserving);
+* ``jax.sharding.AxisType``    — the enum the ``axis_types`` callers name.
+
+Everything funnels through this module: import :func:`shard_map` /
+:func:`make_mesh` directly, or import the module for its side effect —
+:func:`install` patches the missing names onto the ``jax`` namespace so
+inline test bodies written against the new API run unchanged on the
+pinned version.  On a new-enough JAX every shim is a passthrough.
+"""
+from __future__ import annotations
+
+import inspect
+from enum import Enum
+from functools import wraps
+
+import jax
+
+# ---------------------------------------------------------------------------
+# shard_map: jax.shard_map + check_vma  ->  experimental + check_rep
+# ---------------------------------------------------------------------------
+if hasattr(jax, "shard_map"):
+    _shard_map_impl = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_SM_PARAMS = set(inspect.signature(_shard_map_impl).parameters)
+
+
+@wraps(_shard_map_impl)
+def shard_map(f, /, *args, **kwargs):
+    if "check_vma" in kwargs and "check_vma" not in _SM_PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    if "check_rep" in kwargs and "check_rep" not in _SM_PARAMS:
+        kwargs["check_vma"] = kwargs.pop("check_rep")
+    return _shard_map_impl(f, *args, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# make_mesh: tolerate axis_types on JAX versions without the kwarg
+# ---------------------------------------------------------------------------
+_make_mesh_impl = jax.make_mesh
+_MM_HAS_AXIS_TYPES = "axis_types" in inspect.signature(_make_mesh_impl).parameters
+
+
+@wraps(_make_mesh_impl)
+def make_mesh(axis_shapes, axis_names, *args, **kwargs):
+    if not _MM_HAS_AXIS_TYPES:
+        kwargs.pop("axis_types", None)
+    return _make_mesh_impl(axis_shapes, axis_names, *args, **kwargs)
+
+
+class _AxisTypeStub(Enum):
+    """Placeholder for ``jax.sharding.AxisType`` (values are ignored by the
+    tolerant :func:`make_mesh` on old JAX)."""
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _axis_size(axis_name):
+    """``lax.axis_size`` fallback: psum of a literal folds to the size."""
+    return jax.lax.psum(1, axis_name)
+
+
+def install() -> None:
+    """Patch missing new-API names onto the ``jax`` namespace (idempotent)."""
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = shard_map
+    if not _MM_HAS_AXIS_TYPES:
+        jax.make_mesh = make_mesh
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisTypeStub
+    if not hasattr(jax.lax, "axis_size"):
+        jax.lax.axis_size = _axis_size
+    # Sharded-init correctness: the launch paths jit their RNG inits with
+    # ``out_shardings`` and rely on values being identical to the eager /
+    # single-device oracle.  Partitionable threefry guarantees that; it is
+    # the default on current JAX but off on the pinned 0.4.x.
+    try:
+        jax.config.update("jax_threefry_partitionable", True)
+    except Exception:  # removed flag on future JAX (always-on) — fine
+        pass
+
+
+install()

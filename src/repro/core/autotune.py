@@ -18,8 +18,10 @@ replaced by ICI/HBM constants.
 """
 from __future__ import annotations
 
+import json
 import math
-from dataclasses import dataclass
+import os
+from dataclasses import asdict, dataclass
 from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
@@ -30,6 +32,8 @@ PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
 HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link
 ICI_LAT = 1e-6               # seconds per hop (round latency floor)
+GRID_STEP_OVH = 1e-6         # per-Pallas-grid-step fixed overhead (s)
+VMEM_BUDGET = 8 * 2**20      # bytes for double-buffered KV blocks
 
 
 @dataclass(frozen=True)
@@ -116,3 +120,121 @@ def sweep(cfg: ModelConfig, *, seq_len: int, batch: int,
             pts.append(TunePoint(n, flow, t, terms))
         n *= 2
     return pts
+
+
+# ===========================================================================
+# Serving plan: (cluster, dataflow, backend, block_s) per seq-length bucket,
+# with a persisted table so repeated launches skip the search.
+# ===========================================================================
+@dataclass(frozen=True)
+class ServePlan:
+    cluster_size: int
+    dataflow: str                # "split_token" | "mla"
+    backend: str                 # "xla" | "pallas"
+    block_s: int                 # KV block granularity (both backends)
+    est_seconds: float
+
+
+def seq_bucket(seq_len: int) -> int:
+    """Power-of-two sequence-length bucket (≥ 256) — plans are tuned and
+    persisted per bucket, not per exact length."""
+    b = 256
+    while b < seq_len:
+        b *= 2
+    return b
+
+
+_BLOCK_CANDIDATES = (128, 256, 512, 1024, 2048)
+
+
+def pick_block_s(cfg: ModelConfig, seq_len: int, cluster_size: int,
+                 batch: int = 1) -> int:
+    """KV block size for the decode inner loop.
+
+    Per-rank live span is ``seq_len / N``; each block pays a fixed grid-
+    step overhead plus its HBM bytes, so the model prefers the largest
+    block whose double-buffered K+V tiles fit the VMEM budget and that
+    doesn't exceed the span (smaller blocks only add overhead).
+    """
+    hd = cfg.resolved_head_dim
+    if cfg.mla is not None:
+        row = (cfg.mla.kv_lora_rank + cfg.mla.rope_head_dim) * 2 * batch
+    else:
+        row = max(1, cfg.n_kv_heads) * hd * 2 * 2 * batch    # K+V rows, bf16
+    span = max(1, seq_len // max(cluster_size, 1))
+    best = _BLOCK_CANDIDATES[0]
+    for b in _BLOCK_CANDIDATES:
+        if b * row * 2 > VMEM_BUDGET:      # ×2: double-buffered pipeline
+            break
+        best = b
+        if b >= span:
+            break
+    # wide-KV configs: even the smallest candidate can blow the budget —
+    # halve until the double-buffered tiles fit (floor 8)
+    while best > 8 and best * row * 2 > VMEM_BUDGET:
+        best //= 2
+    return best
+
+
+def _backend_for(cfg: ModelConfig, backend: str) -> str:
+    """Resolve ``"auto"``: attention layers take the fused Pallas kernels
+    (no intermediate materialization, length-clamped HBM traffic);
+    attention-free architectures keep the XLA dataflow (the fusion scope
+    the paper targets does not apply — DESIGN.md §4)."""
+    if backend != "auto":
+        return backend
+    return "xla" if cfg.is_attention_free else "pallas"
+
+
+def tune_serving(cfg: ModelConfig, *, seq_len: int, batch: int,
+                 model_axis: int = 16, backend: str = "auto",
+                 table_path: Optional[str] = None) -> ServePlan:
+    """Pick the full serving plan for a (config, bucket) cell.
+
+    Consults/updates the persisted JSON table at ``table_path`` (or
+    ``$REPRO_AUTOTUNE_TABLE``) keyed by
+    ``name|model_axis|batch|seq_bucket|backend`` so repeated launches pay
+    zero search cost.
+    """
+    bucket = seq_bucket(seq_len)
+    key = f"{cfg.name}|ms{model_axis}|b{batch}|s{bucket}|{backend}"
+    path = table_path or os.environ.get("REPRO_AUTOTUNE_TABLE")
+    table = load_table(path)
+    if key in table:
+        try:
+            return ServePlan(**table[key])
+        except TypeError:          # schema drift / hand-edited entry
+            pass                   # fall through and re-tune (self-heals)
+    best = tune_cluster(cfg, seq_len=bucket, batch=batch,
+                        model_axis=model_axis)
+    plan = ServePlan(
+        cluster_size=best.cluster_size,
+        dataflow=best.dataflow if best.dataflow != "split_head"
+        else "split_token",            # split_head is bench-only
+        backend=_backend_for(cfg, backend),
+        block_s=pick_block_s(cfg, bucket, best.cluster_size, batch),
+        est_seconds=best.est_seconds,
+    )
+    table[key] = asdict(plan)
+    save_table(path, table)
+    return plan
+
+
+def load_table(path: Optional[str]) -> Dict[str, dict]:
+    if not path or not os.path.exists(path):
+        return {}
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return {}
+
+
+def save_table(path: Optional[str], table: Dict[str, dict]) -> None:
+    if not path:
+        return
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(table, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)

@@ -52,6 +52,13 @@ class ClusterSpec:
     cluster: Axis                # intra-head cluster sub-axis (size N)
     fused_combine: bool = False  # beyond-paper single-tree flash merge
     use_xla: bool = False        # XLA-native collectives (reference path)
+    # -- local-stage compute backend (DESIGN.md §2) ------------------------
+    backend: str = "xla"         # "xla" | "pallas": QKV-proj + RoPE + flash
+                                 # partial as XLA ops vs ONE fused Pallas
+                                 # kernel per rank (collectives in between)
+    interpret: bool = False      # Pallas interpret mode (CPU tests)
+    block_s: int = 256           # KV block granularity for the attention
+                                 # inner loop (both backends)
 
     @property
     def n_cluster(self) -> int:
@@ -148,6 +155,80 @@ def _softcap(x: jax.Array, cap: float) -> jax.Array:
     return jnp.tanh(x / cap) * cap if cap > 0 else x
 
 
+def _fit_block_s(S: int, block_s: int) -> int:
+    """Largest divisor of ``S`` that is ≤ ``block_s``.
+
+    Keeps bucketing alive when the tuned block doesn't divide the local
+    cache (e.g. s_blk = 320 with block_s = 256 ⇒ 160), instead of
+    silently collapsing to one full-cache bucket.  Falls back to ``S``
+    only when the best divisor is degenerately small (> 8× shrink —
+    near-prime lengths), where per-bucket overhead would exceed the
+    skipped work.
+    """
+    b = min(block_s, S)
+    while b > 1 and S % b:
+        b -= 1
+    return b if b * 8 > min(block_s, S) else S
+
+
+def bucketed_flash_attention(qf: jax.Array, kc: jax.Array, vc: jax.Array,
+                             valid: jax.Array, *, scale: float,
+                             softcap: float = 0.0, block_s: int = 256):
+    """Online-softmax attention over **live** KV blocks only.
+
+    The seed dataflow attended over the entire allocated cache every step
+    (masked), so decode FLOPs/bytes scaled with ``max_seq``.  Here the
+    local sequence axis is cut into ``block_s``-sized buckets and each
+    bucket runs under a ``lax.cond`` on its liveness (any valid slot) —
+    dead buckets (beyond the live prefix, or wholly outside a sliding
+    window) are skipped at runtime, making per-step cost proportional to
+    ``cache_len`` (DESIGN.md §3).  Per-bucket partials merge with the
+    usual flash rescale, so the result equals the single masked pass.
+
+    ``qf [B,K,Q,hd]``, ``kc/vc [S,B,K,hd]`` (``vc``'s trailing dim may
+    differ — MLA latent values), ``valid [S]`` bool.  Returns
+    ``(m, l, o, blocks_run)`` with the ``-1e30``-masked ``m`` convention
+    of :func:`repro.core.primitives.cluster_flash_combine`;
+    ``blocks_run`` counts executed buckets (proportionality evidence in
+    tests; dead code under ``jit`` when unused).
+    """
+    S = kc.shape[0]
+    ab = _fit_block_s(S, block_s)
+    nb = S // ab
+    B, K, Q = qf.shape[0], qf.shape[1], qf.shape[2]
+    hd_v = vc.shape[-1]
+    init = (jnp.full((B, K, Q), -1e30, jnp.float32),
+            jnp.zeros((B, K, Q), jnp.float32),
+            jnp.zeros((B, K, Q, hd_v), jnp.float32),
+            jnp.int32(0))
+
+    def body(i, carry):
+        start = i * ab
+        bv = lax.dynamic_slice_in_dim(valid, start, ab)
+
+        def live(c):
+            m, l, o, cnt = c
+            kb = lax.dynamic_slice_in_dim(kc, start, ab, axis=0)
+            vb = lax.dynamic_slice_in_dim(vc, start, ab, axis=0)
+            s = jnp.einsum("bkqh,sbkh->bkqs", qf, kb,
+                           preferred_element_type=jnp.float32) * scale
+            s = _softcap(s, softcap)
+            s = jnp.where(bv[None, None, None, :], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(bv[None, None, None, :], p, 0.0)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            o_new = o * corr[..., None] + jnp.einsum(
+                "bkqs,sbkh->bkqh", p.astype(vc.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return m_new, l_new, o_new, cnt + 1
+
+        return lax.cond(jnp.any(bv), live, lambda c: c, carry)
+
+    return lax.fori_loop(0, nb, body, init)
+
+
 # ---------------------------------------------------------------------------
 # Paper Alg. 3 — SplitToken dataflow (the main contribution)
 # ---------------------------------------------------------------------------
@@ -189,7 +270,18 @@ def split_token_attention(
     partitioned over the cluster axis along the model dim (the paper's
     atomicAdd tile).  Callers gather with ``spec.gather_tiled`` when the
     next op needs the full hidden vector.
+
+    ``spec.backend`` selects the local-stage compute: ``"xla"`` runs the
+    stages as XLA ops (block-bucketed attention over the live prefix);
+    ``"pallas"`` fuses QKV-Projection + RoPE + flash partial into one
+    Pallas kernel per rank (:mod:`repro.kernels.fused_decode`) with the
+    ClusterGather/ClusterReduce collectives kept between kernel
+    invocations — the paper's Level-2 fusion on TPU (DESIGN.md §2).
     """
+    if spec.backend == "pallas":
+        return _split_token_attention_pallas(
+            spec, x, w, cache, cache_len, window=window,
+            attn_softcap=attn_softcap, rope_theta=rope_theta, scale=scale)
     n = spec.n_cluster
     b_rank = prim.axis_index(spec.cluster)
     B = x.shape[0]
@@ -232,28 +324,21 @@ def split_token_attention(
         k.reshape(B * kv_local, hd), v.reshape(B * kv_local, hd),
         owner, local_slot, b_rank, cache_len)
 
-    # (4) FlashDecoding partial over the local sequence block (line 4).
+    # (4) FlashDecoding partial over the local sequence block (line 4),
+    # bucketed so only live blocks execute (cost ∝ cache_len, not S_blk).
     # Scores/outputs accumulate in f32 via preferred_element_type — the
     # bf16 cache is NEVER materialized as an f32 copy (§Perf iter 1: this
     # halves decode HBM bytes vs casting the cache).
     kc = cache.k.reshape(s_blk, B, kv_local, hd)
     vc = cache.v.reshape(s_blk, B, kv_local, hd)
     qf = q.reshape(B, kv_local, qpk, hd).astype(kc.dtype)
-    s = jnp.einsum("bkqh,sbkh->bkqs", qf, kc,
-                   preferred_element_type=jnp.float32) * scale
-    s = _softcap(s, attn_softcap)
     valid = cache.pos >= 0
     valid &= cache.pos <= cache_len
     if window > 0:
         valid &= cache.pos > cache_len - window
-    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
-    m = jnp.max(s, axis=-1)                                  # [B,kv,q]
-    # guard: ranks whose block is entirely masked contribute exp(-inf)=0
-    m_safe = jnp.where(jnp.isfinite(m), m, -1e30)
-    p = jnp.exp(s - m_safe[..., None])
-    l = jnp.sum(p, axis=-1)
-    o = jnp.einsum("bkqs,sbkh->bkqh", p.astype(vc.dtype), vc,
-                   preferred_element_type=jnp.float32)       # unnormalized
+    m_safe, l, o, _ = bucketed_flash_attention(
+        qf, kc, vc, valid, scale=scale, softcap=attn_softcap,
+        block_s=spec.block_s)
 
     # (5)–(7) ClusterReduce softmax stats, rescale, ClusterReduce outputs.
     _, l_g, o_g = spec.flash_combine(m_safe, l, o)
@@ -263,6 +348,111 @@ def split_token_attention(
     # (8) Output-Projection tile + cross-cluster (heads) reduction — the
     # paper writes with atomicAdd; on TPU this is the heads-axis tree sum.
     o_seg = att @ w.wo                                        # [B, D/N]
+    o_seg = spec.heads_reduce(o_seg)
+    return o_seg, cache
+
+
+def _split_token_attention_pallas(
+    spec: ClusterSpec,
+    x: jax.Array,
+    w: SplitTokenWeights,
+    cache: KVBlock,
+    cache_len: jax.Array,
+    *,
+    window: int,
+    attn_softcap: float,
+    rope_theta: float,
+    scale: Optional[float],
+) -> Tuple[jax.Array, KVBlock]:
+    """SplitToken with the local stage as ONE fused Pallas kernel per rank.
+
+    The paper's Alg. 3 gathers q/k/v *activation* segments across the
+    cluster between projection and attention; a Pallas kernel cannot host
+    an ICI collective mid-kernel, so the gather is hoisted to the head-dim
+    *weight* segments (``q = x·gather(Wq) == gather(x·Wq)``) and the whole
+    local stage — QKV projection, RoPE, FlashDecoding partial over this
+    rank's KV-sequence shard — runs inside
+    :func:`repro.kernels.fused_decode.fused_decode_attention`
+    (``fuse_out=False``).  The ClusterReduce flash combine, the
+    Output-Projection tile and the heads reduction stay between kernel
+    invocations, exactly the Level-2 schedule (DESIGN.md §2).
+
+    Behavior-parity with the XLA path: stored-position masking (ring /
+    sliding-window caches), softcap, GQA bias; the new token's own
+    attention contribution is counted once — by the rank owning the
+    append slot (``include_new``).
+    """
+    n = spec.n_cluster
+    b_rank = prim.axis_index(spec.cluster)
+    B, D = x.shape
+    q_local, hd_n = w.wq.shape[1], w.wq.shape[2]
+    kv_local = w.wk.shape[1]
+    hd = hd_n * n
+    qpk = q_local // kv_local
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    from repro.kernels.fused_decode.fused_decode import fused_decode_attention
+    from repro.kernels.fused_decode.ops import rope_at
+
+    # ClusterGather the head-dim weight segments (Alg. 3 line 3, hoisted
+    # from activations to weights so the local stage fuses into one kernel).
+    wq = spec.gather_tiled(w.wq, axis=2)                 # [D, q_local, hd]
+    wk = spec.gather_tiled(w.wk, axis=2)
+    wv = spec.gather_tiled(w.wv, axis=2)
+    wqkv = jnp.concatenate([wq.reshape(D, q_local * hd),
+                            wk.reshape(D, kv_local * hd),
+                            wv.reshape(D, kv_local * hd)], axis=1)
+    bqkv = None
+    if w.bq is not None:
+        bq = spec.gather_tiled(w.bq, axis=1)             # [q_local, hd]
+        bk = spec.gather_tiled(w.bk, axis=1)
+        bv = spec.gather_tiled(w.bv, axis=1)
+        bqkv = jnp.concatenate([bq.reshape(q_local * hd),
+                                bk.reshape(kv_local * hd),
+                                bv.reshape(kv_local * hd)])
+
+    cos, sin = rope_at(cache_len, hd, rope_theta)
+    s_blk = cache.k.shape[0]
+    slot = cache_len % (n * s_blk) if window > 0 else cache_len
+    owner, local_slot = slot // s_blk, slot % s_blk
+    include_new = (owner == b_rank).astype(jnp.int32)
+    # Non-window caches fill slots in position order (slot i of rank r ⇒
+    # position r·s_blk + i), enabling the kernel's mask-free fast path;
+    # ring caches are non-linear ⇒ pos_base = −1 (masked path).
+    if window > 0:
+        pos_base = jnp.int32(-1)
+    else:
+        pos_base = (b_rank * s_blk).astype(jnp.int32)
+    blk = _fit_block_s(s_blk, spec.block_s)
+    wo_unused = jnp.zeros((1, 1), x.dtype)   # O-proj runs after the combine
+
+    kc = cache.k.reshape(s_blk, B, kv_local, hd)
+    vc = cache.v.reshape(s_blk, B, kv_local, hd)
+
+    def one(xb, kb, vb):
+        acc, k_new, v_new, m, l = fused_decode_attention(
+            xb[None], wqkv, bqkv, wo_unused, kb, vb, cache_len, cos, sin,
+            q_heads=q_local, kv_heads=kv_local, scale=scale,
+            attn_softcap=attn_softcap, window=window, ring=window > 0,
+            block_s=blk, fuse_out=False, interpret=spec.interpret,
+            pos=cache.pos, include_new=include_new, pos_base=pos_base)
+        return acc[0], k_new[0], v_new[0], m[0], l[0]
+
+    acc, k_new, v_new, m, l = jax.vmap(one, in_axes=(0, 1, 1))(x, kc, vc)
+
+    # Append the kernel-emitted new KV on the owning rank (as in the XLA
+    # path; the kernel itself attended the new token via include_new).
+    cache = _insert_kv(cache, k_new.reshape(B * kv_local, hd),
+                       v_new.reshape(B * kv_local, hd),
+                       owner, local_slot, b_rank, cache_len)
+
+    # ClusterReduce combine + Output-Projection tile + heads reduction.
+    m = m.reshape(B, kv_local, qpk)
+    l = l.reshape(B, kv_local, qpk)
+    acc = acc.reshape(B, kv_local, qpk, hd)
+    _, l_g, o_g = spec.flash_combine(m, l, acc)
+    att = (o_g / jnp.maximum(l_g[..., None], 1e-30))
+    att = att.reshape(B, q_local * hd).astype(x.dtype)
+    o_seg = att @ w.wo                                       # [B, D/N]
     o_seg = spec.heads_reduce(o_seg)
     return o_seg, cache
 
@@ -374,7 +564,16 @@ def mla_attention(
     Schedule (faithful): 3 ClusterGathers (q segments, latent-kv segments,
     up-projected q) + 3 ClusterReduces (flash stats/outputs in latent space,
     value-up partial sums, output tiles via the heads reduction).
+
+    ``spec.backend == "pallas"`` routes the local stage (projections,
+    K-up absorption, RoPE, latent flash partial) through the fused MLA
+    kernel instead (:func:`_mla_attention_pallas`); the collectives and
+    the value-up / Output-Projection tail are shared.
     """
+    if spec.backend == "pallas":
+        return _mla_attention_pallas(
+            spec, x, w, cache, cache_len, nope_dim=nope_dim,
+            rope_dim=rope_dim, rope_theta=rope_theta)
     n = spec.n_cluster
     b_rank = prim.axis_index(spec.cluster)
     B = x.shape[0]
@@ -406,18 +605,17 @@ def mla_attention(
     cache = _insert_kv(cache, entry, entry[:, :1],           # v-side unused
                        owner, local_slot, b_rank, cache_len)
 
-    # (7): FlashDecoding partial in latent space over the local block.
+    # (7): FlashDecoding partial in latent space over the local block,
+    # bucketed over live blocks only (cost ∝ cache_len — DESIGN.md §3).
+    # The score contracts the concatenated (latent ++ rope) dim; values
+    # are the latent part, so o comes out in latent space.
     cc = cache.k.reshape(s_blk, B, l_rank + rope_dim).astype(jnp.float32)
-    cl, cr = cc[..., :l_rank], cc[..., l_rank:]
-    s = (jnp.einsum("bql,sbl->bqs", q_lat.astype(jnp.float32), cl)
-         + jnp.einsum("bqr,sbr->bqs", q_rope.astype(jnp.float32), cr)) * scale
+    q_cat = jnp.concatenate([q_lat, q_rope], axis=-1).astype(jnp.float32)
     valid = (cache.pos >= 0) & (cache.pos <= cache_len)
-    s = jnp.where(valid[None, None, :], s, -jnp.inf)
-    m = jnp.max(s, axis=-1)
-    m_safe = jnp.where(jnp.isfinite(m), m, -1e30)
-    p = jnp.exp(s - m_safe[..., None])
-    l_stat = jnp.sum(p, axis=-1)
-    o = jnp.einsum("bqs,sbl->bql", p, cl)                   # latent-space A_b
+    m_safe, l_stat, o, _ = bucketed_flash_attention(
+        q_cat[:, None], cc[:, :, None, :], cc[:, :, None, :l_rank], valid,
+        scale=scale, block_s=spec.block_s)
+    m_safe, l_stat, o = m_safe[:, 0], l_stat[:, 0], o[:, 0]  # [B,q,(l)]
 
     # (8)–(10): ClusterReduce stats + outputs (online-softmax rescale).
     _, l_g, o_g = spec.flash_combine(m_safe, l_stat, o)
@@ -431,6 +629,79 @@ def mla_attention(
     # (13): Output-Projection tile + heads reduction (atomicAdd analogue).
     o_seg = o_head.reshape(B, q_local * v_dim).astype(x.dtype) @ w.wo
     o_seg = spec.heads_reduce(o_seg)                        # [B, D/N]
+    return o_seg, cache
+
+
+def _mla_attention_pallas(
+    spec: ClusterSpec,
+    x: jax.Array,
+    w: MLAWeights,
+    cache: KVBlock,
+    cache_len: jax.Array,
+    *,
+    nope_dim: int,
+    rope_dim: int,
+    rope_theta: float,
+) -> Tuple[jax.Array, KVBlock]:
+    """Alg. 4 with the local stage as one fused Pallas kernel per rank.
+
+    As in :func:`_split_token_attention_pallas`, the three activation
+    ClusterGathers of Alg. 4 (q segments, latent-kv segments, absorbed q)
+    hoist to their weight segments, so Q-Projection, Down-Projection,
+    K-up absorption, RoPE and the latent-space flash partial all run in
+    :func:`repro.kernels.fused_mla_decode.fused_mla_decode_attention`
+    (``fuse_out=False``).  The ClusterReduce combine, the value
+    Up-Projection partial sums and the Output-Projection tile stay
+    between kernel invocations (paper Alg. 4 lines 8–13).
+    """
+    n = spec.n_cluster
+    b_rank = prim.axis_index(spec.cluster)
+    B, D = x.shape
+    q_local = w.wq.shape[1]
+    l_n = w.wuk.shape[2]
+    l_rank = l_n * n
+    v_dim = w.wuv.shape[2]
+    from repro.kernels.fused_mla_decode.fused_mla_decode import (
+        fused_mla_decode_attention)
+    from repro.kernels.fused_decode.ops import rope_at
+
+    # Weight-segment gathers replacing Alg. 4's activation gathers.
+    wq = spec.gather_tiled(w.wq, axis=2)      # [D, q_local, nope+rope]
+    wdkv = spec.gather_tiled(w.wdkv, axis=1)  # [D, l_rank+rope]
+    wuk = spec.gather_tiled(w.wuk, axis=2)    # [q_local, nope, l_rank]
+    wq2 = wq.reshape(D, q_local * (nope_dim + rope_dim))
+
+    cos, sin = rope_at(cache_len, rope_dim, rope_theta)
+    s_blk = cache.k.shape[0]
+    owner, local_slot = cache_len // s_blk, cache_len % s_blk
+    include_new = (owner == b_rank).astype(jnp.int32)
+    pos_base = (b_rank * s_blk).astype(jnp.int32)   # latent cache is linear
+    blk = _fit_block_s(s_blk, spec.block_s)
+    wo_unused = jnp.zeros((1, 1), x.dtype)   # value-up + O-proj after combine
+
+    def one(xb, cb):
+        acc, c_new, m, l = fused_mla_decode_attention(
+            xb[None], wq2, wdkv, wuk, w.wuv, wo_unused, cb, cache_len,
+            cos, sin, q_heads=q_local, nope=nope_dim, rope_d=rope_dim,
+            l_rank=l_rank, v_dim=v_dim, block_s=blk, fuse_out=False,
+            interpret=spec.interpret, pos=cache.pos,
+            include_new=include_new, pos_base=pos_base)
+        return acc[0], c_new[0], m[0], l[0]
+
+    acc, c_new, m, l = jax.vmap(one, in_axes=(0, 1))(x, cache.k)
+
+    # Append the kernel-emitted latent entry on the owning rank.
+    cache = _insert_kv(cache, c_new, c_new[:, :1],       # v-side unused
+                       owner, local_slot, b_rank, cache_len)
+
+    # (8)–(13): combine, value Up-Projection partials, O-Projection tile.
+    _, l_g, o_g = spec.flash_combine(m, l, acc)
+    a_lat = o_g / jnp.maximum(l_g[..., None], 1e-30)     # [B,q,l]
+    a_seg = lax.dynamic_slice_in_dim(a_lat, b_rank * l_n, l_n, axis=2)
+    o_head_part = jnp.einsum("bql,qlv->bqv", a_seg, w.wuv)
+    o_head = spec.reduce(o_head_part, "sum")             # [B,q,v]
+    o_seg = o_head.reshape(B, q_local * v_dim).astype(x.dtype) @ w.wo
+    o_seg = spec.heads_reduce(o_seg)                     # [B, D/N]
     return o_seg, cache
 
 

@@ -17,6 +17,8 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 
 def _kernel(cache_len_ref, q_ref, k_blk_ref, v_blk_ref,
             o_ref, m_s, l_s, acc_s,
@@ -113,7 +115,7 @@ def flash_decode_attention(
             ],
         ),
         out_shape=[jax.ShapeDtypeStruct((B, q_loc, hd), q.dtype)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(jnp.asarray(cache_len, jnp.int32).reshape(1), q, k_cache, v_cache)

@@ -12,11 +12,22 @@ One ``pallas_call`` per decode layer:
   step, online-softmax accumulators carried in VMEM scratch — the
   sequential analogue of ClusterReduce over concurrent blocks); the last
   step is the *output phase* (rescale + Output-Projection, one HBM write).
-* HBM traffic = weights + KV cache + x + o (+ the k/v append, which the
-  paper also pays) — no intermediate materialization, exactly the
-  SplitToken property.
-* blocks whose entire range is beyond ``cache_len`` are skipped
-  (``@pl.when``) — decode caches are usually partially filled.
+* HBM traffic = weights + **live prefix of** the KV cache + x + o (+ the
+  k/v append, which the paper also pays) — no intermediate
+  materialization, exactly the SplitToken property.  The scalar-prefetched
+  block index map is clamped with ``cache_len``: grid steps beyond the
+  live prefix re-address the already-resident block, so the pipeline
+  issues no new HBM copies for dead blocks, and the ``@pl.when`` guard
+  skips their compute.  Decode cost is therefore proportional to
+  ``cache_len``, not to the allocated ``S`` (DESIGN.md §3).
+* interior blocks that are provably fully live (linear slot layout,
+  no sliding window) take a mask-free fast path — no compare/select on
+  the hot loop.
+
+Cache slots carry explicit positions (``pos``; −1 ⇒ empty), which makes
+full, sliding-window and ring caches uniform with the XLA dataflow's
+``KVBlock.pos`` convention.  When the caller does not pass ``pos`` the
+kernel assumes the linear layout ``pos[i] = i``.
 
 Two modes:
 * ``fuse_out=True``  — returns ``o [B, D_out]`` (O-projection fused);
@@ -24,6 +35,9 @@ Two modes:
 * ``fuse_out=False`` — returns unnormalized ``(acc, m, l)`` partials for
   the cross-chip ClusterReduce combine (DESIGN.md §2, Level 2); the
   O-projection then runs after the combine, as in paper Alg. 3 lines 5–8.
+  ``include_new`` gates the new token's own attention contribution so
+  that, across a cluster, exactly the rank owning the append slot counts
+  it.
 """
 from __future__ import annotations
 
@@ -37,17 +51,21 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
 
-def _kernel(cache_len_ref,                       # scalar prefetch (SMEM)
+
+def _kernel(scalars_ref,                         # scalar prefetch (SMEM):
+                                                 # [cache_len, include_new,
+                                                 #  pos_base]
             x_ref, wqkv_ref, bqkv_ref, wo_ref, cos_ref, sin_ref,
-            k_blk_ref, v_blk_ref,
+            k_blk_ref, v_blk_ref, pos_blk_ref,
             o_ref, k_new_ref, v_new_ref, m_out_ref, l_out_ref,
             q_s, k_s, v_s, m_s, l_s, acc_s,
             *, blk_s: int, n_blocks: int, q_loc: int, kv_loc: int,
-            hd: int, scale: float, cap: float, window: int,
+            hd: int, scale: float, cap: float, window: int, ring: bool,
             fuse_out: bool):
     j = pl.program_id(0)
-    cache_len = cache_len_ref[0]
+    cache_len = scalars_ref[0]
     B = x_ref.shape[0]
     qpk = q_loc // kv_loc
 
@@ -83,32 +101,52 @@ def _kernel(cache_len_ref,                       # scalar prefetch (SMEM)
     # ---------------- phases 1..n: FlashDecoding over cache blocks -----
     blk_idx = j - 1
     blk_start = blk_idx * blk_s
-    in_range = (j > 0) & (j <= n_blocks) & (blk_start < cache_len)
-    lo = cache_len - window if window > 0 else -1
-    live = in_range & (blk_start + blk_s > lo)
+    pos_base = scalars_ref[2]
+    # Rank-local live span: linear slots hold position pos_base + index,
+    # so this rank's live prefix ends at cache_len − pos_base (a non-owner
+    # rank whose shard starts beyond cache_len has NO live slots and runs
+    # no attend steps).  Ring slot i maps to a global ring slot ≥ i, first
+    # written once cache_len exceeds it, so the same bound is a valid
+    # (conservative) cull there, with pos_base = −1 ⇒ eff = cache_len.
+    eff_len = cache_len - jnp.maximum(pos_base, 0)
+    in_range = (j > 0) & (j <= n_blocks) & (blk_start < eff_len)
+    if ring:
+        # Ring cache: slot offsets are NOT positions once wrapped, so the
+        # window bound cannot cull by offset — every resident block may
+        # hold in-window entries; the stored-pos mask does the exact cut.
+        live = in_range
+    else:
+        lo = cache_len - window - jnp.maximum(pos_base, 0) \
+            if window > 0 else -1
+        live = in_range & (blk_start + blk_s > lo)
+    # Mask-free fast path: slots are position-linear (pos_base >= 0, i.e.
+    # pos[i] = pos_base + i) and the whole block is inside the live prefix.
+    full = (live & (pos_base >= 0)
+            & (pos_base + blk_start + blk_s <= cache_len)
+            & (window == 0))
 
-    @pl.when(live)
-    def _attend():
+    def _attend(masked: bool):
         q = q_s[...].reshape(B, kv_loc, qpk, hd)         # f32 scratch
         kb = k_blk_ref[...].astype(jnp.float32)          # [blk, kv_loc, hd]
         vb = v_blk_ref[...].astype(jnp.float32)
         s = jax.lax.dot_general(
-            q.reshape(B * kv_loc * qpk, hd)
-             .reshape(B, kv_loc, qpk, hd),
-            kb, (((3,), (2,)), ((1,), (1,))),            # contract hd, batch kv
+            q, kb, (((3,), (2,)), ((1,), (1,))),         # contract hd, batch kv
         )                                                # [kv, B, qpk, blk]
         s = jnp.moveaxis(s, 0, 1) * scale                # [B, kv, qpk, blk]
         if cap > 0:
             s = jnp.tanh(s / cap) * cap
-        pos = blk_start + lax.broadcasted_iota(jnp.int32, (1, 1, 1, blk_s), 3)
-        valid = pos < cache_len
-        if window > 0:
-            valid &= pos > cache_len - window
-        s = jnp.where(valid, s, -1e30)
+        valid = None
+        if masked:
+            pos = pos_blk_ref[...].reshape(1, 1, 1, blk_s)
+            valid = (pos >= 0) & (pos < cache_len)
+            if window > 0:
+                valid &= pos > cache_len - window
+            s = jnp.where(valid, s, -1e30)
         m_prev, l_prev = m_s[...], l_s[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
-        p = jnp.where(valid, p, 0.0)
+        if masked:
+            p = jnp.where(valid, p, 0.0)
         corr = jnp.exp(m_prev - m_new)
         m_s[...] = m_new
         l_s[...] = l_prev * corr + jnp.sum(p, axis=-1)
@@ -118,16 +156,27 @@ def _kernel(cache_len_ref,                       # scalar prefetch (SMEM)
         pv = jnp.moveaxis(pv, 0, 1)
         acc_s[...] = acc_s[...] * corr[..., None] + pv
 
+    @pl.when(full)
+    def _attend_full():
+        _attend(masked=False)
+
+    @pl.when(live & jnp.logical_not(full))
+    def _attend_masked():
+        _attend(masked=True)
+
     # ---------------- final phase: new-token KV + output ---------------
     @pl.when(j == n_blocks + 1)
     def _finalize():
-        # append the new token's (k, v) contribution from scratch
+        # append the new token's (k, v) contribution from scratch; across a
+        # cluster only the slot-owning rank counts it (include_new).
+        include_new = scalars_ref[1] > 0
         q = q_s[...].reshape(B, kv_loc, qpk, hd)
         k_new = k_s[...]                                  # [B, kv_loc, hd]
         v_new = v_s[...]
         s = jnp.einsum("bkqh,bkh->bkq", q, k_new) * scale
         if cap > 0:
             s = jnp.tanh(s / cap) * cap
+        s = jnp.where(include_new, s, -1e30)
         m_prev, l_prev = m_s[...], l_s[...]
         m_new = jnp.maximum(m_prev, s)
         p = jnp.exp(s - m_new)
@@ -147,6 +196,44 @@ def _kernel(cache_len_ref,                       # scalar prefetch (SMEM)
         l_out_ref[...] = l_fin.reshape(B, q_loc)
 
 
+def _live_block_bounds(cache_len, blk_s: int, n_blocks: int, window: int,
+                       ring: bool = False, pos_base=0):
+    """[lo, hi] inclusive block-index range the pipeline may address.
+
+    Blocks outside it are dead (wholly beyond the live prefix, or wholly
+    below the sliding window); the index map clamps into this range so
+    dead grid steps re-address a resident block instead of issuing a new
+    HBM copy.  Exposed at module level so tests can assert the maps stop
+    advancing past the live prefix.
+
+    ``pos_base`` rank-localizes the bounds on a sharded linear cache
+    (slot i holds position pos_base + i): a rank whose shard starts past
+    ``cache_len`` addresses only block 0.  ``ring=True`` (wrapped slot
+    layout, pos_base < 0): offsets are not positions, so only the
+    fill-order upper bound applies — slot i is first written when
+    ``cache_len`` exceeds its global ring slot (≥ i), hence blocks with
+    ``blk_start >= cache_len`` are still provably unwritten.
+    """
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+    eff = cache_len - jnp.maximum(jnp.asarray(pos_base, jnp.int32), 0)
+    hi = jnp.clip((eff + blk_s - 1) // blk_s - 1, 0, n_blocks - 1)
+    if window > 0 and not ring:
+        lo = jnp.clip((eff - window) // blk_s, 0, hi)
+    else:
+        lo = jnp.zeros_like(hi)
+    return lo, hi
+
+
+def _cache_block_index(j, cache_len, *, blk_s: int, n_blocks: int,
+                       window: int, ring: bool = False, pos_base=0):
+    """Block index fetched at grid step ``j`` (step 0 is the projection
+    phase; steps 1..n_blocks are attention; the final step re-addresses
+    the last live block)."""
+    lo, hi = _live_block_bounds(cache_len, blk_s, n_blocks, window, ring,
+                                pos_base)
+    return jnp.clip(j - 1, lo, hi)
+
+
 def fused_decode_attention(
     x: jax.Array,                 # [B, D]
     wqkv: jax.Array,              # [D, (q_loc + 2 kv_loc) * hd]
@@ -163,9 +250,16 @@ def fused_decode_attention(
     scale: Optional[float] = None,
     attn_softcap: float = 0.0,
     window: int = 0,
+    ring: bool = False,   # slots wrap (pos ≠ index): window culls by stored
+                          # pos only, never by block offset
     block_s: int = 512,
     fuse_out: bool = True,
     interpret: bool = False,
+    pos: Optional[jax.Array] = None,          # [S] slot positions (−1 empty)
+    include_new: Optional[jax.Array] = None,  # count the new token's own
+                                              # attention (cluster: owner only)
+    pos_base: Optional[jax.Array] = None,     # pos[i] = pos_base + i when the
+                                              # layout is linear; −1 otherwise
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Returns ``(o, k_new, v_new, m, l)``.
 
@@ -184,18 +278,37 @@ def fused_decode_attention(
     d_out = wo.shape[1]
     if bqkv is None:
         bqkv = jnp.zeros((wqkv.shape[1],), wqkv.dtype)
+    if pos is None:
+        pos = jnp.arange(S, dtype=jnp.int32)
+        if pos_base is None:
+            pos_base = jnp.int32(0)
+    if pos_base is None:
+        pos_base = jnp.int32(-1)
+    if include_new is None:
+        include_new = jnp.int32(1)
+    scalars = jnp.stack([
+        jnp.asarray(cache_len, jnp.int32).reshape(()),
+        jnp.asarray(include_new, jnp.int32).reshape(()),
+        jnp.asarray(pos_base, jnp.int32).reshape(()),
+    ])
 
     kernel = functools.partial(
         _kernel, blk_s=blk_s, n_blocks=n_blocks, q_loc=q_loc, kv_loc=kv_loc,
-        hd=hd, scale=scale, cap=attn_softcap, window=window,
+        hd=hd, scale=scale, cap=attn_softcap, window=window, ring=ring,
         fuse_out=fuse_out)
 
     grid = (n_blocks + 2,)
     o_shape = (B, d_out) if fuse_out else (B, q_loc, hd)
 
-    def cache_map(j, *_):
-        b = jnp.clip(j - 1, 0, n_blocks - 1)
+    def cache_map(j, s_ref):
+        b = _cache_block_index(j, s_ref[0], blk_s=blk_s, n_blocks=n_blocks,
+                               window=window, ring=ring, pos_base=s_ref[2])
         return (b, 0, 0)
+
+    def pos_map(j, s_ref):
+        b = _cache_block_index(j, s_ref[0], blk_s=blk_s, n_blocks=n_blocks,
+                               window=window, ring=ring, pos_base=s_ref[2])
+        return (0, b)
 
     out = pl.pallas_call(
         kernel,
@@ -211,6 +324,7 @@ def fused_decode_attention(
                 pl.BlockSpec((1, hd // 2), lambda j, *_: (0, 0)),           # sin
                 pl.BlockSpec((blk_s, kv_loc, hd), cache_map),           # k
                 pl.BlockSpec((blk_s, kv_loc, hd), cache_map),           # v
+                pl.BlockSpec((1, blk_s), pos_map),                      # pos
             ],
             out_specs=[
                 pl.BlockSpec(o_shape, lambda j, *_: (0,) * len(o_shape)),
@@ -236,10 +350,11 @@ def fused_decode_attention(
             jax.ShapeDtypeStruct((B, q_loc), jnp.float32),
             jax.ShapeDtypeStruct((B, q_loc), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
-    )(jnp.asarray(cache_len, jnp.int32).reshape(1),
+    )(scalars,
       x, wqkv, bqkv.reshape(1, -1), wo,
-      cos.reshape(1, -1), sin.reshape(1, -1), k_cache, v_cache)
+      cos.reshape(1, -1), sin.reshape(1, -1), k_cache, v_cache,
+      jnp.asarray(pos, jnp.int32).reshape(1, S))
     return tuple(out)

@@ -11,17 +11,23 @@ from repro.kernels.fused_decode.ref import fused_decode_attention_ref
 
 
 @partial(jax.jit, static_argnames=("q_heads", "kv_heads", "scale",
-                                   "attn_softcap", "window", "block_s",
-                                   "fuse_out", "interpret", "use_ref"))
+                                   "attn_softcap", "window", "ring",
+                                   "block_s", "fuse_out", "interpret",
+                                   "use_ref"))
 def fused_decode(x, wqkv, bqkv, wo, k_cache, v_cache, cache_len, cos, sin,
                  *, q_heads, kv_heads, scale=None, attn_softcap=0.0,
-                 window=0, block_s=512, fuse_out=True, interpret=False,
-                 use_ref=False):
-    fn = fused_decode_attention_ref if use_ref else fused_decode_attention
-    return fn(x, wqkv, bqkv, wo, k_cache, v_cache, cache_len, cos, sin,
-              q_heads=q_heads, kv_heads=kv_heads, scale=scale,
+                 window=0, ring=False, block_s=512, fuse_out=True,
+                 interpret=False, use_ref=False, pos=None, include_new=None,
+                 pos_base=None):
+    kw = dict(q_heads=q_heads, kv_heads=kv_heads, scale=scale,
               attn_softcap=attn_softcap, window=window, block_s=block_s,
-              fuse_out=fuse_out, interpret=interpret)
+              fuse_out=fuse_out, pos=pos, include_new=include_new)
+    if use_ref:
+        return fused_decode_attention_ref(
+            x, wqkv, bqkv, wo, k_cache, v_cache, cache_len, cos, sin, **kw)
+    return fused_decode_attention(
+        x, wqkv, bqkv, wo, k_cache, v_cache, cache_len, cos, sin,
+        interpret=interpret, pos_base=pos_base, ring=ring, **kw)
 
 
 def rope_at(position, head_dim: int, theta: float = 10000.0):

@@ -14,6 +14,7 @@ def fused_decode_attention_ref(
     cache_len, cos: jax.Array, sin: jax.Array, *,
     q_heads: int, kv_heads: int, scale: Optional[float] = None,
     attn_softcap: float = 0.0, window: int = 0, fuse_out: bool = True,
+    pos: Optional[jax.Array] = None, include_new=None,
     **_,
 ) -> Tuple[jax.Array, ...]:
     B, D = x.shape
@@ -46,10 +47,14 @@ def fused_decode_attention_ref(
     if attn_softcap > 0:
         s_cache = jnp.tanh(s_cache / attn_softcap) * attn_softcap
         s_self = jnp.tanh(s_self / attn_softcap) * attn_softcap
-    pos = jnp.arange(S)
-    valid = pos < cache_len
+    if pos is None:
+        pos = jnp.arange(S)
+    valid = (pos >= 0) & (pos < cache_len)
     if window > 0:
         valid &= pos > cache_len - window
+    if include_new is not None:
+        # -1e30 (not -inf) keeps m finite when the cache is empty too
+        s_self = jnp.where(include_new > 0, s_self, -1e30)
     s_cache = jnp.where(valid[None, None, None, :], s_cache, -jnp.inf)
     s_all = jnp.concatenate([s_cache, s_self[..., None]], axis=-1)
     m = jnp.max(s_all, axis=-1)

@@ -5,9 +5,26 @@ Phases (one ``pallas_call``, grid sequential):
       + RoPE, all resident in VMEM scratch; emits the new latent cache entry.
   1..n.  FlashDecoding in *latent space* over the compressed cache
       (this is MLA's whole point — the cache is [S, l+rope] shared by all
-      heads, MQA-style).
-  n+1.  New-entry contribution + online-softmax finalize + value
-      Up-Projection (A·W_UV) + Output-Projection, one HBM write.
+      heads, MQA-style).  The block index map is clamped with ``cache_len``
+      (scalar prefetch), so grid steps beyond the live prefix re-address
+      the resident block — HBM traffic is proportional to ``cache_len``,
+      not the allocated ``S`` (DESIGN.md §3) — and interior fully-live
+      blocks take a mask-free fast path.
+  n+1.  New-entry contribution (gated by ``include_new`` — across a
+      cluster only the append-slot owner counts it) + online-softmax
+      finalize + value Up-Projection (A·W_UV) + Output-Projection, one
+      HBM write.
+
+Cache slots carry explicit positions (``pos``; −1 ⇒ empty) matching the
+XLA dataflow's ``KVBlock.pos`` convention; without ``pos`` the linear
+layout ``pos[i] = i`` is assumed.
+
+Two modes:
+* ``fuse_out=True``  — returns final ``o [B, D_out]``.
+* ``fuse_out=False`` — returns the *unnormalized* latent flash partials
+  ``acc [B, q, l_rank]`` plus ``(m, l)`` for the cross-chip
+  ClusterReduce combine (paper Alg. 4 lines 8–10); the value
+  Up-Projection and Output-Projection then run after the combine.
 """
 from __future__ import annotations
 
@@ -21,17 +38,20 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+from repro.kernels.fused_decode.fused_decode import _cache_block_index
 
-def _kernel(cache_len_ref,
+
+def _kernel(scalars_ref,          # [cache_len, include_new, pos_base] (SMEM)
             x_ref, wq_ref, wdkv_ref, wuk_ref, wuv_ref, wo_ref,
-            cos_ref, sin_ref, c_blk_ref,
-            o_ref, c_new_ref,
+            cos_ref, sin_ref, c_blk_ref, pos_blk_ref,
+            o_ref, c_new_ref, m_out_ref, l_out_ref,
             q_s, m_s, l_s, acc_s,
             *, blk_s: int, n_blocks: int, q_loc: int, nope: int,
             rope_d: int, l_rank: int, v_dim: int, scale: float,
             fuse_out: bool):
     j = pl.program_id(0)
-    cache_len = cache_len_ref[0]
+    cache_len = scalars_ref[0]
     B = x_ref.shape[0]
     lr = l_rank + rope_d
 
@@ -67,20 +87,28 @@ def _kernel(cache_len_ref,
         acc_s[...] = jnp.zeros_like(acc_s[...])
 
     blk_start = (j - 1) * blk_s
-    live = (j > 0) & (j <= n_blocks) & (blk_start < cache_len)
+    pos_base = scalars_ref[2]
+    # rank-local live span (slot i holds position pos_base + i)
+    eff_len = cache_len - jnp.maximum(pos_base, 0)
+    live = (j > 0) & (j <= n_blocks) & (blk_start < eff_len)
+    full = (live & (pos_base >= 0)
+            & (pos_base + blk_start + blk_s <= cache_len))
 
-    @pl.when(live)
-    def _attend():
+    def _attend(masked: bool):
         q = q_s[...]                                          # [B,q,l+r]
         cb = c_blk_ref[...].astype(jnp.float32)               # [blk, l+r]
         s = jax.lax.dot_general(q, cb, (((2,), (1,)), ((), ())))
         s = s * scale                                         # [B,q,blk]
-        pos = blk_start + lax.broadcasted_iota(jnp.int32, (1, 1, blk_s), 2)
-        valid = pos < cache_len
-        s = jnp.where(valid, s, -1e30)
+        valid = None
+        if masked:
+            pos = pos_blk_ref[...].reshape(1, 1, blk_s)
+            valid = (pos >= 0) & (pos < cache_len)
+            s = jnp.where(valid, s, -1e30)
         m_prev, l_prev = m_s[...], l_s[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
-        p = jnp.where(valid, jnp.exp(s - m_new[..., None]), 0.0)
+        p = jnp.exp(s - m_new[..., None])
+        if masked:
+            p = jnp.where(valid, p, 0.0)
         corr = jnp.exp(m_prev - m_new)
         m_s[...] = m_new
         l_s[...] = l_prev * corr + jnp.sum(p, axis=-1)
@@ -88,11 +116,21 @@ def _kernel(cache_len_ref,
                                  (((2,), (0,)), ((), ())))    # [B,q,l]
         acc_s[...] = acc_s[...] * corr[..., None] + pv
 
+    @pl.when(full)
+    def _attend_full():
+        _attend(masked=False)
+
+    @pl.when(live & jnp.logical_not(full))
+    def _attend_masked():
+        _attend(masked=True)
+
     @pl.when(j == n_blocks + 1)
     def _finalize():
+        include_new = scalars_ref[1] > 0
         q = q_s[...]
         c_new = c_new_ref[...].astype(jnp.float32)            # [B, l+r]
         s = jnp.einsum("bql,bl->bq", q, c_new) * scale
+        s = jnp.where(include_new, s, -1e30)
         m_prev, l_prev = m_s[...], l_s[...]
         m_new = jnp.maximum(m_prev, s)
         p = jnp.exp(s - m_new)
@@ -100,17 +138,19 @@ def _kernel(cache_len_ref,
         l_fin = l_prev * corr + p
         acc = acc_s[...] * corr[..., None] \
             + p[..., None] * c_new[:, None, :l_rank]
-        a_lat = acc / l_fin[..., None]                        # [B,q,l]
-        # value Up-Projection (A · W_UV)  → [B, q, v]
-        o_head = jax.lax.dot_general(
-            a_lat, wuv_ref[...].astype(jnp.float32),
-            (((2,), (1,)), ((1,), (0,))))                     # [q, B, v]
-        o_head = jnp.moveaxis(o_head, 0, 1).reshape(B, q_loc * v_dim)
+        m_out_ref[...] = m_new
+        l_out_ref[...] = l_fin
         if fuse_out:
+            a_lat = acc / l_fin[..., None]                    # [B,q,l]
+            # value Up-Projection (A · W_UV)  → [B, q, v]
+            o_head = jax.lax.dot_general(
+                a_lat, wuv_ref[...].astype(jnp.float32),
+                (((2,), (1,)), ((1,), (0,))))                 # [q, B, v]
+            o_head = jnp.moveaxis(o_head, 0, 1).reshape(B, q_loc * v_dim)
             o_ref[...] = jax.lax.dot(
                 o_head, wo_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
         else:
-            o_ref[...] = o_head.reshape(B, q_loc, v_dim).astype(o_ref.dtype)
+            o_ref[...] = acc.astype(o_ref.dtype)              # unnormalized
 
 
 def fused_mla_decode_attention(
@@ -127,8 +167,17 @@ def fused_mla_decode_attention(
     *,
     q_heads: int, nope: int, rope_d: int, l_rank: int, v_dim: int,
     block_s: int = 512, fuse_out: bool = True, interpret: bool = False,
-) -> Tuple[jax.Array, jax.Array]:
-    """Returns (o, c_new).  o: [B, D_out] (fused) or [B, q, v] partials."""
+    pos: Optional[jax.Array] = None,
+    include_new: Optional[jax.Array] = None,
+    pos_base: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Returns ``(o, c_new, m, l)``.
+
+    ``fuse_out=True``: o = [B, D_out] (final; m/l informational).
+    ``fuse_out=False``: o = [B, q, l_rank] *unnormalized* latent
+    accumulator — combine across chips with ``cluster_flash_combine``,
+    then Up-Project and Output-Project.
+    """
     B, D = x.shape
     S, lr = c_cache.shape
     assert lr == l_rank + rope_d
@@ -137,12 +186,35 @@ def fused_mla_decode_attention(
     assert S % blk_s == 0
     n_blocks = S // blk_s
     d_out = wo.shape[1]
-    o_shape = (B, d_out) if fuse_out else (B, q_heads, v_dim)
+    o_shape = (B, d_out) if fuse_out else (B, q_heads, l_rank)
+    if pos is None:
+        pos = jnp.arange(S, dtype=jnp.int32)
+        if pos_base is None:
+            pos_base = jnp.int32(0)
+    if pos_base is None:
+        pos_base = jnp.int32(-1)
+    if include_new is None:
+        include_new = jnp.int32(1)
+    scalars = jnp.stack([
+        jnp.asarray(cache_len, jnp.int32).reshape(()),
+        jnp.asarray(include_new, jnp.int32).reshape(()),
+        jnp.asarray(pos_base, jnp.int32).reshape(()),
+    ])
 
     kernel = functools.partial(
         _kernel, blk_s=blk_s, n_blocks=n_blocks, q_loc=q_heads, nope=nope,
         rope_d=rope_d, l_rank=l_rank, v_dim=v_dim, scale=scale,
         fuse_out=fuse_out)
+
+    def cache_map(j, s_ref):
+        b = _cache_block_index(j, s_ref[0], blk_s=blk_s, n_blocks=n_blocks,
+                               window=0, pos_base=s_ref[2])
+        return (b, 0)
+
+    def pos_map(j, s_ref):
+        b = _cache_block_index(j, s_ref[0], blk_s=blk_s, n_blocks=n_blocks,
+                               window=0, pos_base=s_ref[2])
+        return (0, b)
 
     out = pl.pallas_call(
         kernel,
@@ -158,13 +230,14 @@ def fused_mla_decode_attention(
                 pl.BlockSpec(wo.shape, lambda j, *_: (0, 0)),
                 pl.BlockSpec((1, rope_d // 2), lambda j, *_: (0, 0)),
                 pl.BlockSpec((1, rope_d // 2), lambda j, *_: (0, 0)),
-                pl.BlockSpec((blk_s, lr),
-                             lambda j, *_: (jnp.clip(j - 1, 0, n_blocks - 1),
-                                            0)),
+                pl.BlockSpec((blk_s, lr), cache_map),
+                pl.BlockSpec((1, blk_s), pos_map),
             ],
             out_specs=[
                 pl.BlockSpec(o_shape, lambda j, *_: (0,) * len(o_shape)),
                 pl.BlockSpec((B, lr), lambda j, *_: (0, 0)),
+                pl.BlockSpec((B, q_heads), lambda j, *_: (0, 0)),
+                pl.BlockSpec((B, q_heads), lambda j, *_: (0, 0)),
             ],
             scratch_shapes=[
                 pltpu.VMEM((B, q_heads, lr), jnp.float32),
@@ -177,11 +250,13 @@ def fused_mla_decode_attention(
             jax.ShapeDtypeStruct(o_shape,
                                  x.dtype if fuse_out else jnp.float32),
             jax.ShapeDtypeStruct((B, lr), c_cache.dtype),
+            jax.ShapeDtypeStruct((B, q_heads), jnp.float32),
+            jax.ShapeDtypeStruct((B, q_heads), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
-    )(jnp.asarray(cache_len, jnp.int32).reshape(1),
+    )(scalars,
       x, wq, wdkv, wuk, wuv, wo, cos.reshape(1, -1), sin.reshape(1, -1),
-      c_cache)
+      c_cache, jnp.asarray(pos, jnp.int32).reshape(1, S))
     return tuple(out)

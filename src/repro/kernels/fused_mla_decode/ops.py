@@ -15,10 +15,14 @@ from repro.kernels.fused_mla_decode.ref import fused_mla_decode_attention_ref
                                    "interpret", "use_ref"))
 def fused_mla_decode(x, wq, wdkv, wuk, wuv, wo, c_cache, cache_len, cos, sin,
                      *, q_heads, nope, rope_d, l_rank, v_dim, block_s=512,
-                     fuse_out=True, interpret=False, use_ref=False):
-    fn = (fused_mla_decode_attention_ref if use_ref
-          else fused_mla_decode_attention)
-    return fn(x, wq, wdkv, wuk, wuv, wo, c_cache, cache_len, cos, sin,
-              q_heads=q_heads, nope=nope, rope_d=rope_d, l_rank=l_rank,
-              v_dim=v_dim, block_s=block_s, fuse_out=fuse_out,
-              interpret=interpret)
+                     fuse_out=True, interpret=False, use_ref=False,
+                     pos=None, include_new=None, pos_base=None):
+    kw = dict(q_heads=q_heads, nope=nope, rope_d=rope_d, l_rank=l_rank,
+              v_dim=v_dim, fuse_out=fuse_out, pos=pos,
+              include_new=include_new)
+    if use_ref:
+        return fused_mla_decode_attention_ref(
+            x, wq, wdkv, wuk, wuv, wo, c_cache, cache_len, cos, sin, **kw)
+    return fused_mla_decode_attention(
+        x, wq, wdkv, wuk, wuv, wo, c_cache, cache_len, cos, sin,
+        block_s=block_s, interpret=interpret, pos_base=pos_base, **kw)

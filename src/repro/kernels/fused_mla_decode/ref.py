@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import math
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -10,8 +10,11 @@ import jax.numpy as jnp
 
 def fused_mla_decode_attention_ref(
     x, wq, wdkv, wuk, wuv, wo, c_cache, cache_len, cos, sin, *,
-    q_heads, nope, rope_d, l_rank, v_dim, fuse_out: bool = True, **_,
-) -> Tuple[jax.Array, jax.Array]:
+    q_heads, nope, rope_d, l_rank, v_dim, fuse_out: bool = True,
+    pos: Optional[jax.Array] = None, include_new=None, **_,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Returns ``(o, c_new, m, l)`` — same contract as the kernel:
+    ``fuse_out=False`` gives the *unnormalized* latent accumulator."""
     B, D = x.shape
     S, lr = c_cache.shape
     scale = 1.0 / math.sqrt(nope + rope_d)
@@ -37,16 +40,25 @@ def fused_mla_decode_attention_ref(
                + jnp.einsum("bqr,sr->bqs", q_rope, cache[:, l_rank:])) * scale
     s_self = (jnp.einsum("bql,bl->bq", q_lat, c_lat)
               + jnp.einsum("bqr,br->bq", q_rope, c_rope)) * scale
-    valid = jnp.arange(S) < cache_len
+    if include_new is not None:
+        # -1e30 (not -inf) keeps m finite when the cache is empty too
+        s_self = jnp.where(include_new > 0, s_self, -1e30)
+    if pos is None:
+        pos = jnp.arange(S)
+    valid = (pos >= 0) & (pos < cache_len)
     s_cache = jnp.where(valid[None, None, :], s_cache, -jnp.inf)
     s_all = jnp.concatenate([s_cache, s_self[..., None]], axis=-1)
-    p = jax.nn.softmax(s_all, axis=-1)
-    a_lat = jnp.einsum("bqs,sl->bql", p[..., :-1], cache[:, :l_rank]) \
-        + p[..., -1][..., None] * c_lat[:, None, :]
-    o_head = jnp.einsum("bql,qlv->bqv", a_lat, wuv.astype(jnp.float32))
+    m = jnp.max(s_all, axis=-1)
+    p_un = jnp.exp(s_all - m[..., None])
+    p_un = jnp.where(jnp.isfinite(s_all), p_un, 0.0)
+    l = jnp.sum(p_un, axis=-1)
+    acc = jnp.einsum("bqs,sl->bql", p_un[..., :-1], cache[:, :l_rank]) \
+        + p_un[..., -1][..., None] * c_lat[:, None, :]
     if fuse_out:
+        a_lat = acc / l[..., None]
+        o_head = jnp.einsum("bql,qlv->bqv", a_lat, wuv.astype(jnp.float32))
         o = (o_head.reshape(B, q_heads * v_dim)
              @ wo.astype(jnp.float32)).astype(x.dtype)
     else:
-        o = o_head
-    return o, c_new.astype(c_cache.dtype)
+        o = acc
+    return o, c_new.astype(c_cache.dtype), m, l

@@ -79,6 +79,8 @@ def collective_counts(hlo_text: str) -> Dict[str, int]:
 def analyse(compiled, lowered=None) -> Dict[str, float]:
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):      # pre-0.5 JAX: one dict per device
+        cost = cost[0] if cost else {}
     txt = compiled.as_text()
     coll = collective_bytes_scaled(txt)   # while-trip-count aware
     counts = collective_counts(txt)

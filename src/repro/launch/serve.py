@@ -12,10 +12,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config, reduced
+from repro.core.autotune import tune_serving
 from repro.launch.mesh import dp_axes_of, dp_size_of, make_test_mesh
 from repro.launch.specs import _unwrap2, _wrap2, ctx_for, serving_layout
 from repro.configs.base import ShapeConfig
@@ -25,8 +26,17 @@ from repro.serving.prefill import prefill
 
 
 def build_engine(cfg, mesh, *, max_seq: int, batch_global: int,
-                 fused_combine: bool = False, cluster: Optional[int] = None):
-    """Returns (params, jitted prefill fn, jitted decode fn, state)."""
+                 fused_combine: bool = False, cluster: Optional[int] = None,
+                 backend: str = "xla", interpret: bool = False,
+                 block_s: Optional[int] = None,
+                 autotune_table: Optional[str] = None):
+    """Returns (params, jitted prefill fn, jitted decode fn, state).
+
+    ``backend``: "xla" | "pallas" | "auto" — local-stage compute for the
+    decode dataflow (DESIGN.md §2).  ``interpret`` runs the Pallas kernels
+    in interpret mode (CPU tests).  ``block_s`` overrides the autotuned KV
+    block granularity; ``autotune_table`` persists plans across launches.
+    """
     ms = mesh.shape["model"]
     dp_axes = dp_axes_of(mesh)
     dp = dp_size_of(mesh)
@@ -38,7 +48,14 @@ def build_engine(cfg, mesh, *, max_seq: int, batch_global: int,
     ctx = ctx_for(mesh, lay, fused_combine=fused_combine)
     b_loc = batch_global // dp if batch_global % dp == 0 else batch_global
     b_shard = batch_global % dp == 0 and batch_global >= dp
-    scfg = ServeConfig(max_seq=max_seq, batch_local=b_loc)
+    # tune with the PER-DEVICE batch — the kernel VMEM tiles and per-chip
+    # byte model see b_loc, not the global batch
+    plan = tune_serving(cfg, seq_len=max_seq, batch=b_loc,
+                        model_axis=ms, backend=backend,
+                        table_path=autotune_table)
+    scfg = ServeConfig(max_seq=max_seq, batch_local=b_loc,
+                       backend=plan.backend, interpret=interpret,
+                       block_s=block_s or plan.block_s)
     params_abs = jax.eval_shape(
         lambda: init_device_major(cfg, lay, jax.random.PRNGKey(0)))
     p_specs = param_specs(cfg, params_abs)
@@ -100,12 +117,17 @@ def main():
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--backend", default="xla",
+                    choices=("xla", "pallas", "auto"))
+    ap.add_argument("--interpret", action="store_true",
+                    help="Pallas interpret mode (CPU)")
     args = ap.parse_args()
     cfg = reduced(get_config(args.arch))
     mesh = make_test_mesh()
     params, pf, dec, state, lay, scfg = build_engine(
         cfg, mesh, max_seq=args.prompt_len + args.tokens + 8,
-        batch_global=args.batch)
+        batch_global=args.batch, backend=args.backend,
+        interpret=args.interpret)
     key = jax.random.PRNGKey(0)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)

@@ -20,11 +20,11 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.autotune import tune_cluster
+from repro.core.autotune import tune_cluster, tune_serving
 from repro.models.ctx import ParallelCtx, make_train_ctx, pick_heads_sub
 from repro.models.transformer import (Layout, fsdp_axes,
                                       fsdp_param_specs, fsdp_shard_abstract,
@@ -278,7 +278,9 @@ def _dff_override_specs(p_specs, params_abs):
 
 
 def build_decode_step(cfg: ModelConfig, mesh, shape: ShapeConfig,
-                      scfg_extra: Optional[dict] = None):
+                      scfg_extra: Optional[dict] = None,
+                      backend: str = "xla", interpret: bool = False,
+                      block_s: Optional[int] = None):
     ms = mesh.shape["model"]
     lay = serving_layout(cfg, shape, ms)
     dp_axes = dp_axes_of(mesh)
@@ -289,8 +291,12 @@ def build_decode_step(cfg: ModelConfig, mesh, shape: ShapeConfig,
     b_loc = B // dp if b_shard else B
     dff = (_needs_weight_spread(cfg, ms) and cfg.moe is not None
            and cfg.moe.expert_d_ff % mesh.shape["data"] == 0)
+    plan = tune_serving(cfg, seq_len=shape.seq_len, batch=max(1, b_loc),
+                        model_axis=ms, backend=backend)
     scfg = ServeConfig(max_seq=shape.seq_len, batch_local=b_loc,
-                       dff_shard=dff)
+                       dff_shard=dff, backend=plan.backend,
+                       interpret=interpret,
+                       block_s=block_s or plan.block_s)
     params_abs = abstract_params(cfg, lay)
     p_specs = param_specs(cfg, params_abs)
     if dff:

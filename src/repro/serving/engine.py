@@ -51,6 +51,11 @@ class ServeConfig:
     # giant-MoE weight spreading: expert d_ff additionally sliced over the
     # "data" axis (kimi-1T / arctic-480B decode; DESIGN.md §5)
     dff_shard: bool = False
+    # kernel backend for the per-layer local compute stage (DESIGN.md §2):
+    # "xla" = block-bucketed XLA dataflow; "pallas" = fused decode kernels
+    backend: str = "xla"
+    interpret: bool = False        # Pallas interpret mode (CPU/tests)
+    block_s: int = 256             # KV block granularity (autotunable)
 
 
 # ---------------------------------------------------------------------------
@@ -170,11 +175,14 @@ def _mla_weights(ctx: ParallelCtx, p: MLAAttnParams, cfg: ModelConfig
 # ---------------------------------------------------------------------------
 # Per-block decode
 # ---------------------------------------------------------------------------
-def _spec(ctx: ParallelCtx) -> df.ClusterSpec:
+def _spec(ctx: ParallelCtx, scfg: ServeConfig) -> df.ClusterSpec:
     return df.ClusterSpec(heads=ctx.heads or "model",
                           cluster=ctx.cluster or "model",
                           fused_combine=ctx.fused_combine,
-                          use_xla=ctx.use_xla_collectives)
+                          use_xla=ctx.use_xla_collectives,
+                          backend=scfg.backend,
+                          interpret=scfg.interpret,
+                          block_s=scfg.block_s)
 
 
 def decode_block(ctx: ParallelCtx, cfg: ModelConfig, kind: str,
@@ -194,7 +202,7 @@ def decode_block(ctx: ParallelCtx, cfg: ModelConfig, kind: str,
         a, cache = rglru_mod.rglru_block_step(
             ctx, blk["rglru"], rms_norm(x, blk["ln1"], eps), cache)
     elif cfg.mla is not None:
-        spec = _spec(ctx)
+        spec = _spec(ctx, scfg)
         w = _mla_weights(ctx, blk["attn"], cfg)
         o_seg, cache = df.mla_attention(
             spec, rms_norm(x, blk["ln1"], eps), w, cache, cache_len,
@@ -202,7 +210,7 @@ def decode_block(ctx: ParallelCtx, cfg: ModelConfig, kind: str,
             rope_theta=cfg.rope_theta)
         a = ctx.gather_cluster(o_seg, axis=1)
     else:
-        spec = _spec(ctx)
+        spec = _spec(ctx, scfg)
         w = _split_token_weights(ctx, blk["attn"])
         window = cfg.sliding_window if kind == ATTN_LOCAL else 0
         o_seg, cache = df.split_token_attention(

@@ -151,14 +151,18 @@ def test_fused_mla_sweep(l_rank, rope_d, nope, v_dim, fuse_out):
     cos, sin = rope_at(clen, rope_d)
     kw = dict(q_heads=q_loc, nope=nope, rope_d=rope_d, l_rank=l_rank,
               v_dim=v_dim, fuse_out=fuse_out)
-    o, cn = fused_mla_decode(x, wq, wdkv, wuk, wuv, wo, cc, clen, cos, sin,
-                             block_s=128, interpret=True, **kw)
-    o_r, cn_r = fused_mla_decode(x, wq, wdkv, wuk, wuv, wo, cc, clen, cos,
-                                 sin, use_ref=True, **kw)
+    o, cn, m, l = fused_mla_decode(x, wq, wdkv, wuk, wuv, wo, cc, clen, cos,
+                                   sin, block_s=128, interpret=True, **kw)
+    o_r, cn_r, m_r, l_r = fused_mla_decode(x, wq, wdkv, wuk, wuv, wo, cc,
+                                           clen, cos, sin, use_ref=True, **kw)
     np.testing.assert_allclose(np.asarray(o), np.asarray(o_r),
                                rtol=5e-5, atol=5e-5)
     np.testing.assert_allclose(np.asarray(cn), np.asarray(cn_r),
                                rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(m_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(l), np.asarray(l_r),
+                               rtol=1e-4, atol=1e-4)
 
 
 @pytest.mark.parametrize("B,S,C", [(2, 256, 128), (1, 64, 512), (4, 128, 64)])

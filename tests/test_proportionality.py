@@ -1,0 +1,222 @@
+"""Cache-length proportionality: decode cost must scale with the LIVE
+prefix, not the allocated cache.
+
+* XLA path: :func:`bucketed_flash_attention` executes exactly
+  ``ceil(live / block)`` buckets (counter check) and matches the full
+  masked reference.
+* Pallas path: the scalar-prefetched block index maps stop advancing
+  past the live prefix (clamp check on
+  :func:`repro.kernels.fused_decode.fused_decode._cache_block_index`).
+* Autotune: serving plans (backend + block_s) per seq bucket persist to
+  the JSON table and round-trip.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.autotune import (ServePlan, load_table, pick_block_s,
+                                 save_table, seq_bucket, tune_serving)
+from repro.core.dataflow import bucketed_flash_attention
+from repro.kernels.fused_decode.fused_decode import (_cache_block_index,
+                                                     _live_block_bounds)
+
+
+# ---------------------------------------------------------------------------
+# XLA path: bucket counter + equivalence to the masked reference
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("live_frac", [0.125, 0.5, 1.0])
+def test_bucketed_blocks_run_proportional(live_frac):
+    S, B, K, Q, hd, ab = 256, 2, 2, 2, 16, 32
+    live = int(S * live_frac)
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    qf = jax.random.normal(ks[0], (B, K, Q, hd))
+    kc = jax.random.normal(ks[1], (S, B, K, hd)) * 0.3
+    vc = jax.random.normal(ks[2], (S, B, K, hd)) * 0.3
+    valid = jnp.arange(S) < live
+    m, l, o, nrun = bucketed_flash_attention(
+        qf, kc, vc, valid, scale=0.25, block_s=ab)
+    # strictly fewer buckets at partial fill: cost ∝ live tokens
+    assert int(nrun) == -(-live // ab)
+    if live < S:
+        assert int(nrun) < S // ab
+    # equivalence to the single masked pass
+    s = jnp.einsum("bkqh,sbkh->bkqs", qf, kc) * 0.25
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    m_ref = jnp.max(s, -1)
+    p = jnp.exp(s - m_ref[..., None])
+    l_ref = jnp.sum(p, -1)
+    o_ref = jnp.einsum("bkqs,sbkh->bkqh", p, vc)
+    np.testing.assert_allclose(np.asarray(o / l[..., None]),
+                               np.asarray(o_ref / l_ref[..., None]),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(m_ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_bucketed_skips_below_sliding_window():
+    # ring-style validity: only a window in the middle is live
+    S, ab = 128, 16
+    valid = (jnp.arange(S) >= 48) & (jnp.arange(S) < 80)
+    qf = jnp.ones((1, 1, 1, 8))
+    kc = jnp.ones((S, 1, 1, 8))
+    vc = jnp.ones((S, 1, 1, 8))
+    *_, nrun = bucketed_flash_attention(qf, kc, vc, valid, scale=1.0,
+                                        block_s=ab)
+    assert int(nrun) == 2          # buckets [48:64) and [64:80) only
+
+
+# ---------------------------------------------------------------------------
+# Pallas path: index maps provably stop at the live prefix
+# ---------------------------------------------------------------------------
+def test_pallas_index_map_clamps_to_live_prefix():
+    blk_s, n_blocks = 32, 16                      # S = 512 allocated
+    cache_len = 64                                # live prefix: 2 blocks
+    idx = [int(_cache_block_index(j, cache_len, blk_s=blk_s,
+                                  n_blocks=n_blocks, window=0))
+           for j in range(n_blocks + 2)]
+    # steps 1, 2 fetch blocks 0, 1; every later step re-addresses block 1
+    # (already resident ⇒ no new HBM copy), never advancing past the live
+    # prefix.
+    assert idx[1] == 0 and idx[2] == 1
+    assert all(i == 1 for i in idx[3:])
+    assert max(idx) == -(-cache_len // blk_s) - 1
+
+    # full cache: maps advance across every block
+    idx_full = [int(_cache_block_index(j, blk_s * n_blocks, blk_s=blk_s,
+                                       n_blocks=n_blocks, window=0))
+                for j in range(1, n_blocks + 1)]
+    assert idx_full == list(range(n_blocks))
+
+
+def test_pallas_index_map_clamps_below_window():
+    # linear slot layout (standalone kernel): offsets ARE positions, so
+    # the window lower bound culls whole blocks
+    blk_s, n_blocks, window = 32, 8, 64           # live = last 64 positions
+    cache_len = 200
+    lo, hi = _live_block_bounds(cache_len, blk_s, n_blocks, window)
+    assert int(lo) == (cache_len - window) // blk_s == 4
+    assert int(hi) == -(-cache_len // blk_s) - 1 == 6
+    idx = [int(_cache_block_index(j, cache_len, blk_s=blk_s,
+                                  n_blocks=n_blocks, window=window))
+           for j in range(n_blocks + 2)]
+    assert min(idx) == 4 and max(idx) == 6        # dead blocks never fetched
+
+
+def test_pallas_ring_mode_never_offset_culls():
+    """Ring caches (serving dispatch): slot offsets are NOT positions, so
+    the window bound must never cull by block offset — once the ring has
+    wrapped, every resident block may hold in-window entries."""
+    blk_s, n_blocks, window = 2, 4, 32            # local ring shard: 8 slots
+    for cache_len in (40, 200, 10_000):           # well past window + shard
+        lo, hi = _live_block_bounds(cache_len, blk_s, n_blocks, window,
+                                    ring=True)
+        assert int(lo) == 0 and int(hi) == n_blocks - 1
+    # before the first wrap the fill-order upper bound still applies
+    lo, hi = _live_block_bounds(3, blk_s, n_blocks, window, ring=True)
+    assert int(lo) == 0 and int(hi) == 1          # slots 0..2 written only
+
+
+def test_rank_local_bounds_skip_non_owner_shards():
+    """Sharded linear cache: a rank whose shard starts past cache_len has
+    no live slots — its maps pin to block 0 (one resident fetch, no
+    advance) instead of streaming the whole dead shard."""
+    blk_s, n_blocks = 32, 4                       # local shard: 128 slots
+    cache_len = 128                               # == one full shard
+    # rank 0 (pos_base 0): whole shard live
+    lo, hi = _live_block_bounds(cache_len, blk_s, n_blocks, 0, pos_base=0)
+    assert (int(lo), int(hi)) == (0, 3)
+    # rank 1 (pos_base 128): zero live slots ⇒ only block 0 addressed
+    lo, hi = _live_block_bounds(cache_len, blk_s, n_blocks, 0,
+                                pos_base=128)
+    assert (int(lo), int(hi)) == (0, 0)
+    # rank 1, half-filled shard
+    lo, hi = _live_block_bounds(192, blk_s, n_blocks, 0, pos_base=128)
+    assert (int(lo), int(hi)) == (0, 1)
+
+
+def test_fit_block_s_preserves_bucketing():
+    from repro.core.dataflow import _fit_block_s
+    assert _fit_block_s(320, 256) == 160      # divisor, not full collapse
+    assert _fit_block_s(256, 256) == 256
+    assert _fit_block_s(12, 256) == 12
+    assert _fit_block_s(4, 2) == 2            # tiny test shards keep blocks
+    assert _fit_block_s(331, 256) == 331      # prime: degenerate ⇒ single
+
+
+def test_pick_block_s_respects_vmem_budget():
+    from dataclasses import replace
+    from repro.configs import get_config, reduced
+    from repro.core.autotune import VMEM_BUDGET
+    cfg = reduced(get_config("llama2-7b"))
+    wide = replace(cfg, n_kv_heads=8, head_dim=128)
+    b = pick_block_s(wide, 65536, 1, batch=8)
+    row = 8 * 128 * 2 * 2 * 8
+    assert b * row * 2 <= VMEM_BUDGET         # never silently over budget
+
+
+def test_pallas_interpret_matches_at_partial_fill():
+    """Clamped maps change which HBM blocks are addressed, not results:
+    interpret-mode kernel at 1/8 fill equals the oracle."""
+    from repro.kernels.fused_decode.ops import fused_decode, rope_at
+    B, D, S, q_loc, kv_loc, hd = 2, 64, 256, 4, 2, 16
+    clen = S // 8
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 6)
+    P_ = (q_loc + 2 * kv_loc) * hd
+    args = (jax.random.normal(ks[0], (B, D)) * 0.2,
+            jax.random.normal(ks[1], (D, P_)) * 0.05, None,
+            jax.random.normal(ks[2], (q_loc * hd, D)) * 0.05,
+            jax.random.normal(ks[3], (S, kv_loc, hd)) * 0.3,
+            jax.random.normal(ks[4], (S, kv_loc, hd)) * 0.3,
+            clen, *rope_at(clen, hd))
+    kw = dict(q_heads=q_loc, kv_heads=kv_loc)
+    o, *_ = fused_decode(*args, **kw, interpret=True, block_s=32)
+    o_r, *_ = fused_decode(*args, **kw, use_ref=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_r),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# Autotune: plan selection + persisted table
+# ---------------------------------------------------------------------------
+def test_seq_bucket_and_block_pick():
+    from repro.configs import get_config, reduced
+    assert seq_bucket(1) == 256 and seq_bucket(256) == 256
+    assert seq_bucket(257) == 512 and seq_bucket(40_000) == 65536
+    cfg = reduced(get_config("llama2-7b"))
+    b_short = pick_block_s(cfg, 256, 1)
+    b_long = pick_block_s(cfg, 65536, 1)
+    assert b_short <= b_long                  # longer span ⇒ ≥ block size
+    assert b_long in (128, 256, 512, 1024, 2048)
+
+
+def test_tune_serving_persists_table(tmp_path):
+    from repro.configs import get_config, reduced
+    cfg = reduced(get_config("llama2-7b"))
+    path = str(tmp_path / "tune.json")
+    p1 = tune_serving(cfg, seq_len=1024, batch=4, model_axis=4,
+                      backend="auto", table_path=path)
+    assert isinstance(p1, ServePlan)
+    assert p1.backend == "pallas"             # attention model ⇒ fused path
+    table = load_table(path)
+    assert len(table) == 1
+    # second call is a pure table hit (same plan, no re-tune)
+    p2 = tune_serving(cfg, seq_len=900, batch=4, model_axis=4,
+                      backend="auto", table_path=path)
+    assert p2 == p1                           # same 1024 bucket
+    cfg_rec = reduced(get_config("rwkv6-3b"))
+    p3 = tune_serving(cfg_rec, seq_len=1024, batch=4, model_axis=4,
+                      backend="auto", table_path=path)
+    assert p3.backend == "xla"                # attention-free keeps XLA
+    assert len(load_table(path)) == 2
+    # schema-drifted entry (e.g. older/newer ServePlan) self-heals by
+    # re-tuning instead of crashing the launch
+    table = load_table(path)
+    key = next(k for k in table if k.startswith(cfg.name))
+    table[key]["bogus_field"] = 1
+    save_table(path, table)
+    p4 = tune_serving(cfg, seq_len=1024, batch=4, model_axis=4,
+                      backend="auto", table_path=path)
+    assert p4 == p1
