@@ -33,6 +33,38 @@ PyTree = Any
 _BF16 = np.dtype(ml_dtypes.bfloat16)
 
 
+def _is_engine_pair(d: dict) -> bool:
+    """An engine-params pair from launch/serve.py: train/serve views of
+    one weight tree (both dicts carrying the block lists)."""
+    return (set(d) == {"train", "serve"}
+            and all(isinstance(v, dict) and "blocks" in v and "tail" in v
+                    for v in d.values()))
+
+
+def strip_derived(tree: PyTree) -> PyTree:
+    """Serving engines pair training-layout weights with a DERIVED
+    prepacked decode layout (``{"train": …, "serve": …}`` —
+    launch/serve.py).  Only the training layout is checkpointed; the
+    serve layout is rebuilt from it at load time
+    (``serving.prepack.prepack_for_serving``), so checkpoints round-trip
+    training-layout weights untouched regardless of the serving plan.
+    Recursive over dicts/lists/plain tuples, so an engine-params pair
+    nested inside a larger snapshot (e.g. ``{"model": …, "opt": …}``)
+    is stripped too.  Only dicts that actually LOOK like an engine pair
+    (both entries are param trees with "blocks"/"tail") are collapsed —
+    an unrelated ``{"train": …, "serve": …}`` metrics dict is left
+    alone."""
+    if isinstance(tree, dict):
+        if _is_engine_pair(tree):
+            return strip_derived(tree["train"])
+        return {k: strip_derived(v) for k, v in tree.items()}
+    if isinstance(tree, list):
+        return [strip_derived(v) for v in tree]
+    if type(tree) is tuple:                    # plain tuples only — named
+        return tuple(strip_derived(v) for v in tree)   # tuples are leaves
+    return tree
+
+
 def _to_storable(arr: np.ndarray):
     """np.save can't represent bfloat16 — store as uint16 view + tag."""
     if arr.dtype == _BF16:
@@ -72,7 +104,10 @@ class CheckpointManager:
     def save(self, step: int, tree: PyTree, *, extra: Optional[Dict] = None,
              block: bool = False) -> None:
         """Snapshot ``tree`` at ``step``.  Device→host transfer happens
-        synchronously (consistent snapshot); disk IO is backgrounded."""
+        synchronously (consistent snapshot); disk IO is backgrounded.
+        Derived serving state (prepacked decode layouts) is stripped —
+        see :func:`strip_derived`."""
+        tree = strip_derived(tree)
         leaves, treedef = jax.tree.flatten(tree)
         host = [np.asarray(l) for l in leaves]      # sync copy
         if self._thread is not None:
@@ -127,7 +162,11 @@ class CheckpointManager:
     def restore(self, like: PyTree, step: Optional[int] = None
                 ) -> Tuple[PyTree, Dict]:
         """Restore into the structure of ``like`` (shapes must match leaf
-        by leaf — same layout).  Returns (tree, extra)."""
+        by leaf — same layout).  Returns (tree, extra).  ``like`` is
+        stripped of derived serving state the same way :meth:`save`
+        strips the snapshot, so save/restore stay symmetric when handed
+        an engine's ``{"train", "serve"}`` params pair."""
+        like = strip_derived(like)
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
@@ -152,6 +191,7 @@ class CheckpointManager:
         whose stored first-divisible axis differs by an integer factor are
         re-sliced/tiled (ZeRO state saved gathered ⇒ plain restore; this
         handles legacy per-rank saves and future re-shards)."""
+        like = strip_derived(like)
         step = step if step is not None else self.latest_step()
         d = os.path.join(self.dir, f"step_{step:08d}")
         with open(os.path.join(d, "manifest.json")) as f:

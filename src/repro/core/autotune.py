@@ -24,8 +24,9 @@ import os
 from dataclasses import asdict, dataclass
 from typing import Dict, List, Optional, Tuple
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ATTN_GLOBAL, ATTN_LOCAL, ModelConfig
 from repro.core import dataflow as df
+from repro.core import primitives as prim
 
 # v5e hardware constants (per assignment)
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
@@ -132,6 +133,10 @@ class ServePlan:
     dataflow: str                # "split_token" | "mla"
     backend: str                 # "xla" | "pallas"
     block_s: int                 # KV block granularity (both backends)
+    # serve-layout weight prepack (serving/prepack.py): weights are
+    # re-laid out once at load time so the decode step performs zero
+    # weight-segment ICI gathers and zero dynamic-slice weight slicing
+    prepack: bool
     est_seconds: float
 
 
@@ -186,18 +191,82 @@ def _backend_for(cfg: ModelConfig, backend: str) -> str:
     return "xla" if cfg.is_attention_free else "pallas"
 
 
+def _prepack_for(backend_resolved: str, prepack) -> bool:
+    """Resolve the prepack knob: ``"auto"`` (default) enables the serve
+    layout whenever the Pallas backend is in play — the fully fused
+    ``partial_o`` path requires it; explicit on/off is honored for both
+    backends (the XLA serve layout still hoists the rank slices).
+    Unknown strings raise instead of silently disabling the fast path."""
+    if prepack in ("auto", None):
+        return backend_resolved == "pallas"
+    if isinstance(prepack, str):
+        if prepack in ("on", "true", "1"):
+            return True
+        if prepack in ("off", "false", "0"):
+            return False
+        raise ValueError(f"prepack must be auto/on/off, got {prepack!r}")
+    return bool(prepack)
+
+
+def weight_gather_bytes_per_step(cfg: ModelConfig, *, model_axis: int,
+                                 cluster_size: int, backend: str,
+                                 prepack: bool,
+                                 bytes_per_el: int = 2) -> float:
+    """Modeled per-token ICI bytes spent on *weight-segment* gathers.
+
+    The Level-2 Pallas path hoists Alg. 3/4's activation gathers to the
+    step-invariant weight segments (DESIGN.md §2); without prepack these
+    re-run every decode step.  The XLA path gathers activations instead
+    (O(B·heads·hd), not counted here), and the prepacked serve layout
+    gathers once at load — both read 0.  Tracked in BENCH_tpot.json so
+    the perf trajectory is auditable across PRs.
+    """
+    if backend != "pallas" or prepack:
+        return 0.0
+    n = cluster_size
+    if n <= 1:
+        return 0.0
+    hs = max(1, model_axis // n)
+    d = cfg.d_model
+    total = 0.0
+    for kind in cfg.layer_kinds:
+        if kind not in (ATTN_GLOBAL, ATTN_LOCAL):
+            continue
+        q_loc = max(1, cfg.n_heads // hs)
+        if cfg.mla is not None:
+            m = cfg.mla
+            seg = (d * q_loc * (m.nope_head_dim + m.rope_head_dim) / n
+                   + d * (m.kv_lora_rank + m.rope_head_dim) / n
+                   + q_loc * m.nope_head_dim * m.kv_lora_rank / n)
+        else:
+            kv_loc = max(1, cfg.n_kv_heads // hs)
+            hd = cfg.resolved_head_dim
+            seg = d * (q_loc + 2 * kv_loc) * (hd / n)
+            if cfg.qkv_bias:       # bq/bk/bv segments gather too
+                seg += (q_loc + 2 * kv_loc) * (hd / n)
+        total += prim.traffic_gather(seg * bytes_per_el, n)
+    return total
+
+
 def tune_serving(cfg: ModelConfig, *, seq_len: int, batch: int,
                  model_axis: int = 16, backend: str = "auto",
+                 prepack="auto",
                  table_path: Optional[str] = None) -> ServePlan:
     """Pick the full serving plan for a (config, bucket) cell.
 
     Consults/updates the persisted JSON table at ``table_path`` (or
     ``$REPRO_AUTOTUNE_TABLE``) keyed by
-    ``name|model_axis|batch|seq_bucket|backend`` so repeated launches pay
-    zero search cost.
+    ``name|model_axis|batch|seq_bucket|backend|prepack`` — with prepack
+    RESOLVED to its boolean, so ``prepack="auto"`` and an explicit
+    ``"on"`` that resolve identically share one cell — so repeated
+    launches pay zero search cost.  Entries whose schema has drifted
+    (e.g. a pre-prepack table) self-heal by re-tuning.
     """
     bucket = seq_bucket(seq_len)
-    key = f"{cfg.name}|ms{model_axis}|b{batch}|s{bucket}|{backend}"
+    backend_resolved = _backend_for(cfg, backend)
+    pp = _prepack_for(backend_resolved, prepack)
+    key = (f"{cfg.name}|ms{model_axis}|b{batch}|s{bucket}|{backend}"
+           f"|pp{int(pp)}")
     path = table_path or os.environ.get("REPRO_AUTOTUNE_TABLE")
     table = load_table(path)
     if key in table:
@@ -211,8 +280,9 @@ def tune_serving(cfg: ModelConfig, *, seq_len: int, batch: int,
         cluster_size=best.cluster_size,
         dataflow=best.dataflow if best.dataflow != "split_head"
         else "split_token",            # split_head is bench-only
-        backend=_backend_for(cfg, backend),
+        backend=backend_resolved,
         block_s=pick_block_s(cfg, bucket, best.cluster_size, batch),
+        prepack=pp,
         est_seconds=best.est_seconds,
     )
     table[key] = asdict(plan)

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import primitives as prim
+from repro.core import tracecount
 from repro.core.primitives import Axis, SubAxis
 
 
@@ -50,7 +51,12 @@ class ClusterSpec:
 
     heads: Axis                  # head-group sub-axis (size H)
     cluster: Axis                # intra-head cluster sub-axis (size N)
-    fused_combine: bool = False  # beyond-paper single-tree flash merge
+    fused_combine: bool = False  # beyond-paper single-tree flash merge;
+                                 # applies to the adapter paths only — the
+                                 # prepacked partial_o paths ALWAYS use the
+                                 # single-tree (m, l, o) merge, which is
+                                 # constitutive of their one-ClusterReduce
+                                 # contract, not an option
     use_xla: bool = False        # XLA-native collectives (reference path)
     # -- local-stage compute backend (DESIGN.md §2) ------------------------
     backend: str = "xla"         # "xla" | "pallas": QKV-proj + RoPE + flash
@@ -171,6 +177,44 @@ def _fit_block_s(S: int, block_s: int) -> int:
     return b if b * 8 > min(block_s, S) else S
 
 
+class _AppendSlot(NamedTuple):
+    """Where this decode step's new KV entry lands on the cluster-sharded
+    cache, plus the kernel gating derived from it."""
+
+    rank: jax.Array          # this rank's cluster index
+    owner: jax.Array         # cluster rank owning the append slot
+    local_slot: jax.Array    # slot within the owner's shard
+    include_new: jax.Array   # 1 iff this rank owns the slot (the new
+                             # token is counted exactly once per cluster)
+    pos_base: jax.Array      # pos[i] = pos_base + i when the shard is
+                             # position-linear; −1 ⇒ masked path
+
+
+def _append_slot(spec: ClusterSpec, s_blk: int, cache_len,
+                 *, window: int = 0) -> _AppendSlot:
+    """THE slot/owner/gating formula, shared by every dataflow path.
+
+    Sliding-window layers use a ring of ``n·s_blk`` slots (the slot
+    index wraps, so offsets stop being positions ⇒ ``pos_base = −1``
+    forces the stored-pos masked path and forbids offset culling);
+    linear caches fill in position order (``pos_base = rank·s_blk``
+    enables the mask-free fast path and rank-local live-span culling).
+    One definition on purpose: this formula is where the ring-wrap and
+    owner-gating hardening landed, and a divergent copy is a silent
+    cross-backend mismatch.
+    """
+    n = spec.n_cluster
+    rank = prim.axis_index(spec.cluster)
+    slot = cache_len % (n * s_blk) if window > 0 else cache_len
+    owner, local_slot = slot // s_blk, slot % s_blk
+    include_new = (owner == rank).astype(jnp.int32)
+    if window > 0:
+        pos_base = jnp.int32(-1)
+    else:
+        pos_base = (rank * s_blk).astype(jnp.int32)
+    return _AppendSlot(rank, owner, local_slot, include_new, pos_base)
+
+
 def bucketed_flash_attention(qf: jax.Array, kc: jax.Array, vc: jax.Array,
                              valid: jax.Array, *, scale: float,
                              softcap: float = 0.0, block_s: int = 256):
@@ -251,6 +295,49 @@ class SplitTokenWeights(NamedTuple):
     bv: Optional[jax.Array] = None
 
 
+class PackedSplitTokenWeights(NamedTuple):
+    """Serve-layout (prepacked) per-rank weights for the fully fused
+    Pallas SplitToken path (serving/prepack.py, DESIGN.md §2).
+
+    Materialized ONCE at weight-load time — the decode step performs no
+    weight-segment ClusterGather and no ``dynamic_slice`` weight slicing.
+
+    ``wqkv`` [D, (q_loc + 2·kv_loc)·hd] — cluster-gathered q/k/v head-dim
+              segments concatenated so the kernel runs ONE projection
+              matmul (replicated over the cluster sub-axis).
+    ``wo``   [q_loc, hd, D] — full-width Output-Projection rows of this
+              rank's heads, per-head, consumed by ``fuse_out="partial_o"``.
+              Full width keeps every cluster rank's in-kernel partial in
+              the SAME output basis, so the flash merge sums them exactly
+              and no post-combine cluster gather remains.
+    ``bqkv`` [(q_loc + 2·kv_loc)·hd] fused bias, or None.
+    """
+
+    wqkv: jax.Array
+    wo: jax.Array
+    bqkv: Optional[jax.Array] = None
+
+
+class PackedMLAWeights(NamedTuple):
+    """Serve-layout (prepacked) per-rank weights for the fully fused
+    Pallas MLA path (serving/prepack.py).
+
+    ``wq``    [D, q_loc·(nope+rope)] — cluster-gathered Q projection.
+    ``wdkv``  [D, l_rank+rope]       — cluster-gathered latent Down-Proj.
+    ``wuk``   [q_loc, nope, l_rank]  — K-up absorption (full latent).
+    ``wproj`` [q_loc, l_rank, D]     — fused W_UV·W_O rows: value
+              Up-Projection and Output-Projection folded into one
+              full-width per-head matrix at load time, extending the
+              paper's weight-absorption trick one stage further (and
+              keeping all cluster partials in one output basis).
+    """
+
+    wq: jax.Array
+    wdkv: jax.Array
+    wuk: jax.Array
+    wproj: jax.Array
+
+
 def split_token_attention(
     spec: ClusterSpec,
     x: jax.Array,                 # [B, D] full hidden states (paper: every
@@ -277,13 +364,24 @@ def split_token_attention(
     Pallas kernel per rank (:mod:`repro.kernels.fused_decode`) with the
     ClusterGather/ClusterReduce collectives kept between kernel
     invocations — the paper's Level-2 fusion on TPU (DESIGN.md §2).
+
+    ``w`` may also be :class:`PackedSplitTokenWeights` (the serve layout
+    from serving/prepack.py): the local stage then runs the fully fused
+    ``fuse_out="partial_o"`` kernel with NO per-step weight movement —
+    one kernel + one fused ClusterReduce per layer — and the return is
+    the FULL ``[B, D]`` output (no cluster gather needed).
     """
+    if isinstance(w, PackedSplitTokenWeights):
+        assert spec.backend == "pallas", \
+            "prepacked serve-layout weights require backend='pallas'"
+        return _split_token_attention_pallas_packed(
+            spec, x, w, cache, cache_len, window=window,
+            attn_softcap=attn_softcap, rope_theta=rope_theta, scale=scale)
     if spec.backend == "pallas":
         return _split_token_attention_pallas(
             spec, x, w, cache, cache_len, window=window,
             attn_softcap=attn_softcap, rope_theta=rope_theta, scale=scale)
     n = spec.n_cluster
-    b_rank = prim.axis_index(spec.cluster)
     B = x.shape[0]
     q_local, hd_n = w.wq.shape[1], w.wq.shape[2]
     kv_local = w.wk.shape[1]
@@ -312,17 +410,16 @@ def split_token_attention(
 
     # (3) Append new KV to the owning rank's cache block.  Sliding-window
     # layers use a ring cache of exactly `window` slots (sharded over the
-    # cluster), so the slot index wraps.
+    # cluster), so the slot index wraps (shared formula: _append_slot).
     s_blk = cache.k.shape[0]
-    slot = cache_len % (n * s_blk) if window > 0 else cache_len
-    owner, local_slot = slot // s_blk, slot % s_blk
+    ap = _append_slot(spec, s_blk, cache_len, window=window)
     # decode convention: one new token per sequence; B folded into kv head
     # dim via vmap at the serving layer when B > 1 shares a cache.  Here the
     # cache carries B in its kv_heads axis layout: [S, B*kv_local, hd].
     cache = _insert_kv(
         cache,
         k.reshape(B * kv_local, hd), v.reshape(B * kv_local, hd),
-        owner, local_slot, b_rank, cache_len)
+        ap.owner, ap.local_slot, ap.rank, cache_len)
 
     # (4) FlashDecoding partial over the local sequence block (line 4),
     # bucketed so only live blocks execute (cost ∝ cache_len, not S_blk).
@@ -383,7 +480,6 @@ def _split_token_attention_pallas(
     append slot (``include_new``).
     """
     n = spec.n_cluster
-    b_rank = prim.axis_index(spec.cluster)
     B, D = x.shape
     q_local, hd_n = w.wq.shape[1], w.wq.shape[2]
     kv_local = w.wk.shape[1]
@@ -395,6 +491,10 @@ def _split_token_attention_pallas(
 
     # ClusterGather the head-dim weight segments (Alg. 3 line 3, hoisted
     # from activations to weights so the local stage fuses into one kernel).
+    # Step-invariant — the prepacked serve layout does this once at load
+    # time instead (serving/prepack.py); this adapter path remains for
+    # training-layout serving and parity tests.
+    tracecount.bump("weight_gather", 3)
     wq = spec.gather_tiled(w.wq, axis=2)                 # [D, q_local, hd]
     wk = spec.gather_tiled(w.wk, axis=2)
     wv = spec.gather_tiled(w.wv, axis=2)
@@ -403,6 +503,7 @@ def _split_token_attention_pallas(
                             wv.reshape(D, kv_local * hd)], axis=1)
     bqkv = None
     if w.bq is not None:
+        tracecount.bump("weight_gather", 3)
         bq = spec.gather_tiled(w.bq, axis=1)             # [q_local, hd]
         bk = spec.gather_tiled(w.bk, axis=1)
         bv = spec.gather_tiled(w.bv, axis=1)
@@ -412,16 +513,7 @@ def _split_token_attention_pallas(
 
     cos, sin = rope_at(cache_len, hd, rope_theta)
     s_blk = cache.k.shape[0]
-    slot = cache_len % (n * s_blk) if window > 0 else cache_len
-    owner, local_slot = slot // s_blk, slot % s_blk
-    include_new = (owner == b_rank).astype(jnp.int32)
-    # Non-window caches fill slots in position order (slot i of rank r ⇒
-    # position r·s_blk + i), enabling the kernel's mask-free fast path;
-    # ring caches are non-linear ⇒ pos_base = −1 (masked path).
-    if window > 0:
-        pos_base = jnp.int32(-1)
-    else:
-        pos_base = (b_rank * s_blk).astype(jnp.int32)
+    ap = _append_slot(spec, s_blk, cache_len, window=window)
     blk = _fit_block_s(s_blk, spec.block_s)
     wo_unused = jnp.zeros((1, 1), x.dtype)   # O-proj runs after the combine
 
@@ -434,7 +526,8 @@ def _split_token_attention_pallas(
             q_heads=q_local, kv_heads=kv_local, scale=scale,
             attn_softcap=attn_softcap, window=window, ring=window > 0,
             block_s=blk, fuse_out=False, interpret=spec.interpret,
-            pos=cache.pos, include_new=include_new, pos_base=pos_base)
+            pos=cache.pos, include_new=ap.include_new,
+            pos_base=ap.pos_base)
         return acc[0], k_new[0], v_new[0], m[0], l[0]
 
     acc, k_new, v_new, m, l = jax.vmap(one, in_axes=(0, 1, 1))(x, kc, vc)
@@ -443,7 +536,7 @@ def _split_token_attention_pallas(
     # path; the kernel itself attended the new token via include_new).
     cache = _insert_kv(cache, k_new.reshape(B * kv_local, hd),
                        v_new.reshape(B * kv_local, hd),
-                       owner, local_slot, b_rank, cache_len)
+                       ap.owner, ap.local_slot, ap.rank, cache_len)
 
     # ClusterReduce combine + Output-Projection tile + heads reduction.
     m = m.reshape(B, kv_local, qpk)
@@ -455,6 +548,81 @@ def _split_token_attention_pallas(
     o_seg = att @ w.wo                                       # [B, D/N]
     o_seg = spec.heads_reduce(o_seg)
     return o_seg, cache
+
+
+def _split_token_attention_pallas_packed(
+    spec: ClusterSpec,
+    x: jax.Array,
+    w: PackedSplitTokenWeights,
+    cache: KVBlock,
+    cache_len: jax.Array,
+    *,
+    window: int,
+    attn_softcap: float,
+    rope_theta: float,
+    scale: Optional[float],
+) -> Tuple[jax.Array, KVBlock]:
+    """SplitToken on prepacked serve-layout weights — the full Alg. 3
+    fusion scope (DESIGN.md §2).  Returns ``(o [B, D], cache)`` — the
+    output is already FULL-width (no cluster gather follows).
+
+    No per-step weight movement remains: ``wqkv`` was gathered once at
+    load time, and the Output-Projection runs INSIDE the kernel
+    (``fuse_out="partial_o"``) through the rank's full-width ``wo``
+    rows, emitting unnormalized per-head projected [B, q_loc, D]
+    partials.  The per-head projection is linear and shared across the
+    cluster, so the flash-merge operator stays exact on ``(m, l, o)``
+    triples and a single fused ClusterReduce completes the softmax
+    combine AND the projection sum; all that follows is a local
+    normalize + head sum and the heads-axis reduction (the paper's
+    atomicAdd analogue).  Trade-off, documented in DESIGN.md §2: for
+    cluster N > 1 the reduce payload grows from ``q_loc·hd`` to
+    ``q_loc·D`` per token — bought back by deleting the per-step weight
+    gathers (∝ D·heads·hd), the output gather, and one collective.
+    """
+    B, D = x.shape
+    q_local, hd, d_out = w.wo.shape
+    kv_local = (w.wqkv.shape[1] // hd - q_local) // 2
+    qpk = q_local // kv_local
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    from repro.kernels.fused_decode.fused_decode import fused_decode_attention
+    from repro.kernels.fused_decode.ops import rope_at
+
+    cos, sin = rope_at(cache_len, hd, rope_theta)
+    s_blk = cache.k.shape[0]
+    ap = _append_slot(spec, s_blk, cache_len, window=window)
+    blk = _fit_block_s(s_blk, spec.block_s)
+
+    kc = cache.k.reshape(s_blk, B, kv_local, hd)
+    vc = cache.v.reshape(s_blk, B, kv_local, hd)
+
+    def one(xb, kb, vb):
+        acc, k_new, v_new, m, l = fused_decode_attention(
+            xb[None], w.wqkv, w.bqkv, w.wo, kb, vb, cache_len, cos, sin,
+            q_heads=q_local, kv_heads=kv_local, scale=scale,
+            attn_softcap=attn_softcap, window=window, ring=window > 0,
+            block_s=blk, fuse_out="partial_o", interpret=spec.interpret,
+            pos=cache.pos, include_new=ap.include_new,
+            pos_base=ap.pos_base)
+        return acc[0], k_new[0], v_new[0], m[0], l[0]
+
+    acc, k_new, v_new, m, l = jax.vmap(one, in_axes=(0, 1, 1))(x, kc, vc)
+
+    cache = _insert_kv(cache, k_new.reshape(B * kv_local, hd),
+                       v_new.reshape(B * kv_local, hd),
+                       ap.owner, ap.local_slot, ap.rank, cache_len)
+
+    # ONE fused ClusterReduce over (m, l, projected partials), then a
+    # local normalize + sum over this rank's heads.
+    tracecount.bump("cluster_combine")
+    m = m.reshape(B, kv_local, qpk)
+    l = l.reshape(B, kv_local, qpk)
+    p_o = acc.reshape(B, kv_local, qpk, d_out)
+    _, l_g, p_g = prim.cluster_flash_combine(m, l, p_o, spec.cluster,
+                                             fused=True)
+    o_full = (p_g / jnp.maximum(l_g[..., None], 1e-30)).sum(axis=(1, 2))
+    o_full = spec.heads_reduce(o_full.astype(x.dtype))       # [B, D]
+    return o_full, cache
 
 
 # ---------------------------------------------------------------------------
@@ -569,7 +737,18 @@ def mla_attention(
     K-up absorption, RoPE, latent flash partial) through the fused MLA
     kernel instead (:func:`_mla_attention_pallas`); the collectives and
     the value-up / Output-Projection tail are shared.
+
+    ``w`` may also be :class:`PackedMLAWeights` (serving/prepack.py):
+    the fully fused ``fuse_out="partial_o"`` path with the W_UV·W_O fold
+    — one kernel + one fused ClusterReduce per layer, returning the
+    FULL ``[B, D]`` output (no cluster gather needed).
     """
+    if isinstance(w, PackedMLAWeights):
+        assert spec.backend == "pallas", \
+            "prepacked serve-layout weights require backend='pallas'"
+        return _mla_attention_pallas_packed(
+            spec, x, w, cache, cache_len, nope_dim=nope_dim,
+            rope_dim=rope_dim, rope_theta=rope_theta)
     if spec.backend == "pallas":
         return _mla_attention_pallas(
             spec, x, w, cache, cache_len, nope_dim=nope_dim,
@@ -600,10 +779,10 @@ def mla_attention(
 
     # Append latent+rope entry to the owning rank's cache block.
     s_blk = cache.k.shape[0]
-    owner, local_slot = cache_len // s_blk, cache_len % s_blk
+    ap = _append_slot(spec, s_blk, cache_len)
     entry = jnp.concatenate([c_lat, c_rope], axis=-1)       # [B, l+rope]
     cache = _insert_kv(cache, entry, entry[:, :1],           # v-side unused
-                       owner, local_slot, b_rank, cache_len)
+                       ap.owner, ap.local_slot, ap.rank, cache_len)
 
     # (7): FlashDecoding partial in latent space over the local block,
     # bucketed over live blocks only (cost ∝ cache_len — DESIGN.md §3).
@@ -665,7 +844,9 @@ def _mla_attention_pallas(
         fused_mla_decode_attention)
     from repro.kernels.fused_decode.ops import rope_at
 
-    # Weight-segment gathers replacing Alg. 4's activation gathers.
+    # Weight-segment gathers replacing Alg. 4's activation gathers —
+    # step-invariant; the prepacked serve layout hoists them to load time.
+    tracecount.bump("weight_gather", 3)
     wq = spec.gather_tiled(w.wq, axis=2)      # [D, q_local, nope+rope]
     wdkv = spec.gather_tiled(w.wdkv, axis=1)  # [D, l_rank+rope]
     wuk = spec.gather_tiled(w.wuk, axis=2)    # [q_local, nope, l_rank]
@@ -673,9 +854,7 @@ def _mla_attention_pallas(
 
     cos, sin = rope_at(cache_len, rope_dim, rope_theta)
     s_blk = cache.k.shape[0]
-    owner, local_slot = cache_len // s_blk, cache_len % s_blk
-    include_new = (owner == b_rank).astype(jnp.int32)
-    pos_base = (b_rank * s_blk).astype(jnp.int32)   # latent cache is linear
+    ap = _append_slot(spec, s_blk, cache_len)       # latent cache is linear
     blk = _fit_block_s(s_blk, spec.block_s)
     wo_unused = jnp.zeros((1, 1), x.dtype)   # value-up + O-proj after combine
 
@@ -685,14 +864,14 @@ def _mla_attention_pallas(
             cos, sin, q_heads=q_local, nope=nope_dim, rope_d=rope_dim,
             l_rank=l_rank, v_dim=v_dim, block_s=blk, fuse_out=False,
             interpret=spec.interpret, pos=cache.pos,
-            include_new=include_new, pos_base=pos_base)
+            include_new=ap.include_new, pos_base=ap.pos_base)
         return acc[0], c_new[0], m[0], l[0]
 
     acc, c_new, m, l = jax.vmap(one, in_axes=(0, 1))(x, cache.k)
 
     # Append the kernel-emitted latent entry on the owning rank.
     cache = _insert_kv(cache, c_new, c_new[:, :1],       # v-side unused
-                       owner, local_slot, b_rank, cache_len)
+                       ap.owner, ap.local_slot, ap.rank, cache_len)
 
     # (8)–(13): combine, value Up-Projection partials, O-Projection tile.
     _, l_g, o_g = spec.flash_combine(m, l, acc)
@@ -703,6 +882,65 @@ def _mla_attention_pallas(
     o_seg = o_head.reshape(B, q_local * v_dim).astype(x.dtype) @ w.wo
     o_seg = spec.heads_reduce(o_seg)                     # [B, D/N]
     return o_seg, cache
+
+
+def _mla_attention_pallas_packed(
+    spec: ClusterSpec,
+    x: jax.Array,
+    w: PackedMLAWeights,
+    cache: KVBlock,
+    cache_len: jax.Array,
+    *,
+    nope_dim: int,
+    rope_dim: int,
+    rope_theta: float,
+) -> Tuple[jax.Array, KVBlock]:
+    """Alg. 4 on prepacked serve-layout weights — fully fused.  Returns
+    ``(o [B, D], cache)``; no cluster gather follows.
+
+    All of Alg. 4's weight-segment gathers happened at load time, the
+    value Up-Projection and Output-Projection are folded into one
+    full-width per-head matrix (``wproj = W_UV · W_O``) applied INSIDE
+    the kernel on the unnormalized latent accumulator, and Alg. 4's
+    value-up partial-sum ClusterReduce (lines 11–12) vanishes.  Per
+    layer: one kernel + one fused ClusterReduce + local
+    normalize/head-sum + the heads-axis reduction.
+    """
+    B, D = x.shape
+    q_local, _, l_rank = w.wuk.shape
+    d_out = w.wproj.shape[-1]
+    from repro.kernels.fused_mla_decode.fused_mla_decode import (
+        fused_mla_decode_attention)
+    from repro.kernels.fused_decode.ops import rope_at
+
+    cos, sin = rope_at(cache_len, rope_dim, rope_theta)
+    s_blk = cache.k.shape[0]
+    ap = _append_slot(spec, s_blk, cache_len)       # latent cache is linear
+    blk = _fit_block_s(s_blk, spec.block_s)
+    wo_unused = jnp.zeros((1, 1), x.dtype)
+
+    def one(xb, cb):
+        acc, c_new, m, l = fused_mla_decode_attention(
+            xb[None], w.wq, w.wdkv, w.wuk, w.wproj, wo_unused, cb,
+            cache_len, cos, sin, q_heads=q_local, nope=nope_dim,
+            rope_d=rope_dim, l_rank=l_rank, v_dim=d_out, block_s=blk,
+            fuse_out="partial_o", interpret=spec.interpret, pos=cache.pos,
+            include_new=ap.include_new, pos_base=ap.pos_base)
+        return acc[0], c_new[0], m[0], l[0]
+
+    acc, c_new, m, l = jax.vmap(one, in_axes=(0, 1))(x, cache.k)
+
+    cache = _insert_kv(cache, c_new, c_new[:, :1],       # v-side unused
+                       ap.owner, ap.local_slot, ap.rank, cache_len)
+
+    # ONE fused ClusterReduce over (m, l, projected tiles); normalize per
+    # head and sum over this rank's heads.
+    tracecount.bump("cluster_combine")
+    _, l_g, p_g = prim.cluster_flash_combine(m, l, acc, spec.cluster,
+                                             fused=True)
+    o_full = (p_g / jnp.maximum(l_g[..., None], 1e-30)).sum(axis=1)
+    o_full = spec.heads_reduce(o_full.astype(x.dtype))   # [B, D]
+    return o_full, cache
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import tracecount
+
 PyTree = Any
 
 # ---------------------------------------------------------------------------
@@ -116,6 +118,7 @@ def cluster_reduce(x: PyTree, axis_name: Axis, op: str | Callable = "sum") -> Py
         return x
     if not _is_pow2(n):
         raise ValueError(f"cluster axis size must be 2**k (paper Alg. 1); got {n}")
+    tracecount.bump("tree_reduce")
     fn = _REDUCE_OPS[op] if isinstance(op, str) else op
     phys = _axis_name(axis_name)
 
@@ -145,6 +148,7 @@ def cluster_reduce_pairs(x: PyTree, axis_name: Axis,
         return x
     if not _is_pow2(n):
         raise ValueError(f"cluster axis size must be 2**k; got {n}")
+    tracecount.bump("tree_reduce")
     phys = _axis_name(axis_name)
     d = x
     stride = 1
@@ -173,6 +177,7 @@ def cluster_gather(x: jax.Array, axis_name: Axis) -> jax.Array:
         return jnp.expand_dims(x, 0)
     if not _is_pow2(n):
         raise ValueError(f"cluster axis size must be 2**k (paper Alg. 2); got {n}")
+    tracecount.bump("tree_gather")
 
     phys = _axis_name(axis_name)
     # D_b[0] = local segment

@@ -1,0 +1,55 @@
+"""Trace-time operation counters.
+
+Decode hot-loop structure is asserted by counting *call sites as they
+trace* (one trace = one compiled step, so trace-time counts are exact
+per-step op counts under ``jit``).  The counters are free in production:
+``bump`` is a no-op unless a :func:`counting` context is active, and the
+instrumented sites only pay a dict lookup at trace time, never at run
+time.
+
+Labels used across the codebase:
+
+* ``tree_reduce`` / ``tree_gather`` — cluster-collective tree schedules
+  (:mod:`repro.core.primitives`); counted once per collective call, not
+  per round.
+* ``weight_gather`` — per-step ClusterGather of *weight* segments (the
+  Level-2 hoisted gathers the prepack layout eliminates — DESIGN.md §2).
+* ``weight_slice`` — per-layer ``lax.dynamic_slice`` weight slicing in
+  the train-layout adapters (``_split_token_weights``/``_mla_weights``).
+* ``weight_slice_hoisted`` — the once-per-step rank slices hoisted out
+  of the layer scan (non-prepacked fast path).
+* ``pallas_kernel`` — fused decode kernel invocations.
+
+Evidence target (tests/test_prepack.py): the prepacked Pallas path
+traces with ``weight_gather == weight_slice == 0`` and exactly one
+``pallas_kernel`` + one ``tree_reduce`` on the cluster axis per
+attention layer.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from contextlib import contextmanager
+
+_COUNTS: Counter = Counter()
+_ACTIVE: int = 0
+
+
+def bump(name: str, n: int = 1) -> None:
+    """Increment ``name`` when a :func:`counting` context is active."""
+    if _ACTIVE:
+        _COUNTS[name] += n
+
+
+@contextmanager
+def counting():
+    """Enable counters; yields the live Counter (read totals inside or
+    right after the block).  Entering the outermost context resets the
+    counts; nested contexts share the same Counter."""
+    global _ACTIVE
+    if _ACTIVE == 0:
+        _COUNTS.clear()
+    _ACTIVE += 1
+    try:
+        yield _COUNTS
+    finally:
+        _ACTIVE -= 1

@@ -29,7 +29,7 @@ full, sliding-window and ring caches uniform with the XLA dataflow's
 ``KVBlock.pos`` convention.  When the caller does not pass ``pos`` the
 kernel assumes the linear layout ``pos[i] = i``.
 
-Two modes:
+Three modes:
 * ``fuse_out=True``  — returns ``o [B, D_out]`` (O-projection fused);
   for single-chip-per-head-group layouts (cluster == 1).
 * ``fuse_out=False`` — returns unnormalized ``(acc, m, l)`` partials for
@@ -38,6 +38,17 @@ Two modes:
   ``include_new`` gates the new token's own attention contribution so
   that, across a cluster, exactly the rank owning the append slot counts
   it.
+* ``fuse_out="partial_o"`` — the Output-Projection tile runs INSIDE the
+  kernel on the *unnormalized* accumulator, per head: with ``wo`` passed
+  as 3-D per-head tiles ``[q_loc, hd, d_out]`` the kernel emits
+  ``o [B, q_loc, d_out]`` projected partials plus ``(m, l)``.  Because
+  the projection is linear per head, the flash-merge operator remains
+  exact on ``(m, l, o)`` triples, so across a cluster the layer
+  completes with exactly ONE fused ClusterReduce followed by a local
+  normalize-and-sum-over-heads — the full Alg. 3 fusion scope.  The
+  serve layout passes FULL-width rows (d_out = D) so every cluster
+  rank's partial lives in the same output basis (DESIGN.md §2,
+  serving/prepack.py).
 """
 from __future__ import annotations
 
@@ -51,6 +62,7 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import tracecount
 from repro.kernels import tpu_compiler_params
 
 
@@ -63,7 +75,7 @@ def _kernel(scalars_ref,                         # scalar prefetch (SMEM):
             q_s, k_s, v_s, m_s, l_s, acc_s,
             *, blk_s: int, n_blocks: int, q_loc: int, kv_loc: int,
             hd: int, scale: float, cap: float, window: int, ring: bool,
-            fuse_out: bool):
+            fuse_out):
     j = pl.program_id(0)
     cache_len = scalars_ref[0]
     B = x_ref.shape[0]
@@ -186,7 +198,17 @@ def _kernel(scalars_ref,                         # scalar prefetch (SMEM):
             + p[..., None] * v_new[:, :, None, :]
         m_s[...] = m_new
         l_s[...] = l_fin
-        if fuse_out:
+        if fuse_out == "partial_o":
+            # per-head Output-Projection of the UNNORMALIZED accumulator:
+            # o[b, h, :] = Σ_d acc[b, h, d] · wo[h, d, :].  Linear per head,
+            # so the cross-chip flash merge on (m, l, o) stays exact and the
+            # normalization (÷ l_g) + head sum happen after ONE ClusterReduce.
+            a2 = acc.reshape(B, q_loc, hd)
+            wo3 = wo_ref[...].astype(jnp.float32)         # [q_loc, hd, d_out]
+            po = jax.lax.dot_general(
+                a2, wo3, (((2,), (1,)), ((1,), (0,))))    # [q_loc, B, d_out]
+            o_ref[...] = jnp.moveaxis(po, 0, 1).astype(o_ref.dtype)
+        elif fuse_out:
             att = (acc / l_fin[..., None]).reshape(B, q_loc * hd)
             wo = wo_ref[...].astype(jnp.float32)          # [q_loc*hd, D_out]
             o_ref[...] = jax.lax.dot(att, wo).astype(o_ref.dtype)
@@ -238,7 +260,8 @@ def fused_decode_attention(
     x: jax.Array,                 # [B, D]
     wqkv: jax.Array,              # [D, (q_loc + 2 kv_loc) * hd]
     bqkv: Optional[jax.Array],    # [(q_loc + 2 kv_loc) * hd] or None
-    wo: jax.Array,                # [q_loc * hd, D_out]
+    wo: jax.Array,                # [q_loc * hd, D_out]; [q_loc, hd, d_out]
+                                  # per-head tiles when fuse_out="partial_o"
     k_cache: jax.Array,           # [S, kv_loc, hd]
     v_cache: jax.Array,           # [S, kv_loc, hd]
     cache_len: jax.Array,         # scalar int32: tokens already cached
@@ -253,7 +276,7 @@ def fused_decode_attention(
     ring: bool = False,   # slots wrap (pos ≠ index): window culls by stored
                           # pos only, never by block offset
     block_s: int = 512,
-    fuse_out: bool = True,
+    fuse_out=True,        # True | False | "partial_o"
     interpret: bool = False,
     pos: Optional[jax.Array] = None,          # [S] slot positions (−1 empty)
     include_new: Optional[jax.Array] = None,  # count the new token's own
@@ -266,7 +289,12 @@ def fused_decode_attention(
     ``fuse_out=True``: o = [B, D_out] (final).  ``fuse_out=False``:
     o = [B, q_loc, hd] *unnormalized* accumulator; combine across chips
     with ``cluster_flash_combine`` and project afterwards.
+    ``fuse_out="partial_o"``: o = [B, q_loc, d_out] *unnormalized*
+    per-head Output-Projection tiles (``wo`` must be ``[q_loc, hd,
+    d_out]``); flash-merge the (m, l, o) triple across chips, then
+    normalize per head and sum over heads — one ClusterReduce total.
     """
+    tracecount.bump("pallas_kernel")
     B, D = x.shape
     S, kv_loc, hd = k_cache.shape
     q_loc = q_heads
@@ -275,7 +303,11 @@ def fused_decode_attention(
     blk_s = min(block_s, S)
     assert S % blk_s == 0, (S, blk_s)
     n_blocks = S // blk_s
-    d_out = wo.shape[1]
+    if fuse_out == "partial_o":
+        assert wo.ndim == 3 and wo.shape[:2] == (q_loc, hd), \
+            ("partial_o needs per-head wo tiles [q_loc, hd, d_out]",
+             wo.shape, q_loc, hd)
+    d_out = wo.shape[-1]
     if bqkv is None:
         bqkv = jnp.zeros((wqkv.shape[1],), wqkv.dtype)
     if pos is None:
@@ -298,7 +330,12 @@ def fused_decode_attention(
         fuse_out=fuse_out)
 
     grid = (n_blocks + 2,)
-    o_shape = (B, d_out) if fuse_out else (B, q_loc, hd)
+    if fuse_out == "partial_o":
+        o_shape = (B, q_loc, d_out)
+    elif fuse_out:
+        o_shape = (B, d_out)
+    else:
+        o_shape = (B, q_loc, hd)
 
     def cache_map(j, s_ref):
         b = _cache_block_index(j, s_ref[0], blk_s=blk_s, n_blocks=n_blocks,
@@ -319,7 +356,7 @@ def fused_decode_attention(
                 pl.BlockSpec((B, D), lambda j, *_: (0, 0)),                 # x
                 pl.BlockSpec(wqkv.shape, lambda j, *_: (0, 0)),             # wqkv
                 pl.BlockSpec((1, bqkv.shape[0]), lambda j, *_: (0, 0)),     # bqkv
-                pl.BlockSpec(wo.shape, lambda j, *_: (0, 0)),               # wo
+                pl.BlockSpec(wo.shape, lambda j, *_: (0,) * wo.ndim),       # wo
                 pl.BlockSpec((1, hd // 2), lambda j, *_: (0, 0)),           # cos
                 pl.BlockSpec((1, hd // 2), lambda j, *_: (0, 0)),           # sin
                 pl.BlockSpec((blk_s, kv_loc, hd), cache_map),           # k
@@ -343,7 +380,7 @@ def fused_decode_attention(
             ],
         ),
         out_shape=[
-            jax.ShapeDtypeStruct(o_shape, x.dtype if fuse_out
+            jax.ShapeDtypeStruct(o_shape, x.dtype if fuse_out is True
                                  else jnp.float32),
             jax.ShapeDtypeStruct((B, kv_loc, hd), k_cache.dtype),
             jax.ShapeDtypeStruct((B, kv_loc, hd), v_cache.dtype),

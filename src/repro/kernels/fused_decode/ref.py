@@ -13,7 +13,7 @@ def fused_decode_attention_ref(
     wo: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     cache_len, cos: jax.Array, sin: jax.Array, *,
     q_heads: int, kv_heads: int, scale: Optional[float] = None,
-    attn_softcap: float = 0.0, window: int = 0, fuse_out: bool = True,
+    attn_softcap: float = 0.0, window: int = 0, fuse_out=True,
     pos: Optional[jax.Array] = None, include_new=None,
     **_,
 ) -> Tuple[jax.Array, ...]:
@@ -63,7 +63,11 @@ def fused_decode_attention_ref(
     v_all = v_cache.astype(jnp.float32)
     acc = jnp.einsum("bkqs,skh->bkqh", p[..., :-1], v_all) \
         + p[..., -1][..., None] * v_new.astype(jnp.float32)[:, :, None, :]
-    if fuse_out:
+    if fuse_out == "partial_o":
+        # unnormalized per-head Output-Projection tiles (wo [q_loc, hd, d])
+        o = jnp.einsum("bqh,qhd->bqd", acc.reshape(B, q_loc, hd),
+                       wo.astype(jnp.float32))
+    elif fuse_out:
         att = (acc / l[..., None]).reshape(B, q_loc * hd)
         o = (att @ wo.astype(jnp.float32)).astype(x.dtype)
     else:

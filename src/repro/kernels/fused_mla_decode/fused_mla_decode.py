@@ -19,12 +19,20 @@ Cache slots carry explicit positions (``pos``; −1 ⇒ empty) matching the
 XLA dataflow's ``KVBlock.pos`` convention; without ``pos`` the linear
 layout ``pos[i] = i`` is assumed.
 
-Two modes:
+Three modes:
 * ``fuse_out=True``  — returns final ``o [B, D_out]``.
 * ``fuse_out=False`` — returns the *unnormalized* latent flash partials
   ``acc [B, q, l_rank]`` plus ``(m, l)`` for the cross-chip
   ClusterReduce combine (paper Alg. 4 lines 8–10); the value
   Up-Projection and Output-Projection then run after the combine.
+* ``fuse_out="partial_o"`` — value Up-Projection AND Output-Projection
+  fused into the kernel: ``wuv`` carries the prepacked per-head product
+  ``W_UV · W_O(cols)`` (``[q, l_rank, d_out]``, serving/prepack.py) and
+  the kernel emits unnormalized projected tiles ``o [B, q, d_out]``.
+  The projection is linear per head, so the flash merge on ``(m, l, o)``
+  stays exact: ONE fused ClusterReduce, then a local normalize + head
+  sum, completes the layer — and Alg. 4's value-up partial-sum
+  ClusterReduce (lines 11–12) disappears entirely.
 """
 from __future__ import annotations
 
@@ -38,6 +46,7 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import tracecount
 from repro.kernels import tpu_compiler_params
 from repro.kernels.fused_decode.fused_decode import _cache_block_index
 
@@ -49,7 +58,7 @@ def _kernel(scalars_ref,          # [cache_len, include_new, pos_base] (SMEM)
             q_s, m_s, l_s, acc_s,
             *, blk_s: int, n_blocks: int, q_loc: int, nope: int,
             rope_d: int, l_rank: int, v_dim: int, scale: float,
-            fuse_out: bool):
+            fuse_out):
     j = pl.program_id(0)
     cache_len = scalars_ref[0]
     B = x_ref.shape[0]
@@ -140,7 +149,15 @@ def _kernel(scalars_ref,          # [cache_len, include_new, pos_base] (SMEM)
             + p[..., None] * c_new[:, None, :l_rank]
         m_out_ref[...] = m_new
         l_out_ref[...] = l_fin
-        if fuse_out:
+        if fuse_out == "partial_o":
+            # fused value-up + Output-Projection of the UNNORMALIZED latent
+            # accumulator through the prepacked per-head W_UV·W_O tiles;
+            # normalization (÷ l_g) + head sum run after the ClusterReduce.
+            po = jax.lax.dot_general(
+                acc, wuv_ref[...].astype(jnp.float32),
+                (((2,), (1,)), ((1,), (0,))))                 # [q, B, d_out]
+            o_ref[...] = jnp.moveaxis(po, 0, 1).astype(o_ref.dtype)
+        elif fuse_out:
             a_lat = acc / l_fin[..., None]                    # [B,q,l]
             # value Up-Projection (A · W_UV)  → [B, q, v]
             o_head = jax.lax.dot_general(
@@ -158,15 +175,17 @@ def fused_mla_decode_attention(
     wq: jax.Array,                # [D, q_loc * (nope+rope)]
     wdkv: jax.Array,              # [D, l_rank + rope]
     wuk: jax.Array,               # [q_loc, nope, l_rank]
-    wuv: jax.Array,               # [q_loc, l_rank, v_dim]
-    wo: jax.Array,                # [q_loc * v_dim, D_out]
+    wuv: jax.Array,               # [q_loc, l_rank, v_dim]; the prepacked
+                                  # W_UV·W_O tiles when fuse_out="partial_o"
+    wo: jax.Array,                # [q_loc * v_dim, D_out] (unused for
+                                  # fuse_out="partial_o")
     c_cache: jax.Array,           # [S, l_rank + rope] latent cache
     cache_len: jax.Array,
     cos: jax.Array,               # [rope//2] at position cache_len
     sin: jax.Array,
     *,
     q_heads: int, nope: int, rope_d: int, l_rank: int, v_dim: int,
-    block_s: int = 512, fuse_out: bool = True, interpret: bool = False,
+    block_s: int = 512, fuse_out=True, interpret: bool = False,
     pos: Optional[jax.Array] = None,
     include_new: Optional[jax.Array] = None,
     pos_base: Optional[jax.Array] = None,
@@ -177,7 +196,11 @@ def fused_mla_decode_attention(
     ``fuse_out=False``: o = [B, q, l_rank] *unnormalized* latent
     accumulator — combine across chips with ``cluster_flash_combine``,
     then Up-Project and Output-Project.
+    ``fuse_out="partial_o"``: o = [B, q, v_dim] *unnormalized* projected
+    tiles through the prepacked per-head ``wuv`` (= W_UV·W_O columns);
+    flash-merge across chips, normalize per head, sum over heads.
     """
+    tracecount.bump("pallas_kernel")
     B, D = x.shape
     S, lr = c_cache.shape
     assert lr == l_rank + rope_d
@@ -186,7 +209,13 @@ def fused_mla_decode_attention(
     assert S % blk_s == 0
     n_blocks = S // blk_s
     d_out = wo.shape[1]
-    o_shape = (B, d_out) if fuse_out else (B, q_heads, l_rank)
+    if fuse_out == "partial_o":
+        assert wuv.shape == (q_heads, l_rank, v_dim), (wuv.shape,)
+        o_shape = (B, q_heads, v_dim)
+    elif fuse_out:
+        o_shape = (B, d_out)
+    else:
+        o_shape = (B, q_heads, l_rank)
     if pos is None:
         pos = jnp.arange(S, dtype=jnp.int32)
         if pos_base is None:
@@ -248,7 +277,8 @@ def fused_mla_decode_attention(
         ),
         out_shape=[
             jax.ShapeDtypeStruct(o_shape,
-                                 x.dtype if fuse_out else jnp.float32),
+                                 x.dtype if fuse_out is True
+                                 else jnp.float32),
             jax.ShapeDtypeStruct((B, lr), c_cache.dtype),
             jax.ShapeDtypeStruct((B, q_heads), jnp.float32),
             jax.ShapeDtypeStruct((B, q_heads), jnp.float32),

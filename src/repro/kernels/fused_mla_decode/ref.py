@@ -10,7 +10,7 @@ import jax.numpy as jnp
 
 def fused_mla_decode_attention_ref(
     x, wq, wdkv, wuk, wuv, wo, c_cache, cache_len, cos, sin, *,
-    q_heads, nope, rope_d, l_rank, v_dim, fuse_out: bool = True,
+    q_heads, nope, rope_d, l_rank, v_dim, fuse_out=True,
     pos: Optional[jax.Array] = None, include_new=None, **_,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Returns ``(o, c_new, m, l)`` — same contract as the kernel:
@@ -54,7 +54,10 @@ def fused_mla_decode_attention_ref(
     l = jnp.sum(p_un, axis=-1)
     acc = jnp.einsum("bqs,sl->bql", p_un[..., :-1], cache[:, :l_rank]) \
         + p_un[..., -1][..., None] * c_lat[:, None, :]
-    if fuse_out:
+    if fuse_out == "partial_o":
+        # unnormalized projection through the prepacked W_UV·W_O tiles
+        o = jnp.einsum("bql,qlv->bqv", acc, wuv.astype(jnp.float32))
+    elif fuse_out:
         a_lat = acc / l[..., None]
         o_head = jnp.einsum("bql,qlv->bqv", a_lat, wuv.astype(jnp.float32))
         o = (o_head.reshape(B, q_heads * v_dim)

@@ -28,7 +28,7 @@ from repro.serving.prefill import prefill
 def build_engine(cfg, mesh, *, max_seq: int, batch_global: int,
                  fused_combine: bool = False, cluster: Optional[int] = None,
                  backend: str = "xla", interpret: bool = False,
-                 block_s: Optional[int] = None,
+                 block_s: Optional[int] = None, prepack="auto",
                  autotune_table: Optional[str] = None):
     """Returns (params, jitted prefill fn, jitted decode fn, state).
 
@@ -36,6 +36,13 @@ def build_engine(cfg, mesh, *, max_seq: int, batch_global: int,
     decode dataflow (DESIGN.md §2).  ``interpret`` runs the Pallas kernels
     in interpret mode (CPU tests).  ``block_s`` overrides the autotuned KV
     block granularity; ``autotune_table`` persists plans across launches.
+
+    ``prepack``: "auto" | "on" | "off" — serve-layout weight prepack
+    (serving/prepack.py); auto enables it whenever the Pallas backend is
+    selected.  ``params`` is returned as ``{"train": …, "serve": …}``:
+    the training-layout tree (prefill / checkpoints) and the decode-plan
+    tree, materialized ONCE at load with ``out_shardings`` (identical to
+    "train" when prepack is off).  ``generate`` routes each to its step.
     """
     ms = mesh.shape["model"]
     dp_axes = dp_axes_of(mesh)
@@ -51,11 +58,12 @@ def build_engine(cfg, mesh, *, max_seq: int, batch_global: int,
     # tune with the PER-DEVICE batch — the kernel VMEM tiles and per-chip
     # byte model see b_loc, not the global batch
     plan = tune_serving(cfg, seq_len=max_seq, batch=b_loc,
-                        model_axis=ms, backend=backend,
+                        model_axis=ms, backend=backend, prepack=prepack,
                         table_path=autotune_table)
     scfg = ServeConfig(max_seq=max_seq, batch_local=b_loc,
                        backend=plan.backend, interpret=interpret,
-                       block_s=block_s or plan.block_s)
+                       block_s=block_s or plan.block_s,
+                       prepack=plan.prepack)
     params_abs = jax.eval_shape(
         lambda: init_device_major(cfg, lay, jax.random.PRNGKey(0)))
     p_specs = param_specs(cfg, params_abs)
@@ -63,6 +71,28 @@ def build_engine(cfg, mesh, *, max_seq: int, batch_global: int,
     params = jax.jit(lambda: init_device_major(cfg, lay,
                                                jax.random.PRNGKey(0)),
                      out_shardings=out_sh)()
+
+    # Serve-layout prepack: ONE jitted re-layout at load time; the decode
+    # step then performs zero weight gathers / slices (DESIGN.md §2).
+    # Only the attention subtree goes through the pack — every other
+    # leaf of the serve tree aliases the training tree's buffers, so the
+    # extra residency is just the packed attention tensors (DESIGN.md §5).
+    if scfg.prepack:
+        from functools import partial as _partial
+        from repro.serving.prepack import (attn_subtree, merge_packed,
+                                           prepack_for_serving)
+        pp_fn = _partial(prepack_for_serving, cfg, lay,
+                         backend=scfg.backend)
+        sub_abs = jax.eval_shape(pp_fn, attn_subtree(params_abs))
+        sub_specs = param_specs(cfg, sub_abs)
+        sub_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), sub_specs)
+        packed_attn = jax.jit(pp_fn, out_shardings=sub_sh)(
+            attn_subtree(params))
+        params_serve = merge_packed(params, packed_attn)
+        sv_specs = merge_packed(p_specs, sub_specs)
+    else:
+        params_serve, sv_specs = params, p_specs
+    params = {"train": params, "serve": params_serve}
 
     from repro.launch.specs import state_spec_tree
     s_abs_local = jax.eval_shape(lambda: init_decode_state(cfg, scfg, ctx))
@@ -95,18 +125,23 @@ def build_engine(cfg, mesh, *, max_seq: int, batch_global: int,
                                      P(*tok1, None), fe_spec),
                            out_specs=(tok1, s_specs), check_vma=False))
     dec = jax.jit(shard_map(dec_body, mesh=mesh,
-                            in_specs=(p_specs, s_specs, tok1),
+                            in_specs=(sv_specs, s_specs, tok1),
                             out_specs=(tok1, s_specs), check_vma=False))
     return params, pf, dec, state, lay, scfg
 
 
 def generate(cfg, params, pf, dec, state, prompts: jnp.ndarray,
              n_new: int, fe=None):
-    """prompts: [B, S_prompt] → tokens [B, n_new] (greedy)."""
-    nxt, state = pf(params, state, prompts, fe)
+    """prompts: [B, S_prompt] → tokens [B, n_new] (greedy).
+
+    ``params`` is build_engine's ``{"train", "serve"}`` pair: prefill
+    consumes the training layout, the decode loop the serve layout.
+    """
+    p_train, p_serve = params["train"], params["serve"]
+    nxt, state = pf(p_train, state, prompts, fe)
     out = [nxt]
     for _ in range(n_new - 1):
-        nxt, state = dec(params, state, nxt)
+        nxt, state = dec(p_serve, state, nxt)
         out.append(nxt)
     return jnp.stack(out, axis=-1), state
 
@@ -121,13 +156,17 @@ def main():
                     choices=("xla", "pallas", "auto"))
     ap.add_argument("--interpret", action="store_true",
                     help="Pallas interpret mode (CPU)")
+    ap.add_argument("--prepack", default="auto",
+                    choices=("auto", "on", "off"),
+                    help="serve-layout weight prepack (auto: on whenever "
+                         "the Pallas backend is selected)")
     args = ap.parse_args()
     cfg = reduced(get_config(args.arch))
     mesh = make_test_mesh()
     params, pf, dec, state, lay, scfg = build_engine(
         cfg, mesh, max_seq=args.prompt_len + args.tokens + 8,
         batch_global=args.batch, backend=args.backend,
-        interpret=args.interpret)
+        interpret=args.interpret, prepack=args.prepack)
     key = jax.random.PRNGKey(0)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)

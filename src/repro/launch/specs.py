@@ -280,7 +280,7 @@ def _dff_override_specs(p_specs, params_abs):
 def build_decode_step(cfg: ModelConfig, mesh, shape: ShapeConfig,
                       scfg_extra: Optional[dict] = None,
                       backend: str = "xla", interpret: bool = False,
-                      block_s: Optional[int] = None):
+                      block_s: Optional[int] = None, prepack="auto"):
     ms = mesh.shape["model"]
     lay = serving_layout(cfg, shape, ms)
     dp_axes = dp_axes_of(mesh)
@@ -292,12 +292,19 @@ def build_decode_step(cfg: ModelConfig, mesh, shape: ShapeConfig,
     dff = (_needs_weight_spread(cfg, ms) and cfg.moe is not None
            and cfg.moe.expert_d_ff % mesh.shape["data"] == 0)
     plan = tune_serving(cfg, seq_len=shape.seq_len, batch=max(1, b_loc),
-                        model_axis=ms, backend=backend)
+                        model_axis=ms, backend=backend, prepack=prepack)
     scfg = ServeConfig(max_seq=shape.seq_len, batch_local=b_loc,
                        dff_shard=dff, backend=plan.backend,
                        interpret=interpret,
-                       block_s=block_s or plan.block_s)
+                       block_s=block_s or plan.block_s,
+                       prepack=plan.prepack)
     params_abs = abstract_params(cfg, lay)
+    if scfg.prepack:
+        # the decode step consumes the serve layout (derived once from
+        # the training layout at load — serving/prepack.py)
+        from repro.serving.prepack import prepack_abstract
+        params_abs = prepack_abstract(cfg, lay, params_abs,
+                                      backend=scfg.backend)
     p_specs = param_specs(cfg, params_abs)
     if dff:
         p_specs = _dff_override_specs(p_specs, params_abs)

@@ -30,6 +30,7 @@ from repro.configs.base import (ATTN_GLOBAL, ATTN_LOCAL, RECURRENT, RWKV6,
                                 ModelConfig)
 from repro.core import dataflow as df
 from repro.core import primitives as prim
+from repro.core import tracecount
 from repro.models import rglru as rglru_mod
 from repro.models import rwkv6 as rwkv_mod
 from repro.models.attention import AttnParams, MLAAttnParams
@@ -56,6 +57,9 @@ class ServeConfig:
     backend: str = "xla"
     interpret: bool = False        # Pallas interpret mode (CPU/tests)
     block_s: int = 256             # KV block granularity (autotunable)
+    # serve-layout weight prepack (serving/prepack.py): params arrive
+    # already packed per rank — no per-step weight gathers or slices
+    prepack: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -141,35 +145,80 @@ def init_decode_state(cfg: ModelConfig, scfg: ServeConfig, ctx: ParallelCtx
 # ---------------------------------------------------------------------------
 # Weight adapters: train layout (AttnParams) → dataflow weight shards
 # ---------------------------------------------------------------------------
-def _split_token_weights(ctx: ParallelCtx, p: AttnParams
+def _split_token_weights(ctx: ParallelCtx, p: AttnParams, *,
+                         _count: str = "weight_slice"
                          ) -> df.SplitTokenWeights:
     """Train layout already shards heads over `heads` and head_dim over
     `cluster` for wq/wk/wv; wo is [q_loc*hd, D] replicated over cluster —
-    the dataflow needs the cluster's D-column slice, taken dynamically."""
+    the dataflow needs the cluster's D-column slice, taken dynamically.
+
+    Axes are ndim-relative, so the same code serves per-layer leaves and
+    stacked ``[n_groups, …]`` scan leaves.  Per-layer use is the legacy
+    adapter (direct ``decode_block`` callers — bench baselines);
+    ``decode_step`` hoists the slicing out of the layer scan
+    (:func:`hoist_serve_weights`), and the prepacked serve layout removes
+    it entirely (serving/prepack.py).
+    """
+    tracecount.bump(_count)
     n = ctx.cluster_size
-    d = p.wo.shape[1]
     c = ctx.cluster_index()
-    d_n = d // n
-    wo_seg = lax.dynamic_slice_in_dim(p.wo, c * d_n, d_n, axis=1)
+    d_n = p.wo.shape[-1] // n
+    wo_seg = lax.dynamic_slice_in_dim(p.wo, c * d_n, d_n,
+                                      axis=p.wo.ndim - 1)
     return df.SplitTokenWeights(wq=p.wq, wk=p.wk, wv=p.wv, wo=wo_seg,
                                 bq=p.bq, bk=p.bk, bv=p.bv)
 
 
-def _mla_weights(ctx: ParallelCtx, p: MLAAttnParams, cfg: ModelConfig
-                 ) -> df.MLAWeights:
+def _mla_weights(ctx: ParallelCtx, p: MLAAttnParams, cfg: ModelConfig, *,
+                 _count: str = "weight_slice") -> df.MLAWeights:
+    tracecount.bump(_count, 3)
     n = ctx.cluster_size
     c = ctx.cluster_index()
     m = cfg.mla
-    d = p.wo.shape[1]
-    d_n = d // n
+    d_n = p.wo.shape[-1] // n
     l_n = m.kv_lora_rank // n
     return df.MLAWeights(
         wq=p.wq,
         wdkv=p.wdkv,
-        wuk=lax.dynamic_slice_in_dim(p.wuk, c * l_n, l_n, axis=2),
-        wuv=lax.dynamic_slice_in_dim(p.wuv, c * l_n, l_n, axis=1),
-        wo=lax.dynamic_slice_in_dim(p.wo, c * d_n, d_n, axis=1),
+        wuk=lax.dynamic_slice_in_dim(p.wuk, c * l_n, l_n,
+                                     axis=p.wuk.ndim - 1),
+        wuv=lax.dynamic_slice_in_dim(p.wuv, c * l_n, l_n,
+                                     axis=p.wuv.ndim - 2),
+        wo=lax.dynamic_slice_in_dim(p.wo, c * d_n, d_n,
+                                    axis=p.wo.ndim - 1),
     )
+
+
+def _hoist_attn(ctx: ParallelCtx, cfg: ModelConfig, p):
+    """One block's rank-slice adapter, run ONCE per decode step outside
+    the layer-group scan — the step-invariant ``dynamic_slice`` no
+    longer re-executes per layer-group iteration."""
+    if isinstance(p, MLAAttnParams):
+        return _mla_weights(ctx, p, cfg, _count="weight_slice_hoisted")
+    return _split_token_weights(ctx, p, _count="weight_slice_hoisted")
+
+
+def hoist_serve_weights(ctx: ParallelCtx, cfg: ModelConfig,
+                        params: PyTree, scfg: ServeConfig) -> PyTree:
+    """Per-step weight adapters, hoisted out of the layer scan.
+
+    Prepacked params (serving/prepack.py) are already in serve layout —
+    pass through.  Otherwise every self-attention block's train-layout
+    ``attn`` entry is rank-sliced here, once per step, so the scan body
+    consumes ready dataflow weights (satellite of DESIGN.md §2's
+    prepack: the non-prepacked path stops paying the per-layer-iteration
+    ``dynamic_slice`` too)."""
+    if scfg.prepack:
+        return params
+    from repro.serving.prepack import map_blocks
+
+    def adapt(blk, stacked):
+        a = blk.get("attn")
+        if not isinstance(a, (AttnParams, MLAAttnParams)):
+            return blk
+        return dict(blk, attn=_hoist_attn(ctx, cfg, a))
+
+    return map_blocks(adapt, params)
 
 
 # ---------------------------------------------------------------------------
@@ -203,21 +252,28 @@ def decode_block(ctx: ParallelCtx, cfg: ModelConfig, kind: str,
             ctx, blk["rglru"], rms_norm(x, blk["ln1"], eps), cache)
     elif cfg.mla is not None:
         spec = _spec(ctx, scfg)
-        w = _mla_weights(ctx, blk["attn"], cfg)
+        w = blk["attn"]
+        if isinstance(w, MLAAttnParams):       # train layout: adapt per layer
+            w = _mla_weights(ctx, w, cfg)
         o_seg, cache = df.mla_attention(
             spec, rms_norm(x, blk["ln1"], eps), w, cache, cache_len,
             nope_dim=cfg.mla.nope_head_dim, rope_dim=cfg.mla.rope_head_dim,
             rope_theta=cfg.rope_theta)
-        a = ctx.gather_cluster(o_seg, axis=1)
+        # prepacked serve layout emits the full [B, D] output directly
+        a = o_seg if isinstance(w, df.PackedMLAWeights) \
+            else ctx.gather_cluster(o_seg, axis=1)
     else:
         spec = _spec(ctx, scfg)
-        w = _split_token_weights(ctx, blk["attn"])
+        w = blk["attn"]
+        if isinstance(w, AttnParams):          # train layout: adapt per layer
+            w = _split_token_weights(ctx, w)
         window = cfg.sliding_window if kind == ATTN_LOCAL else 0
         o_seg, cache = df.split_token_attention(
             spec, rms_norm(x, blk["ln1"], eps), w, cache, cache_len,
             window=window, attn_softcap=cfg.attn_softcap,
             rope_theta=cfg.rope_theta)
-        a = ctx.gather_cluster(o_seg, axis=1)
+        a = o_seg if isinstance(w, df.PackedSplitTokenWeights) \
+            else ctx.gather_cluster(o_seg, axis=1)
     if "post_ln1" in blk:
         a = rms_norm(a, blk["post_ln1"], eps)
     x = x + a
@@ -303,6 +359,10 @@ def decode_step(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
     a single XLA dispatch.
     """
     params = unwrap_local(params_dm)
+    # Step-invariant rank slicing of attention weights happens HERE, once
+    # per step, not per layer-group iteration (no-op when the params are
+    # prepacked in serve layout — serving/prepack.py).
+    params = hoist_serve_weights(ctx, cfg, params, scfg)
     kinds = cfg.layer_kinds
     period = len(cfg.block_pattern)
     n_groups = cfg.n_layers // period

@@ -1,0 +1,212 @@
+"""Decode-plan weight prepacking: training layout → serve layout, once
+at weight-load time (DESIGN.md §2/§5).
+
+The Pallas decode path's weight-segment ClusterGather is step-invariant
+(``x·gather(W) == gather(x·W)`` — the hoisted Alg. 3 line 3), yet the
+adapter path re-runs it inside every decode step, paying
+``O(D·heads·hd)`` ICI bytes per layer per token; both backends
+additionally re-slice ``wo``/``wuk``/``wuv`` with ``lax.dynamic_slice``
+per layer.  :func:`prepack_for_serving` eliminates all of it by
+materializing, ONCE, the per-rank tensors each backend actually
+consumes:
+
+* ``backend="pallas"`` → :class:`~repro.core.dataflow.PackedSplitTokenWeights`
+  (cluster-gathered ``wqkv`` + fused bias + per-head ``wo`` column
+  tiles for the in-kernel ``fuse_out="partial_o"`` projection) and
+  :class:`~repro.core.dataflow.PackedMLAWeights` (gathered ``wq``/
+  ``wdkv``, full ``wuk``, and the folded ``wproj = W_UV · W_O(cols)``).
+* ``backend="xla"`` → plain :class:`~repro.core.dataflow.SplitTokenWeights`
+  / :class:`~repro.core.dataflow.MLAWeights` with the rank slices taken
+  up front (the XLA dataflow keeps its activation gathers — those are
+  the paper's schedule and move only ``O(B·heads·hd)`` bytes).
+
+Everything operates on the GLOBAL device-major tree (``[model_size,
+*local]`` leaves, models/transformer.py), so the transform is pure
+reshape / transpose / slice — no collectives — and a single
+``jax.jit(..., out_shardings=...)`` call redistributes the packed
+tensors device-major at load.  The packed tree is DERIVED state: it is
+never checkpointed (checkpoint/manager.py strips it) and is rebuilt
+from the training-layout weights on every launch.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.core.dataflow import (MLAWeights, PackedMLAWeights,
+                                 PackedSplitTokenWeights, SplitTokenWeights)
+from repro.models.attention import AttnParams, MLAAttnParams
+from repro.models.transformer import Layout
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Global device-major layout transforms (axis indices INCLUDE the leading
+# model dim at 0; stacked group dims are handled by vmap in the tree pass)
+# ---------------------------------------------------------------------------
+def _gather_seg(x: jax.Array, hs: int, n: int, axis: int) -> jax.Array:
+    """Materialize, per rank, the cluster-gathered ``axis`` — exactly what
+    ``cluster_gather_tiled`` produces per step at runtime (segment of
+    cluster rank c lands at offset c), replicated over the cluster
+    sub-axis.  Device order is heads-major (rank = h·N + c)."""
+    if n == 1:
+        return x
+    g = x.reshape((hs, n) + x.shape[1:])       # dim `axis` now at axis+1
+    g = jnp.moveaxis(g, 1, axis)               # n right before the seg dim
+    shp = g.shape
+    g = g.reshape(shp[:axis] + (shp[axis] * shp[axis + 1],) + shp[axis + 2:])
+    g = jnp.broadcast_to(g[:, None], (hs, n) + g.shape[1:])
+    return g.reshape((hs * n,) + g.shape[2:])
+
+
+def _col_tile(x: jax.Array, hs: int, n: int, axis: int) -> jax.Array:
+    """Per-rank column tile of ``axis``: rank (h, c) keeps columns
+    ``[c·d/N, (c+1)·d/N)`` — the slice ``_split_token_weights`` /
+    ``_mla_weights`` used to take dynamically every layer, every step."""
+    if n == 1:
+        return x
+    dn = x.shape[axis] // n
+    g = x.reshape((hs, n) + x.shape[1:])
+    tiles = [lax.slice_in_dim(g[:, c], c * dn, (c + 1) * dn, axis=axis)
+             for c in range(n)]
+    g = jnp.stack(tiles, axis=1)               # [hs, n, ..., d/N, ...]
+    return g.reshape((hs * n,) + g.shape[2:])
+
+
+def _pack_attn(cfg: ModelConfig, lay: Layout, backend: str, a: AttnParams):
+    hs, n = lay.heads_sub, lay.cluster
+    if backend != "pallas":
+        # XLA dataflow keeps the train-layout segments; only the rank
+        # slices move to load time.
+        return SplitTokenWeights(wq=a.wq, wk=a.wk, wv=a.wv,
+                                 wo=_col_tile(a.wo, hs, n, 2),
+                                 bq=a.bq, bk=a.bk, bv=a.bv)
+    ms, D, q_loc, hd_n = a.wq.shape
+    kv_loc = a.wk.shape[2]
+    hd = hd_n * n
+    wq = _gather_seg(a.wq, hs, n, 3).reshape(ms, D, q_loc * hd)
+    wk = _gather_seg(a.wk, hs, n, 3).reshape(ms, D, kv_loc * hd)
+    wv = _gather_seg(a.wv, hs, n, 3).reshape(ms, D, kv_loc * hd)
+    wqkv = jnp.concatenate([wq, wk, wv], axis=2)
+    bqkv = None
+    if a.bq is not None:
+        bqkv = jnp.concatenate(
+            [_gather_seg(a.bq, hs, n, 2).reshape(ms, q_loc * hd),
+             _gather_seg(a.bk, hs, n, 2).reshape(ms, kv_loc * hd),
+             _gather_seg(a.bv, hs, n, 2).reshape(ms, kv_loc * hd)], axis=1)
+    # Full-width Output-Projection rows, per head.  Every cluster rank
+    # projects into the SAME [D] output basis, so the in-kernel partial_o
+    # tiles are summable by the flash merge (a per-rank *column* tile
+    # would put each rank's partial in a different basis and break the
+    # single-ClusterReduce combine) and the post-combine cluster gather
+    # of the output vanishes.
+    wo = a.wo.reshape(ms, q_loc, hd, a.wo.shape[-1])
+    return PackedSplitTokenWeights(wqkv=wqkv, wo=wo, bqkv=bqkv)
+
+
+def _pack_mla(cfg: ModelConfig, lay: Layout, backend: str, a: MLAAttnParams):
+    hs, n = lay.heads_sub, lay.cluster
+    if backend != "pallas":
+        return MLAWeights(wq=a.wq, wdkv=a.wdkv,
+                          wuk=_col_tile(a.wuk, hs, n, 3),
+                          wuv=_col_tile(a.wuv, hs, n, 2),
+                          wo=_col_tile(a.wo, hs, n, 2))
+    m = cfg.mla
+    ms, D = a.wq.shape[0], a.wq.shape[1]
+    q_loc = a.wuk.shape[1]
+    v_dim = a.wuv.shape[-1]
+    wq = _gather_seg(a.wq, hs, n, 3)           # [ms, D, q, nope+rope]
+    wq2 = wq.reshape(ms, D, q_loc * (m.nope_head_dim + m.rope_head_dim))
+    wdkv = _gather_seg(a.wdkv, hs, n, 2)       # [ms, D, l_rank+rope]
+    # wuk/wuv are stored full (replicated over the cluster) in the train
+    # layout — the adapter sliced them only to re-gather on the Pallas
+    # path, so the packed form is the stored tensor itself.
+    wo4 = a.wo.reshape(ms, q_loc, v_dim, a.wo.shape[-1])
+    # Fold value Up-Projection into the full-width Output-Projection rows
+    # — one per-head matrix, applied in-kernel (fuse_out="partial_o").
+    # Full [D] width keeps every cluster rank's partial in the same
+    # output basis (summable by the flash merge, no post-combine gather).
+    wproj = jnp.einsum("mqlv,mqvd->mqld", a.wuv.astype(jnp.float32),
+                       wo4.astype(jnp.float32)).astype(a.wo.dtype)
+    return PackedMLAWeights(wq=wq2, wdkv=wdkv, wuk=a.wuk, wproj=wproj)
+
+
+# ---------------------------------------------------------------------------
+# Tree pass
+# ---------------------------------------------------------------------------
+def map_blocks(fn, params: PyTree, *others: PyTree) -> PyTree:
+    """THE traversal of the attention-bearing block lists: apply
+    ``fn(blk, *other_blks, stacked)`` to each entry of ``"blocks"``
+    (stacked scan leaves) and ``"tail"`` (unstacked), preserving every
+    other top-level entry of ``params``.  Extra trees zip positionally.
+    All serve-layout passes (pack, subtree projection, alias merge, and
+    the engine's per-step hoist) share this walk so a new
+    attention-bearing subtree only has to be taught here."""
+    out = dict(params)
+    out["blocks"] = [fn(*bs, True) for bs in
+                     zip(params["blocks"], *(o["blocks"] for o in others))]
+    out["tail"] = [fn(*bs, False) for bs in
+                   zip(params["tail"], *(o["tail"] for o in others))]
+    return out
+
+
+def prepack_for_serving(cfg: ModelConfig, lay: Layout, params: PyTree,
+                        *, backend: str = "pallas") -> PyTree:
+    """Training-layout device-major params → serve-layout params.
+
+    Replaces every self-attention block's ``attn`` entry with the
+    backend's packed form; every other leaf (FFN/MoE, norms, recurrent
+    blocks, embeddings, encoder, cross-attention) rides through
+    untouched.  Pure layout math — run it under ``jax.jit`` with
+    ``out_shardings`` to materialize device-major (launch/serve.py).
+    """
+    def pack_block(blk: Dict[str, Any], stacked: bool) -> Dict[str, Any]:
+        a = blk.get("attn")
+        if isinstance(a, MLAAttnParams):
+            fn = partial(_pack_mla, cfg, lay, backend)
+        elif isinstance(a, AttnParams):
+            fn = partial(_pack_attn, cfg, lay, backend)
+        else:
+            return blk
+        out = dict(blk)
+        out["attn"] = (jax.vmap(fn, in_axes=1, out_axes=1)(a) if stacked
+                       else fn(a))
+        return out
+
+    return map_blocks(pack_block, params)
+
+
+def prepack_abstract(cfg: ModelConfig, lay: Layout, params_abs: PyTree,
+                     *, backend: str = "pallas") -> PyTree:
+    """Shape-only prepack (for spec construction / dry runs)."""
+    return jax.eval_shape(
+        partial(prepack_for_serving, cfg, lay, backend=backend), params_abs)
+
+
+def attn_subtree(params: PyTree) -> PyTree:
+    """``{"blocks": …, "tail": …}`` carrying ONLY the attention entries —
+    the subset the pack actually transforms.  launch/serve.py jits the
+    pack over this subtree so the serve tree duplicates no FFN/MoE/
+    embedding bytes: everything else is aliased from the training tree
+    (:func:`merge_packed`)."""
+    def pick(blk, stacked):
+        return {"attn": blk["attn"]} if "attn" in blk else {}
+    return map_blocks(pick, {"blocks": params["blocks"],
+                             "tail": params["tail"]})
+
+
+def merge_packed(params: PyTree, packed_attn: PyTree) -> PyTree:
+    """Serve tree = packed attention entries + every other leaf ALIASED
+    from the training tree (same buffers, no duplication).  Works on
+    spec trees too.  The residual memory cost of serving with prepack is
+    therefore only the packed attention tensors themselves (DESIGN.md
+    §5)."""
+    def mb(tb, pb, stacked):
+        return dict(tb, attn=pb["attn"]) if "attn" in pb else tb
+    return map_blocks(mb, params, packed_attn)

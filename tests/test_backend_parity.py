@@ -147,9 +147,100 @@ def test_mla_backend_parity():
     """)
 
 
+def test_prepacked_vs_adapter_parity_gqa():
+    """Prepacked serve layout (fully fused partial_o Pallas path) vs the
+    train-layout XLA adapter path: identical outputs over sequential
+    decode steps through a FULL cache and a sliding-window RING cache,
+    with GQA bias + softcap, at cluster sizes 1, 2 and 4."""
+    run_multidevice("""
+    from repro.core import dataflow as df
+    from repro.core import primitives as prim
+    mesh = jax.make_mesh((8,), ("c",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    D, n_heads, kv_heads, hd, B = 64, 4, 2, 32, 2
+    H = 2                                        # head-groups
+    T, CAP = 14, 20.0
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 9)
+    WQ = jax.random.normal(ks[0], (D, n_heads, hd)) * 0.05
+    WK = jax.random.normal(ks[1], (D, kv_heads, hd)) * 0.05
+    WV = jax.random.normal(ks[2], (D, kv_heads, hd)) * 0.05
+    BQ = jax.random.normal(ks[3], (n_heads, hd)) * 0.02
+    BK = jax.random.normal(ks[4], (kv_heads, hd)) * 0.02
+    BV = jax.random.normal(ks[5], (kv_heads, hd)) * 0.02
+    WO = jax.random.normal(ks[6], (n_heads * hd, D)) * 0.05
+    XS = jax.random.normal(ks[7], (T, B, D)) * 0.3
+    q_loc, kv_loc = n_heads // H, kv_heads // H
+
+    for N in (1, 2, 4):
+        heads = prim.SubAxis("c", H, minor_size=N)
+        clus = prim.SubAxis("c", N, minor_size=1)
+        hd_n = hd // N
+
+        def body(xs, WQ, WK, WV, BQ, BK, BV, WO):
+            h = prim.axis_index(heads)
+            dsl = jax.lax.dynamic_slice_in_dim
+            c = prim.axis_index(clus)
+            sl_h = lambda a: dsl(a, h * (a.shape[-2] // H),
+                                 a.shape[-2] // H, axis=-2)
+            sl_c = lambda a: dsl(a, c * hd_n, hd_n, axis=-1)
+            # train-layout adapter weights (per-step slicing, XLA path)
+            w_x = df.SplitTokenWeights(
+                wq=sl_c(sl_h(WQ)), wk=sl_c(sl_h(WK)), wv=sl_c(sl_h(WV)),
+                wo=dsl(dsl(WO, h * q_loc * hd, q_loc * hd, axis=0),
+                       c * (D // N), D // N, axis=1),
+                bq=sl_c(sl_h(BQ)), bk=sl_c(sl_h(BK)), bv=sl_c(sl_h(BV)))
+            # serve-layout prepack: gathered wqkv + fused bias + per-head
+            # full-width wo rows (what serving/prepack.py materializes)
+            flat = lambda a: sl_h(a).reshape(D, -1)
+            wqkv = jnp.concatenate([flat(WQ), flat(WK), flat(WV)], axis=1)
+            bflat = lambda a: sl_h(a[None])[0].reshape(-1)
+            bqkv = jnp.concatenate([bflat(BQ), bflat(BK), bflat(BV)])
+            wo3 = dsl(WO, h * q_loc * hd, q_loc * hd,
+                      axis=0).reshape(q_loc, hd, D)
+            w_p = df.PackedSplitTokenWeights(wqkv=wqkv, wo=wo3, bqkv=bqkv)
+
+            spec_x = df.ClusterSpec(heads=heads, cluster=clus,
+                                    backend="xla", block_s=2)
+            spec_p = df.ClusterSpec(heads=heads, cluster=clus,
+                                    backend="pallas", interpret=True,
+                                    block_s=2)
+            outs = []
+            for window, s_cap in ((0, 16), (8, 8)):  # full + ring cache
+                s_blk = s_cap // N
+                caches = [df.KVBlock(
+                    k=jnp.zeros((s_blk, B * kv_loc, hd), jnp.bfloat16),
+                    v=jnp.zeros((s_blk, B * kv_loc, hd), jnp.bfloat16),
+                    pos=jnp.full((s_blk,), -1, jnp.int32))
+                    for _ in range(2)]
+                for t in range(T):
+                    o_x, caches[0] = df.split_token_attention(
+                        spec_x, xs[t], w_x, caches[0], jnp.int32(t),
+                        window=window, attn_softcap=CAP)
+                    o_p, caches[1] = df.split_token_attention(
+                        spec_p, xs[t], w_p, caches[1], jnp.int32(t),
+                        window=window, attn_softcap=CAP)
+                    # adapter output is cluster-tiled; packed is full [B, D]
+                    o_xf = prim.cluster_gather_tiled(o_x, clus, axis=1)
+                    outs.append(jnp.stack([o_xf, o_p]))
+            return jnp.stack(outs)[None]          # [1, 2T, 2, B, D]
+
+        out = jax.jit(shard_map(
+            body, mesh=mesh,
+            in_specs=(P(),) * 8,
+            out_specs=P("c"), check_vma=False))(
+            XS, WQ, WK, WV, BQ, BK, BV, WO)
+        out = np.asarray(out, np.float32)
+        err = np.abs(out[:, :, 0] - out[:, :, 1]).max()
+        assert err <= 1e-2, (N, err)
+        print("PREPACK PARITY OK N =", N, "err", err)
+    """, timeout=1500)
+
+
 def test_engine_backend_parity_tokens():
     """Full engine: greedy tokens agree between backends (GQA with
-    sliding window + softcap, and MLA), pallas in interpret mode."""
+    sliding window + softcap, and MLA), pallas in interpret mode with
+    the serve-layout prepack auto-enabled."""
     run_multidevice("""
     from repro.configs import get_config, reduced
     from repro.launch.mesh import make_test_mesh
@@ -162,6 +253,8 @@ def test_engine_backend_parity_tokens():
             params, pf, dec, state, lay, scfg = build_engine(
                 cfg, mesh, max_seq=48, batch_global=4, backend=backend,
                 interpret=(backend == "pallas"))
+            # prepack rides the auto default: on exactly for pallas
+            assert scfg.prepack == (backend == "pallas"), scfg
             key = jax.random.PRNGKey(0)
             prompts = jax.random.randint(key, (4, 16), 0, cfg.vocab_size)
             toks, _ = generate(cfg, params, pf, dec, state, prompts, 5,
@@ -170,4 +263,40 @@ def test_engine_backend_parity_tokens():
         agree = (outs["xla"] == outs["pallas"]).mean()
         assert agree >= 0.95, (arch, agree, outs)
         print("ENGINE PARITY OK", arch, agree)
+    """, timeout=1500)
+
+
+def test_engine_prepack_parity_mla_cluster():
+    """MLA engine at forced cluster sizes 2 and 4: prepacked Pallas
+    (with the W_UV·W_O fold) matches the XLA adapter path
+    token-for-token — and, at cluster 2, the non-prepacked Pallas
+    path."""
+    run_multidevice("""
+    from repro.configs import get_config, reduced
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.serve import build_engine, generate
+    cfg = reduced(get_config("deepseek-v2-lite"))
+    mesh = make_test_mesh()
+
+    def run(cluster, **kw):
+        params, pf, dec, state, lay, scfg = build_engine(
+            cfg, mesh, max_seq=48, batch_global=4, cluster=cluster, **kw)
+        key = jax.random.PRNGKey(0)
+        prompts = jax.random.randint(key, (4, 16), 0, cfg.vocab_size)
+        toks, _ = generate(cfg, params, pf, dec, state, prompts, 5, None)
+        return np.asarray(toks), scfg
+
+    for n in (2, 4):
+        t_x, _ = run(n, backend="xla")
+        t_p, scfg = run(n, backend="pallas", interpret=True)
+        assert scfg.prepack, scfg
+        agree = (t_x == t_p).mean()
+        assert agree >= 0.95, (n, agree)
+        print("MLA PREPACK ENGINE PARITY OK N =", n, agree)
+    t_np, scfg = run(2, backend="pallas", interpret=True, prepack="off")
+    assert not scfg.prepack, scfg
+    t_p, _ = run(2, backend="pallas", interpret=True)
+    agree = (t_np == t_p).mean()
+    assert agree >= 0.95, agree
+    print("MLA PREPACK-VS-ADAPTER OK", agree)
     """, timeout=1500)

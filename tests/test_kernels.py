@@ -119,6 +119,124 @@ def test_fused_decode_partial_mode_combines():
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("B,D,S,q_loc,kv_loc,hd,d_out", [
+    (2, 128, 512, 4, 2, 32, 64),
+    (1, 64, 256, 8, 4, 16, 64),
+])
+@pytest.mark.parametrize("cache_len", [0, 100, -1])
+def test_fused_decode_partial_o_vs_oracle(B, D, S, q_loc, kv_loc, hd,
+                                          d_out, cache_len):
+    """``fuse_out="partial_o"``: the in-kernel per-head Output-Projection
+    of the unnormalized accumulator matches the jnp oracle, and
+    normalizing + summing heads reproduces the monolithic fused output
+    through the flat wo."""
+    cache_len = S - 1 if cache_len < 0 else min(cache_len, S - 1)
+    key = jax.random.PRNGKey(11)
+    ks = jax.random.split(key, 6)
+    P_ = (q_loc + 2 * kv_loc) * hd
+    x = jax.random.normal(ks[0], (B, D)) * 0.2
+    wqkv = jax.random.normal(ks[1], (D, P_)) * 0.05
+    wo3 = jax.random.normal(ks[2], (q_loc, hd, d_out)) * 0.05
+    kc = jax.random.normal(ks[3], (S, kv_loc, hd)) * 0.3
+    vc = jax.random.normal(ks[4], (S, kv_loc, hd)) * 0.3
+    cos, sin = rope_at(cache_len, hd)
+    kw = dict(q_heads=q_loc, kv_heads=kv_loc, fuse_out="partial_o")
+    o, kn, vn, m, l = fused_decode(x, wqkv, None, wo3, kc, vc, cache_len,
+                                   cos, sin, **kw, interpret=True,
+                                   block_s=64)
+    o_r, _, _, m_r, l_r = fused_decode(x, wqkv, None, wo3, kc, vc,
+                                       cache_len, cos, sin, **kw,
+                                       use_ref=True)
+    assert o.shape == (B, q_loc, d_out)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_r),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(m_r),
+                               rtol=1e-5, atol=1e-5)
+    # normalize per head + sum over heads == fuse_out=True through the
+    # flat [q_loc*hd, d_out] wo (the serve-layout identity)
+    o_flat, *_ = fused_decode(x, wqkv, None, wo3.reshape(q_loc * hd, d_out),
+                              kc, vc, cache_len, cos, sin,
+                              q_heads=q_loc, kv_heads=kv_loc, use_ref=True)
+    comb = (np.asarray(o) / np.asarray(l)[..., None]).sum(1)
+    np.testing.assert_allclose(comb, np.asarray(o_flat),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_decode_partial_o_cluster_combine():
+    """partial_o partials from a 2-way KV-sequence split flash-merge to
+    the monolithic answer — the single-ClusterReduce property of the
+    prepacked serve layout (projection inside the kernel, combine after)."""
+    from repro.core.primitives import flash_merge
+    B, D, S, q_loc, kv_loc, hd, d_out = 2, 128, 512, 4, 2, 32, 96
+    key = jax.random.PRNGKey(12)
+    ks = jax.random.split(key, 6)
+    P_ = (q_loc + 2 * kv_loc) * hd
+    x = jax.random.normal(ks[0], (B, D)) * 0.2
+    wqkv = jax.random.normal(ks[1], (D, P_)) * 0.05
+    wo3 = jax.random.normal(ks[2], (q_loc, hd, d_out)) * 0.05
+    kc = jax.random.normal(ks[3], (S, kv_loc, hd)) * 0.3
+    vc = jax.random.normal(ks[4], (S, kv_loc, hd)) * 0.3
+    clen = 400
+    cos, sin = rope_at(clen, hd)
+    kw = dict(q_heads=q_loc, kv_heads=kv_loc, fuse_out="partial_o")
+    h = S // 2
+    # "chip 0": first half of the cache, owns the new token
+    o0, _, _, m0, l0 = fused_decode(
+        x, wqkv, None, wo3, kc[:h], vc[:h], min(clen, h), cos, sin, **kw,
+        interpret=True, block_s=64, include_new=jnp.int32(1))
+    # "chip 1": second half (positions offset by h), new token excluded
+    o1, _, _, m1, l1 = fused_decode(
+        x, wqkv, None, wo3, kc[h:], vc[h:], clen, cos, sin, **kw,
+        interpret=True, block_s=64, include_new=jnp.int32(0),
+        pos=jnp.arange(h, S, dtype=jnp.int32), pos_base=jnp.int32(h))
+    m, l, o = flash_merge((np.asarray(m0), np.asarray(l0), np.asarray(o0)),
+                          (np.asarray(m1), np.asarray(l1), np.asarray(o1)))
+    comb = (np.asarray(o) / np.asarray(l)[..., None]).sum(1)
+    o_full, *_ = fused_decode(x, wqkv, None,
+                              wo3.reshape(q_loc * hd, d_out), kc, vc, clen,
+                              cos, sin, q_heads=q_loc, kv_heads=kv_loc,
+                              use_ref=True)
+    np.testing.assert_allclose(comb, np.asarray(o_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_mla_partial_o_fold():
+    """MLA partial_o through the prepacked W_UV·W_O fold equals the
+    monolithic fuse_out=True result with the unfolded weights."""
+    B, D, S, q_loc = 2, 128, 512, 4
+    l_rank, rope_d, nope, v_dim, d_out = 32, 8, 16, 16, 96
+    key = jax.random.PRNGKey(13)
+    ks = jax.random.split(key, 8)
+    x = jax.random.normal(ks[0], (B, D)) * 0.2
+    wq = jax.random.normal(ks[1], (D, q_loc * (nope + rope_d))) * 0.05
+    wdkv = jax.random.normal(ks[2], (D, l_rank + rope_d)) * 0.05
+    wuk = jax.random.normal(ks[3], (q_loc, nope, l_rank)) * 0.05
+    wuv = jax.random.normal(ks[4], (q_loc, l_rank, v_dim)) * 0.05
+    wo = jax.random.normal(ks[5], (q_loc * v_dim, d_out)) * 0.05
+    cc = jax.random.normal(ks[6], (S, l_rank + rope_d)) * 0.3
+    clen = 300
+    cos, sin = rope_at(clen, rope_d)
+    wproj = jnp.einsum("qlv,qvd->qld", wuv, wo.reshape(q_loc, v_dim, d_out))
+    kw = dict(q_heads=q_loc, nope=nope, rope_d=rope_d, l_rank=l_rank)
+    o, cn, m, l = fused_mla_decode(
+        x, wq, wdkv, wuk, wproj, jnp.zeros((1, 1)), cc, clen, cos, sin,
+        **kw, v_dim=d_out, fuse_out="partial_o", interpret=True, block_s=64)
+    o_r, cn_r, m_r, l_r = fused_mla_decode(
+        x, wq, wdkv, wuk, wproj, jnp.zeros((1, 1)), cc, clen, cos, sin,
+        **kw, v_dim=d_out, fuse_out="partial_o", use_ref=True)
+    assert o.shape == (B, q_loc, d_out)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_r),
+                               rtol=5e-5, atol=5e-5)
+    np.testing.assert_allclose(np.asarray(cn), np.asarray(cn_r),
+                               rtol=1e-5, atol=1e-5)
+    o_full, *_ = fused_mla_decode(x, wq, wdkv, wuk, wuv, wo, cc, clen,
+                                  cos, sin, **kw, v_dim=v_dim,
+                                  fuse_out=True, use_ref=True)
+    comb = (np.asarray(o) / np.asarray(l)[..., None]).sum(1)
+    np.testing.assert_allclose(comb, np.asarray(o_full),
+                               rtol=1e-4, atol=1e-4)
+
+
 @pytest.mark.parametrize("S,q_loc,kv_loc,hd,clen", [
     (512, 4, 2, 32, 77), (256, 8, 1, 64, 256), (1024, 2, 2, 16, 1000)])
 def test_flash_decode_sweep(S, q_loc, kv_loc, hd, clen):

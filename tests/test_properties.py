@@ -1,8 +1,15 @@
-"""Hypothesis property tests on the system's invariants."""
+"""Hypothesis property tests on the system's invariants.
+
+Marked ``slow``: CI's tier-1 job deselects them (``-m "not slow"``) so
+the fast suite stays fast; run them explicitly with ``-m slow`` (they
+also skip gracefully when hypothesis is absent).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow
 
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
