@@ -14,6 +14,11 @@ Measurements per arch:
   speedup — same FLOPs, different dispatch granularity.
 * ``tpot_cachelen_<variant>_<arch>_<L>`` — cache-length sweep: decode
   step time after prefilling L tokens (cost ∝ live prefix, DESIGN.md §3).
+* ``--trace`` — ragged-arrival trace mode: a random request trace runs
+  through the continuous-batching scheduler (serving/scheduler.py) and
+  the report gains a ``ragged_trace`` section with per-request TPOT,
+  slot occupancy, decode-dispatch count and the per-slot attend-block
+  work counters (DESIGN.md §6).
 
 Besides the CSV rows, the run emits a machine-readable ``BENCH_tpot.json``
 (``--out``) carrying TPOT per (arch × variant × cache_len bucket) plus
@@ -111,7 +116,7 @@ def _unfused_decode_us(cfg, max_seq: int, batch: int, iters: int = 15):
     head_step = _sm(_head, 1)
 
     def one_token(tok, state):
-        cache_len = state["cache_len"]
+        cache_len = state["cache_lens"]
         x = embed_step(tok)
         for gi in range(n_groups):
             for p_i in range(period):
@@ -188,9 +193,82 @@ def _bench_variant(cfg, arch, label, kw, *, max_seq, batch, prompt_len,
     }
 
 
+def _bench_ragged_trace(arch, *, n_slots=3, prompt_cap=12, max_new_cap=10,
+                        n_requests=8, backend="xla", interpret=False,
+                        rows=None, seed=0):
+    """Random arrival trace through the slot scheduler: per-request TPOT
+    (wall time from admission to finish over tokens emitted) and slot
+    occupancy.  CPU walls are relative indicators; the occupancy /
+    dispatch-count / work-counter columns are exact."""
+    import time as _time
+
+    from repro.launch.mesh import make_test_mesh as _mk
+    from repro.launch.serve import build_engine_full
+    from repro.serving.scheduler import Request, SlotScheduler
+
+    cfg = reduced(get_config(arch))
+    mesh = _mk(data=1, model=8)          # scheduler batch rides unsharded
+    eng = build_engine_full(
+        cfg, mesh, max_seq=prompt_cap + max_new_cap + 8,
+        batch_global=n_slots, backend=backend, interpret=interpret,
+        track_work=True,
+        plan_seq_len=prompt_cap + max_new_cap)   # bucket on max LIVE len
+    sched = SlotScheduler(eng, prompt_cap=prompt_cap)
+    rng = np.random.default_rng(seed)
+    trace = []
+    for rid in range(n_requests):
+        arrival = int(rng.integers(0, max(1, n_requests // 2)))
+        plen = int(rng.integers(2, prompt_cap + 1))
+        n_new = int(rng.integers(2, max_new_cap + 1))
+        trace.append((arrival, Request(
+            rid, [int(t) for t in rng.integers(0, cfg.vocab_size, plen)],
+            n_new)))
+    pending = sorted(trace, key=lambda ar: ar[0])
+    i, tick_wall = 0, []
+    while (i < len(pending) or not sched.idle()) and sched.tick < 10_000:
+        while i < len(pending) and pending[i][0] <= sched.tick:
+            sched.submit(pending[i][1])
+            i += 1
+        t0 = _time.perf_counter()
+        sched.step()
+        tick_wall.append(_time.perf_counter() - t0)
+    assert sched.idle(), "ragged trace did not drain"
+    per_request = {}
+    for rid, res in sched.results.items():
+        span_us = sum(tick_wall[res.admit_tick:res.finish_tick + 1]) * 1e6
+        per_request[str(rid)] = {
+            "tpot_us": span_us / max(1, len(res.tokens)),
+            "n_tokens": len(res.tokens),
+            "slot": res.slot,
+            "admit_tick": res.admit_tick,
+            "finish_tick": res.finish_tick,
+        }
+    occ = float(np.mean(sched.occupancy)) if sched.occupancy else 0.0
+    mean_tpot = float(np.mean([r["tpot_us"] for r in per_request.values()]))
+    if rows is not None:
+        rows.append(row(f"tpot_ragged_trace_{arch}", mean_tpot,
+                        f"occupancy={occ:.2f},ticks={sched.tick},"
+                        f"dispatches={sched.decode_calls}"))
+    return {
+        "arch": arch,
+        "backend": eng.scfg.backend,
+        "n_slots": n_slots,
+        "n_requests": n_requests,
+        "ticks": sched.tick,
+        "decode_dispatches": sched.decode_calls,
+        "mean_slot_occupancy": occ,
+        "mean_tpot_us": mean_tpot,
+        "per_request": per_request,
+        "work_blocks_per_slot": [int(w) for w in sched.work_blocks()],
+        "note": "wall-times are relative on CPU; occupancy, dispatch and "
+                "work-block columns are exact",
+    }
+
+
 def main(archs=("llama2-7b", "deepseek-v2-lite"), *, max_seq=256, batch=4,
          prompt_len=64, cache_lens=(16, 64, 192), iters=15,
-         out_path="BENCH_tpot.json", fusion_baseline=True):
+         out_path="BENCH_tpot.json", fusion_baseline=True,
+         ragged_trace=False):
     interpret = jax.default_backend() == "cpu"
     rows = []
     report = {
@@ -238,6 +316,15 @@ def main(archs=("llama2-7b", "deepseek-v2-lite"), *, max_seq=256, batch=4,
             entry["fusion"] = {"tpot_fused1_us": t_fused1,
                                "tpot_unfused_us": t_unfused}
         report["archs"][arch] = entry
+    if ragged_trace:
+        # the scheduler requires a dense-FFN decoder-only arch; fall back
+        # to llama2 when the benched arch isn't one (e.g. MoE deepseek)
+        trace_arch = archs[0]
+        tc = reduced(get_config(trace_arch))
+        if tc.moe is not None or tc.frontend is not None \
+                or tc.encoder is not None:
+            trace_arch = "llama2-7b"
+        report["ragged_trace"] = _bench_ragged_trace(trace_arch, rows=rows)
     if out_path:
         with open(out_path, "w") as f:
             json.dump(report, f, indent=1, sort_keys=True)
@@ -252,10 +339,13 @@ if __name__ == "__main__":
     ap.add_argument("--out", default="BENCH_tpot.json")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny single-arch sweep for CI (interpret mode)")
+    ap.add_argument("--trace", action="store_true",
+                    help="add the ragged-arrival scheduler trace section")
     args = ap.parse_args()
     if args.smoke:
         main(archs=args.archs[:1], max_seq=64, prompt_len=16,
              cache_lens=(8, 48), iters=3, out_path=args.out,
-             fusion_baseline=False)
+             fusion_baseline=False, ragged_trace=args.trace)
     else:
-        main(archs=tuple(args.archs), out_path=args.out)
+        main(archs=tuple(args.archs), out_path=args.out,
+             ragged_trace=args.trace)

@@ -1,0 +1,79 @@
+"""Continuous batching demo: requests with staggered arrivals stream
+through the slot scheduler over the ragged fused decode engine.
+
+    PYTHONPATH=src python examples/serve_requests.py --arch llama2-7b
+
+A short request retires mid-flight and its slot is re-admitted to a
+later arrival while the long requests keep decoding — no lockstep
+barrier, and free slots pay zero attend-step work (printed from the
+per-slot work counters).
+"""
+import argparse
+import os
+import time
+
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.launch.mesh import make_test_mesh
+from repro.launch.serve import build_engine_full
+from repro.serving.scheduler import Request, SlotScheduler, replay_trace
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2-7b",
+                    help="attention-only decoder configs")
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--prompt-cap", type=int, default=12)
+    ap.add_argument("--backend", default="xla",
+                    choices=("xla", "pallas", "auto"))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    mesh = make_test_mesh(data=1, model=8)
+    rng = np.random.default_rng(args.seed)
+    max_new_cap = 12
+    eng = build_engine_full(
+        cfg, mesh, max_seq=args.prompt_cap + max_new_cap + 8,
+        batch_global=args.slots, backend=args.backend,
+        interpret=(args.backend != "xla"
+                   and jax.default_backend() == "cpu"),
+        track_work=True,
+        # autotune keys on the max LIVE length, not the allocation
+        plan_seq_len=args.prompt_cap + max_new_cap)
+    sched = SlotScheduler(eng, prompt_cap=args.prompt_cap)
+
+    trace = []
+    for rid in range(args.requests):
+        arrival = int(rng.integers(0, 3)) + rid // args.slots * 2
+        plen = int(rng.integers(2, args.prompt_cap + 1))
+        n_new = int(rng.integers(2, max_new_cap + 1))
+        prompt = list(rng.integers(0, cfg.vocab_size, plen))
+        trace.append((arrival, Request(rid, prompt, n_new)))
+        print(f"req {rid}: arrive t={arrival} prompt_len={plen} "
+              f"max_new={n_new}")
+
+    t0 = time.time()
+    results = replay_trace(sched, trace)
+    dt = time.time() - t0
+    print(f"\ndrained {args.requests} requests over {sched.tick} ticks "
+          f"({sched.decode_calls} decode dispatches) in {dt:.2f}s")
+    print(f"mean slot occupancy: "
+          f"{np.mean(sched.occupancy):.2f}")
+    print(f"per-slot attend-block work: {sched.work_blocks()}")
+    for rid in sorted(results):
+        r = results[rid]
+        print(f"req {rid}: slot {r.slot} ticks "
+              f"[{r.admit_tick}, {r.finish_tick}] tokens {r.tokens}")
+
+
+if __name__ == "__main__":
+    main()

@@ -142,7 +142,12 @@ class ServePlan:
 
 def seq_bucket(seq_len: int) -> int:
     """Power-of-two sequence-length bucket (≥ 256) — plans are tuned and
-    persisted per bucket, not per exact length."""
+    persisted per bucket, not per exact length.  Ragged serving buckets
+    on the expected MAX LIVE length, not the allocated capacity
+    (``build_engine_full(plan_seq_len=…)`` — continuous batching
+    allocates slack slots whose spans never reach ``max_seq``, and
+    block_s/cluster should follow the spans the kernels actually
+    stream; DESIGN.md §6)."""
     b = 256
     while b < seq_len:
         b *= 2

@@ -145,12 +145,49 @@ def _insert_kv(cache: KVBlock, k_new: jax.Array, v_new: jax.Array,
     )
 
 
+def _insert_kv_ragged(cache: KVBlock, k_new: jax.Array, v_new: jax.Array,
+                      slot_owner: jax.Array, local_slot: jax.Array,
+                      my_rank: jax.Array, position: jax.Array) -> KVBlock:
+    """Per-slot predicated insert for ragged decode.
+
+    ``k_new``/``v_new``: [B, …] one new entry per batch slot;
+    ``slot_owner``/``local_slot``/``position``: [B].  ``cache.k``/``v``
+    carry the batch at axis 1 after a ``[S, B, -1]`` view (the GQA
+    layout folds kv-heads into that view's trailing dim), ``cache.pos``
+    is [S, B].  A slot only writes when (a) this rank owns its append
+    slot and (b) the slot is ACTIVE (``position >= 0`` — retired /
+    free scheduler slots carry ``cache_len = −1`` and must leave the
+    cache untouched, ring wrap would otherwise alias them onto a live
+    owner).
+    """
+    S = cache.k.shape[0]
+    B = position.shape[0]
+    own = (slot_owner == my_rank) & (position >= 0)
+    idx = jnp.clip(local_slot, 0, S - 1)
+    b = jnp.arange(B)
+
+    def upd(full, new):
+        f3 = full.reshape(S, B, -1)
+        n2 = new.reshape(B, -1).astype(full.dtype)
+        put = jnp.where(own[:, None], n2, f3[idx, b])
+        return f3.at[idx, b].set(put).reshape(full.shape)
+
+    new_p = jnp.where(own, position.astype(jnp.int32), cache.pos[idx, b])
+    return KVBlock(k=upd(cache.k, k_new), v=upd(cache.v, v_new),
+                   pos=cache.pos.at[idx, b].set(new_p))
+
+
 def _apply_rope(x: jax.Array, position: jax.Array, theta: float) -> jax.Array:
-    """Rotary embedding for a single position. x: [..., head_dim]."""
+    """Rotary embedding at ``position`` — a scalar (lockstep decode) or a
+    per-slot ``[B]`` vector (ragged decode; x leads with the batch dim).
+    x: [..., head_dim]."""
     hd = x.shape[-1]
     half = hd // 2
     freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
-    ang = position.astype(jnp.float32) * freqs
+    pos = jnp.asarray(position, jnp.float32)
+    ang = pos[..., None] * freqs                 # [half] or [B, half]
+    if pos.ndim:                                 # [B, 1, …, 1, half]
+        ang = ang.reshape(ang.shape[:1] + (1,) * (x.ndim - 2) + (half,))
     cos, sin = jnp.cos(ang), jnp.sin(ang)
     x1, x2 = x[..., :half], x[..., half:]
     out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
@@ -179,7 +216,9 @@ def _fit_block_s(S: int, block_s: int) -> int:
 
 class _AppendSlot(NamedTuple):
     """Where this decode step's new KV entry lands on the cluster-sharded
-    cache, plus the kernel gating derived from it."""
+    cache, plus the kernel gating derived from it.  With a per-slot
+    ``cache_lens [B]`` (ragged decode) ``owner``/``local_slot``/
+    ``include_new`` are [B] vectors; ``rank``/``pos_base`` stay scalar."""
 
     rank: jax.Array          # this rank's cluster index
     owner: jax.Array         # cluster rank owning the append slot
@@ -202,12 +241,19 @@ def _append_slot(spec: ClusterSpec, s_blk: int, cache_len,
     One definition on purpose: this formula is where the ring-wrap and
     owner-gating hardening landed, and a divergent copy is a silent
     cross-backend mismatch.
+
+    Elementwise over ``cache_len``, so a per-slot ``cache_lens [B]``
+    vector yields per-slot owners/gates.  INACTIVE slots (scheduler
+    convention: ``cache_len = −1``) never own their append slot — the
+    ring modulus would otherwise map −1 onto the last live ring slot
+    and a real rank would overwrite it.
     """
     n = spec.n_cluster
     rank = prim.axis_index(spec.cluster)
+    cache_len = jnp.asarray(cache_len, jnp.int32)
     slot = cache_len % (n * s_blk) if window > 0 else cache_len
     owner, local_slot = slot // s_blk, slot % s_blk
-    include_new = (owner == rank).astype(jnp.int32)
+    include_new = ((owner == rank) & (cache_len >= 0)).astype(jnp.int32)
     if window > 0:
         pos_base = jnp.int32(-1)
     else:
@@ -230,7 +276,9 @@ def bucketed_flash_attention(qf: jax.Array, kc: jax.Array, vc: jax.Array,
     usual flash rescale, so the result equals the single masked pass.
 
     ``qf [B,K,Q,hd]``, ``kc/vc [S,B,K,hd]`` (``vc``'s trailing dim may
-    differ — MLA latent values), ``valid [S]`` bool.  Returns
+    differ — MLA latent values), ``valid [S]`` bool — or ``[S, B]`` for
+    ragged decode (per-slot live spans; a bucket runs when ANY slot has
+    a live entry in it, and each slot sees only its own mask).  Returns
     ``(m, l, o, blocks_run)`` with the ``-1e30``-masked ``m`` convention
     of :func:`repro.core.primitives.cluster_flash_combine`;
     ``blocks_run`` counts executed buckets (proportionality evidence in
@@ -246,6 +294,11 @@ def bucketed_flash_attention(qf: jax.Array, kc: jax.Array, vc: jax.Array,
             jnp.zeros((B, K, Q, hd_v), jnp.float32),
             jnp.int32(0))
 
+    def bucket_mask(bv):
+        if bv.ndim == 2:                         # ragged: [ab, B] per-slot
+            return jnp.moveaxis(bv, 0, 1)[:, None, None, :]   # [B,1,1,ab]
+        return bv[None, None, None, :]
+
     def body(i, carry):
         start = i * ab
         bv = lax.dynamic_slice_in_dim(valid, start, ab)
@@ -257,10 +310,10 @@ def bucketed_flash_attention(qf: jax.Array, kc: jax.Array, vc: jax.Array,
             s = jnp.einsum("bkqh,sbkh->bkqs", qf, kb,
                            preferred_element_type=jnp.float32) * scale
             s = _softcap(s, softcap)
-            s = jnp.where(bv[None, None, None, :], s, -1e30)
+            s = jnp.where(bucket_mask(bv), s, -1e30)
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
-            p = jnp.where(bv[None, None, None, :], p, 0.0)
+            p = jnp.where(bucket_mask(bv), p, 0.0)
             corr = jnp.exp(m - m_new)
             l_new = l * corr + jnp.sum(p, axis=-1)
             o_new = o * corr[..., None] + jnp.einsum(
@@ -370,6 +423,13 @@ def split_token_attention(
     ``fuse_out="partial_o"`` kernel with NO per-step weight movement —
     one kernel + one fused ClusterReduce per layer — and the return is
     the FULL ``[B, D]`` output (no cluster gather needed).
+
+    **Ragged decode**: ``cache_len`` may be a per-slot ``[B]`` vector
+    (with ``cache.pos`` then ``[S_blk, B]``) — every sequence in the
+    batch advances independently (RoPE position, append slot, live-span
+    masking and the Pallas index-map clamp are all per-slot; inactive
+    slots carry ``cache_len = −1`` and do no work).  A scalar
+    ``cache_len`` with 1-D ``pos`` keeps the lockstep semantics.
     """
     if isinstance(w, PackedSplitTokenWeights):
         assert spec.backend == "pallas", \
@@ -412,14 +472,19 @@ def split_token_attention(
     # layers use a ring cache of exactly `window` slots (sharded over the
     # cluster), so the slot index wraps (shared formula: _append_slot).
     s_blk = cache.k.shape[0]
+    ragged = jnp.ndim(cache_len) == 1
     ap = _append_slot(spec, s_blk, cache_len, window=window)
     # decode convention: one new token per sequence; B folded into kv head
     # dim via vmap at the serving layer when B > 1 shares a cache.  Here the
     # cache carries B in its kv_heads axis layout: [S, B*kv_local, hd].
-    cache = _insert_kv(
-        cache,
-        k.reshape(B * kv_local, hd), v.reshape(B * kv_local, hd),
-        ap.owner, ap.local_slot, ap.rank, cache_len)
+    if ragged:
+        cache = _insert_kv_ragged(cache, k, v, ap.owner, ap.local_slot,
+                                  ap.rank, cache_len)
+    else:
+        cache = _insert_kv(
+            cache,
+            k.reshape(B * kv_local, hd), v.reshape(B * kv_local, hd),
+            ap.owner, ap.local_slot, ap.rank, cache_len)
 
     # (4) FlashDecoding partial over the local sequence block (line 4),
     # bucketed so only live blocks execute (cost ∝ cache_len, not S_blk).
@@ -513,6 +578,7 @@ def _split_token_attention_pallas(
 
     cos, sin = rope_at(cache_len, hd, rope_theta)
     s_blk = cache.k.shape[0]
+    ragged = jnp.ndim(cache_len) == 1
     ap = _append_slot(spec, s_blk, cache_len, window=window)
     blk = _fit_block_s(s_blk, spec.block_s)
     wo_unused = jnp.zeros((1, 1), x.dtype)   # O-proj runs after the combine
@@ -520,23 +586,32 @@ def _split_token_attention_pallas(
     kc = cache.k.reshape(s_blk, B, kv_local, hd)
     vc = cache.v.reshape(s_blk, B, kv_local, hd)
 
-    def one(xb, kb, vb):
+    def one(xb, kb, vb, cl, cosb, sinb, posb, inc):
         acc, k_new, v_new, m, l = fused_decode_attention(
-            xb[None], wqkv, bqkv, wo_unused, kb, vb, cache_len, cos, sin,
+            xb[None], wqkv, bqkv, wo_unused, kb, vb, cl, cosb, sinb,
             q_heads=q_local, kv_heads=kv_local, scale=scale,
             attn_softcap=attn_softcap, window=window, ring=window > 0,
             block_s=blk, fuse_out=False, interpret=spec.interpret,
-            pos=cache.pos, include_new=ap.include_new,
-            pos_base=ap.pos_base)
+            pos=posb, include_new=inc, pos_base=ap.pos_base)
         return acc[0], k_new[0], v_new[0], m[0], l[0]
 
-    acc, k_new, v_new, m, l = jax.vmap(one, in_axes=(0, 1, 1))(x, kc, vc)
+    # Ragged: the scalar-prefetch operands (cache_len, include_new, RoPE
+    # angles, pos column) are vmapped per slot — each batch element's
+    # kernel instance gets its OWN index-map clamp and live-span cull.
+    kern_axes = (0, 1, 1, 0, 0, 0, 1, 0) if ragged \
+        else (0, 1, 1, None, None, None, None, None)
+    acc, k_new, v_new, m, l = jax.vmap(one, in_axes=kern_axes)(
+        x, kc, vc, cache_len, cos, sin, cache.pos, ap.include_new)
 
     # Append the kernel-emitted new KV on the owning rank (as in the XLA
     # path; the kernel itself attended the new token via include_new).
-    cache = _insert_kv(cache, k_new.reshape(B * kv_local, hd),
-                       v_new.reshape(B * kv_local, hd),
-                       ap.owner, ap.local_slot, ap.rank, cache_len)
+    if ragged:
+        cache = _insert_kv_ragged(cache, k_new, v_new, ap.owner,
+                                  ap.local_slot, ap.rank, cache_len)
+    else:
+        cache = _insert_kv(cache, k_new.reshape(B * kv_local, hd),
+                           v_new.reshape(B * kv_local, hd),
+                           ap.owner, ap.local_slot, ap.rank, cache_len)
 
     # ClusterReduce combine + Output-Projection tile + heads reduction.
     m = m.reshape(B, kv_local, qpk)
@@ -590,27 +665,34 @@ def _split_token_attention_pallas_packed(
 
     cos, sin = rope_at(cache_len, hd, rope_theta)
     s_blk = cache.k.shape[0]
+    ragged = jnp.ndim(cache_len) == 1
     ap = _append_slot(spec, s_blk, cache_len, window=window)
     blk = _fit_block_s(s_blk, spec.block_s)
 
     kc = cache.k.reshape(s_blk, B, kv_local, hd)
     vc = cache.v.reshape(s_blk, B, kv_local, hd)
 
-    def one(xb, kb, vb):
+    def one(xb, kb, vb, cl, cosb, sinb, posb, inc):
         acc, k_new, v_new, m, l = fused_decode_attention(
-            xb[None], w.wqkv, w.bqkv, w.wo, kb, vb, cache_len, cos, sin,
+            xb[None], w.wqkv, w.bqkv, w.wo, kb, vb, cl, cosb, sinb,
             q_heads=q_local, kv_heads=kv_local, scale=scale,
             attn_softcap=attn_softcap, window=window, ring=window > 0,
             block_s=blk, fuse_out="partial_o", interpret=spec.interpret,
-            pos=cache.pos, include_new=ap.include_new,
-            pos_base=ap.pos_base)
+            pos=posb, include_new=inc, pos_base=ap.pos_base)
         return acc[0], k_new[0], v_new[0], m[0], l[0]
 
-    acc, k_new, v_new, m, l = jax.vmap(one, in_axes=(0, 1, 1))(x, kc, vc)
+    kern_axes = (0, 1, 1, 0, 0, 0, 1, 0) if ragged \
+        else (0, 1, 1, None, None, None, None, None)
+    acc, k_new, v_new, m, l = jax.vmap(one, in_axes=kern_axes)(
+        x, kc, vc, cache_len, cos, sin, cache.pos, ap.include_new)
 
-    cache = _insert_kv(cache, k_new.reshape(B * kv_local, hd),
-                       v_new.reshape(B * kv_local, hd),
-                       ap.owner, ap.local_slot, ap.rank, cache_len)
+    if ragged:
+        cache = _insert_kv_ragged(cache, k_new, v_new, ap.owner,
+                                  ap.local_slot, ap.rank, cache_len)
+    else:
+        cache = _insert_kv(cache, k_new.reshape(B * kv_local, hd),
+                           v_new.reshape(B * kv_local, hd),
+                           ap.owner, ap.local_slot, ap.rank, cache_len)
 
     # ONE fused ClusterReduce over (m, l, projected partials), then a
     # local normalize + sum over this rank's heads.
@@ -779,10 +861,12 @@ def mla_attention(
 
     # Append latent+rope entry to the owning rank's cache block.
     s_blk = cache.k.shape[0]
+    ragged = jnp.ndim(cache_len) == 1
     ap = _append_slot(spec, s_blk, cache_len)
     entry = jnp.concatenate([c_lat, c_rope], axis=-1)       # [B, l+rope]
-    cache = _insert_kv(cache, entry, entry[:, :1],           # v-side unused
-                       ap.owner, ap.local_slot, ap.rank, cache_len)
+    ins = _insert_kv_ragged if ragged else _insert_kv
+    cache = ins(cache, entry, entry[:, :1],                  # v-side unused
+                ap.owner, ap.local_slot, ap.rank, cache_len)
 
     # (7): FlashDecoding partial in latent space over the local block,
     # bucketed over live blocks only (cost ∝ cache_len — DESIGN.md §3).
@@ -854,24 +938,29 @@ def _mla_attention_pallas(
 
     cos, sin = rope_at(cache_len, rope_dim, rope_theta)
     s_blk = cache.k.shape[0]
+    ragged = jnp.ndim(cache_len) == 1
     ap = _append_slot(spec, s_blk, cache_len)       # latent cache is linear
     blk = _fit_block_s(s_blk, spec.block_s)
     wo_unused = jnp.zeros((1, 1), x.dtype)   # value-up + O-proj after combine
 
-    def one(xb, cb):
+    def one(xb, cb, cl, cosb, sinb, posb, inc):
         acc, c_new, m, l = fused_mla_decode_attention(
-            xb[None], wq2, wdkv, wuk, w.wuv, wo_unused, cb, cache_len,
-            cos, sin, q_heads=q_local, nope=nope_dim, rope_d=rope_dim,
+            xb[None], wq2, wdkv, wuk, w.wuv, wo_unused, cb, cl,
+            cosb, sinb, q_heads=q_local, nope=nope_dim, rope_d=rope_dim,
             l_rank=l_rank, v_dim=v_dim, block_s=blk, fuse_out=False,
-            interpret=spec.interpret, pos=cache.pos,
-            include_new=ap.include_new, pos_base=ap.pos_base)
+            interpret=spec.interpret, pos=posb,
+            include_new=inc, pos_base=ap.pos_base)
         return acc[0], c_new[0], m[0], l[0]
 
-    acc, c_new, m, l = jax.vmap(one, in_axes=(0, 1))(x, cache.k)
+    kern_axes = (0, 1, 0, 0, 0, 1, 0) if ragged \
+        else (0, 1, None, None, None, None, None)
+    acc, c_new, m, l = jax.vmap(one, in_axes=kern_axes)(
+        x, cache.k, cache_len, cos, sin, cache.pos, ap.include_new)
 
     # Append the kernel-emitted latent entry on the owning rank.
-    cache = _insert_kv(cache, c_new, c_new[:, :1],       # v-side unused
-                       ap.owner, ap.local_slot, ap.rank, cache_len)
+    ins = _insert_kv_ragged if ragged else _insert_kv
+    cache = ins(cache, c_new, c_new[:, :1],              # v-side unused
+                ap.owner, ap.local_slot, ap.rank, cache_len)
 
     # (8)–(13): combine, value Up-Projection partials, O-Projection tile.
     _, l_g, o_g = spec.flash_combine(m, l, acc)
@@ -915,23 +1004,28 @@ def _mla_attention_pallas_packed(
 
     cos, sin = rope_at(cache_len, rope_dim, rope_theta)
     s_blk = cache.k.shape[0]
+    ragged = jnp.ndim(cache_len) == 1
     ap = _append_slot(spec, s_blk, cache_len)       # latent cache is linear
     blk = _fit_block_s(s_blk, spec.block_s)
     wo_unused = jnp.zeros((1, 1), x.dtype)
 
-    def one(xb, cb):
+    def one(xb, cb, cl, cosb, sinb, posb, inc):
         acc, c_new, m, l = fused_mla_decode_attention(
             xb[None], w.wq, w.wdkv, w.wuk, w.wproj, wo_unused, cb,
-            cache_len, cos, sin, q_heads=q_local, nope=nope_dim,
+            cl, cosb, sinb, q_heads=q_local, nope=nope_dim,
             rope_d=rope_dim, l_rank=l_rank, v_dim=d_out, block_s=blk,
-            fuse_out="partial_o", interpret=spec.interpret, pos=cache.pos,
-            include_new=ap.include_new, pos_base=ap.pos_base)
+            fuse_out="partial_o", interpret=spec.interpret, pos=posb,
+            include_new=inc, pos_base=ap.pos_base)
         return acc[0], c_new[0], m[0], l[0]
 
-    acc, c_new, m, l = jax.vmap(one, in_axes=(0, 1))(x, cache.k)
+    kern_axes = (0, 1, 0, 0, 0, 1, 0) if ragged \
+        else (0, 1, None, None, None, None, None)
+    acc, c_new, m, l = jax.vmap(one, in_axes=kern_axes)(
+        x, cache.k, cache_len, cos, sin, cache.pos, ap.include_new)
 
-    cache = _insert_kv(cache, c_new, c_new[:, :1],       # v-side unused
-                       ap.owner, ap.local_slot, ap.rank, cache_len)
+    ins = _insert_kv_ragged if ragged else _insert_kv
+    cache = ins(cache, c_new, c_new[:, :1],              # v-side unused
+                ap.owner, ap.local_slot, ap.rank, cache_len)
 
     # ONE fused ClusterReduce over (m, l, projected tiles); normalize per
     # head and sum over this rank's heads.

@@ -24,11 +24,23 @@ Evidence target (tests/test_prepack.py): the prepacked Pallas path
 traces with ``weight_gather == weight_slice == 0`` and exactly one
 ``pallas_kernel`` + one ``tree_reduce`` on the cluster axis per
 attention layer.
+
+Besides the trace-time counters, this module hosts the RUNTIME work
+counters for ragged decode (:func:`live_attend_blocks`): a pure-jnp
+mirror of the kernels' live-block formula
+(``fused_decode._live_block_bounds`` + the per-step liveness guard)
+that the engine accumulates per slot into ``state["work_blocks"]``
+when ``ServeConfig.track_work`` is on.  Trace-time counts prove the
+*structure* of a step; these prove the *amount* of attend-step work a
+slot actually paid — the scheduler tests assert a retired slot's
+counter stops moving while its batch neighbors keep streaming.
 """
 from __future__ import annotations
 
 from collections import Counter
 from contextlib import contextmanager
+
+import jax.numpy as jnp
 
 _COUNTS: Counter = Counter()
 _ACTIVE: int = 0
@@ -38,6 +50,33 @@ def bump(name: str, n: int = 1) -> None:
     """Increment ``name`` when a :func:`counting` context is active."""
     if _ACTIVE:
         _COUNTS[name] += n
+
+
+def live_attend_blocks(cache_lens, *, s_blk: int, block_s: int, rank,
+                       window: int = 0, ring: bool = False):
+    """Per-slot attend-step (KV-block) count for one attention layer.
+
+    Mirrors the Pallas index-map clamp / ``@pl.when`` liveness and the
+    XLA path's bucket liveness, per slot: a slot whose rank-local live
+    span is empty (``cache_len ≤ pos_base``, including retired slots at
+    ``cache_len = −1``) counts ZERO blocks.  ``rank`` is this rank's
+    cluster index (traced inside shard_map); ``ring=True`` is the
+    wrapped sliding-window layout where only the fill-order upper bound
+    applies.  Returns int32 [B] (or a scalar for lockstep input).
+    """
+    cl = jnp.asarray(cache_lens, jnp.int32)
+    blk = min(block_s, s_blk)
+    n_blocks = max(1, s_blk // max(blk, 1))
+    if ring:
+        eff = cl
+    else:
+        eff = cl - jnp.asarray(rank, jnp.int32) * s_blk
+    hi = jnp.clip((eff + blk - 1) // blk - 1, 0, n_blocks - 1)
+    if window > 0 and not ring:
+        lo = jnp.clip((eff - window) // blk, 0, hi)
+    else:
+        lo = jnp.zeros_like(hi)
+    return jnp.where(eff > 0, hi - lo + 1, 0).astype(jnp.int32)
 
 
 @contextmanager

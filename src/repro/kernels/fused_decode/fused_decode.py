@@ -19,7 +19,11 @@ One ``pallas_call`` per decode layer:
   live prefix re-address the already-resident block, so the pipeline
   issues no new HBM copies for dead blocks, and the ``@pl.when`` guard
   skips their compute.  Decode cost is therefore proportional to
-  ``cache_len``, not to the allocated ``S`` (DESIGN.md §3).
+  ``cache_len``, not to the allocated ``S`` (DESIGN.md §3).  Ragged
+  batches ``vmap`` the kernel per slot with the scalar-prefetch operand
+  batched, so the clamp and the rank-local live-span cull are
+  **per-slot**: a retired slot (``cache_len ≤ 0``) runs zero attend
+  steps while its batch neighbors keep streaming (DESIGN.md §6).
 * interior blocks that are provably fully live (linear slot layout,
   no sliding window) take a mask-free fast path — no compare/select on
   the hot loop.
@@ -209,7 +213,11 @@ def _kernel(scalars_ref,                         # scalar prefetch (SMEM):
                 a2, wo3, (((2,), (1,)), ((1,), (0,))))    # [q_loc, B, d_out]
             o_ref[...] = jnp.moveaxis(po, 0, 1).astype(o_ref.dtype)
         elif fuse_out:
-            att = (acc / l_fin[..., None]).reshape(B, q_loc * hd)
+            # max guard: a fully inactive slot (empty cache, include_new
+            # gated off — ragged scheduler free slots) has l == 0; emit 0,
+            # not NaN (the partial modes defer the divide to the combine).
+            att = (acc / jnp.maximum(l_fin[..., None], 1e-30)
+                   ).reshape(B, q_loc * hd)
             wo = wo_ref[...].astype(jnp.float32)          # [q_loc*hd, D_out]
             o_ref[...] = jax.lax.dot(att, wo).astype(o_ref.dtype)
         else:

@@ -31,8 +31,10 @@ def fused_decode(x, wqkv, bqkv, wo, k_cache, v_cache, cache_len, cos, sin,
 
 
 def rope_at(position, head_dim: int, theta: float = 10000.0):
-    """cos/sin vectors for a single decode position."""
+    """cos/sin vectors for a decode position — a scalar ([half] each) or
+    a per-slot ``[B]`` vector of ragged positions ([B, half] each; vmap
+    axis 0 into the kernels)."""
     half = head_dim // 2
     freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
-    ang = jnp.asarray(position, jnp.float32) * freqs
+    ang = jnp.asarray(position, jnp.float32)[..., None] * freqs
     return jnp.cos(ang), jnp.sin(ang)

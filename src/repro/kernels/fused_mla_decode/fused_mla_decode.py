@@ -158,7 +158,8 @@ def _kernel(scalars_ref,          # [cache_len, include_new, pos_base] (SMEM)
                 (((2,), (1,)), ((1,), (0,))))                 # [q, B, d_out]
             o_ref[...] = jnp.moveaxis(po, 0, 1).astype(o_ref.dtype)
         elif fuse_out:
-            a_lat = acc / l_fin[..., None]                    # [B,q,l]
+            # max guard: an inactive slot (ragged decode) has l == 0
+            a_lat = acc / jnp.maximum(l_fin[..., None], 1e-30)  # [B,q,l]
             # value Up-Projection (A · W_UV)  → [B, q, v]
             o_head = jax.lax.dot_general(
                 a_lat, wuv_ref[...].astype(jnp.float32),

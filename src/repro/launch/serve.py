@@ -2,12 +2,20 @@
 ClusterFusion dataflow.  Reduced configs run end-to-end on CPU
 (examples/serve_decode.py); full configs use the same code path on real
 hardware.
+
+Two serving modes share the engine:
+
+* :func:`generate` — lockstep batch completion (all prompts together).
+* :mod:`repro.serving.scheduler` — continuous batching over the ragged
+  decode engine: :func:`build_engine_full` additionally jits the
+  targeted prefill-insert (``admit``) and the slot-release (``retire``)
+  steps the scheduler drives (DESIGN.md §6).
 """
 from __future__ import annotations
 
 import argparse
 import time
-from typing import Optional
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,12 +33,58 @@ from repro.serving.engine import ServeConfig, decode_step, init_decode_state
 from repro.serving.prefill import prefill
 
 
+class EngineHandle(NamedTuple):
+    """Everything a serving loop needs.  ``params`` is the
+    ``{"train", "serve"}`` layout pair; ``prefill_fn``/``decode_fn`` are
+    the classic lockstep steps; ``admit_fn``/``retire_fn`` drive
+    continuous batching (serving/scheduler.py):
+
+    * ``admit_fn(params["train"], state, tokens [B, S_cap],
+      lengths [B])`` — targeted prefill-insert: slots with
+      ``lengths[b] > 0`` get the padded prompt row ``b`` prefilled into
+      their cache at offset 0 and sample their first token; every other
+      slot's state rides through untouched.
+    * ``retire_fn(state, mask [B])`` — frees the masked slots
+      (``cache_lens ← −1``: no KV writes, zero attend work).
+    """
+    params: Any
+    prefill_fn: Callable
+    decode_fn: Callable
+    admit_fn: Callable
+    retire_fn: Callable
+    state: Any
+    lay: Any
+    scfg: ServeConfig
+    cfg: Any
+    mesh: Any
+    batch_global: int
+
+
 def build_engine(cfg, mesh, *, max_seq: int, batch_global: int,
                  fused_combine: bool = False, cluster: Optional[int] = None,
                  backend: str = "xla", interpret: bool = False,
                  block_s: Optional[int] = None, prepack="auto",
                  autotune_table: Optional[str] = None):
-    """Returns (params, jitted prefill fn, jitted decode fn, state).
+    """Returns (params, jitted prefill fn, jitted decode fn, state, lay,
+    scfg) — the classic 6-tuple; see :func:`build_engine_full` for the
+    scheduler-ready handle with the admit/retire steps."""
+    h = build_engine_full(
+        cfg, mesh, max_seq=max_seq, batch_global=batch_global,
+        fused_combine=fused_combine, cluster=cluster, backend=backend,
+        interpret=interpret, block_s=block_s, prepack=prepack,
+        autotune_table=autotune_table)
+    return h.params, h.prefill_fn, h.decode_fn, h.state, h.lay, h.scfg
+
+
+def build_engine_full(cfg, mesh, *, max_seq: int, batch_global: int,
+                      fused_combine: bool = False,
+                      cluster: Optional[int] = None,
+                      backend: str = "xla", interpret: bool = False,
+                      block_s: Optional[int] = None, prepack="auto",
+                      autotune_table: Optional[str] = None,
+                      track_work: bool = False,
+                      plan_seq_len: Optional[int] = None) -> EngineHandle:
+    """Build every jitted serving step for (cfg × mesh).
 
     ``backend``: "xla" | "pallas" | "auto" — local-stage compute for the
     decode dataflow (DESIGN.md §2).  ``interpret`` runs the Pallas kernels
@@ -43,6 +97,14 @@ def build_engine(cfg, mesh, *, max_seq: int, batch_global: int,
     the training-layout tree (prefill / checkpoints) and the decode-plan
     tree, materialized ONCE at load with ``out_shardings`` (identical to
     "train" when prepack is off).  ``generate`` routes each to its step.
+
+    ``track_work`` adds the per-slot attend-step counters
+    (``state["work_blocks"]``, core/tracecount.py) the scheduler tests
+    read.  ``plan_seq_len`` keys the autotune bucket on the EXPECTED MAX
+    LIVE length rather than the allocated ``max_seq`` — ragged serving
+    allocates slack capacity that no slot's live span ever reaches, and
+    the plan (block_s, cluster) should follow the live spans
+    (DESIGN.md §6).
     """
     ms = mesh.shape["model"]
     dp_axes = dp_axes_of(mesh)
@@ -57,13 +119,13 @@ def build_engine(cfg, mesh, *, max_seq: int, batch_global: int,
     b_shard = batch_global % dp == 0 and batch_global >= dp
     # tune with the PER-DEVICE batch — the kernel VMEM tiles and per-chip
     # byte model see b_loc, not the global batch
-    plan = tune_serving(cfg, seq_len=max_seq, batch=b_loc,
+    plan = tune_serving(cfg, seq_len=plan_seq_len or max_seq, batch=b_loc,
                         model_axis=ms, backend=backend, prepack=prepack,
                         table_path=autotune_table)
     scfg = ServeConfig(max_seq=max_seq, batch_local=b_loc,
                        backend=plan.backend, interpret=interpret,
                        block_s=block_s or plan.block_s,
-                       prepack=plan.prepack)
+                       prepack=plan.prepack, track_work=track_work)
     params_abs = jax.eval_shape(
         lambda: init_device_major(cfg, lay, jax.random.PRNGKey(0)))
     p_specs = param_specs(cfg, params_abs)
@@ -109,9 +171,10 @@ def build_engine(cfg, mesh, *, max_seq: int, batch_global: int,
 
     tok1 = P(dp_axes) if b_shard else P()
 
-    def pf_body(params, state, tokens, fe):
+    def pf_body(params, state, tokens, fe, lengths):
         st = _unwrap2(state)
-        nxt, new = prefill(ctx, cfg, scfg, params, st, tokens, fe)
+        nxt, new = prefill(ctx, cfg, scfg, params, st, tokens, fe,
+                           lengths=lengths)
         return nxt, _wrap2(new)
 
     def dec_body(params, state, tokens):
@@ -119,15 +182,29 @@ def build_engine(cfg, mesh, *, max_seq: int, batch_global: int,
         nxt, new = decode_step(ctx, cfg, scfg, params, st, tokens)
         return nxt, _wrap2(new)
 
+    def rt_body(state, mask):
+        st = dict(_unwrap2(state))
+        st["cache_lens"] = jnp.where(mask > 0, jnp.int32(-1),
+                                     st["cache_lens"])
+        return _wrap2(st)
+
     fe_spec = P(*tok1, None, None) if cfg.frontend is not None else P()
-    pf = jax.jit(shard_map(pf_body, mesh=mesh,
-                           in_specs=(p_specs, s_specs,
-                                     P(*tok1, None), fe_spec),
-                           out_specs=(tok1, s_specs), check_vma=False))
+    pf = jax.jit(shard_map(
+        lambda p, s, t, fe: pf_body(p, s, t, fe, None), mesh=mesh,
+        in_specs=(p_specs, s_specs, P(*tok1, None), fe_spec),
+        out_specs=(tok1, s_specs), check_vma=False))
+    admit = jax.jit(shard_map(
+        lambda p, s, t, ln: pf_body(p, s, t, None, ln), mesh=mesh,
+        in_specs=(p_specs, s_specs, P(*tok1, None), tok1),
+        out_specs=(tok1, s_specs), check_vma=False))
     dec = jax.jit(shard_map(dec_body, mesh=mesh,
                             in_specs=(sv_specs, s_specs, tok1),
                             out_specs=(tok1, s_specs), check_vma=False))
-    return params, pf, dec, state, lay, scfg
+    retire = jax.jit(shard_map(rt_body, mesh=mesh,
+                               in_specs=(s_specs, tok1),
+                               out_specs=s_specs, check_vma=False))
+    return EngineHandle(params, pf, dec, admit, retire, state, lay, scfg,
+                        cfg, mesh, batch_global)
 
 
 def generate(cfg, params, pf, dec, state, prompts: jnp.ndarray,

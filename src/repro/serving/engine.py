@@ -11,10 +11,12 @@ there (DESIGN.md §4) and they use their own fused steps.
 Cache layout (SplitToken): per attention layer, per device —
 ``k/v [S_blk, B_loc·kv_loc, hd]`` with the *sequence* sharded over the
 cluster sub-axis (paper's KV-sequence partition) and kv-heads over the
-heads sub-axis; ``pos [S_blk]`` stores global positions (ring semantics
-for sliding-window layers).  Batch is sharded over the data axes; all
-sequences advance in lockstep (continuous batching happens a level above,
-in the request scheduler).
+heads sub-axis; ``pos [S_blk, B_loc]`` stores PER-SLOT global positions
+(ring semantics for sliding-window layers).  Batch is sharded over the
+data axes; decode is RAGGED — ``state["cache_lens"] [B_loc]`` lets every
+sequence advance independently, and ``serving/scheduler.py`` runs
+continuous batching over the slots (admit into free slots via targeted
+prefill inserts, retire on EOS/max-len; DESIGN.md §6).
 """
 from __future__ import annotations
 
@@ -60,6 +62,12 @@ class ServeConfig:
     # serve-layout weight prepack (serving/prepack.py): params arrive
     # already packed per rank — no per-step weight gathers or slices
     prepack: bool = False
+    # ragged-decode work accounting: accumulate per-slot attend-step
+    # (KV-block) counts into state["work_blocks"] every decode step
+    # (core/tracecount.live_attend_blocks) — evidence that retired
+    # scheduler slots pay zero attention work.  Off by default (adds a
+    # [B]-int32 state leaf + a few integer ops per layer).
+    track_work: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -72,24 +80,30 @@ def _attn_cache(cfg: ModelConfig, scfg: ServeConfig, ctx: ParallelCtx,
     kv_loc = max(1, cfg.n_kv_heads // hs)
     hd = cfg.resolved_head_dim
     B = scfg.batch_local
+    # pos is PER-SLOT ([S_blk, B]): ragged decode gives every sequence
+    # its own positions (ring wrap points differ once slots decouple)
     if cfg.mla is not None:
         lr = cfg.mla.kv_lora_rank + cfg.mla.rope_head_dim
         s_blk = scfg.max_seq // n
         return df.KVBlock(k=jnp.zeros((s_blk, B, lr), dtype),
                           v=jnp.zeros((s_blk, B, 1), dtype),
-                          pos=jnp.full((s_blk,), -1, jnp.int32))
+                          pos=jnp.full((s_blk, B), -1, jnp.int32))
     span = cfg.sliding_window if kind == ATTN_LOCAL else scfg.max_seq
     span = min(span, scfg.max_seq)
     s_blk = max(1, span // n)
     return df.KVBlock(k=jnp.zeros((s_blk, B * kv_loc, hd), dtype),
                       v=jnp.zeros((s_blk, B * kv_loc, hd), dtype),
-                      pos=jnp.full((s_blk,), -1, jnp.int32))
+                      pos=jnp.full((s_blk, B), -1, jnp.int32))
 
 
 def init_decode_state(cfg: ModelConfig, scfg: ServeConfig, ctx: ParallelCtx
                       ) -> Dict[str, Any]:
     """Per-device decode state: stacked caches per pattern position +
-    recurrent states + cache_len (+ encoder KV slots for enc-dec)."""
+    recurrent states + per-slot ``cache_lens [B]`` (+ encoder KV slots
+    for enc-dec).  ``cache_lens[b]``: number of cached tokens for slot
+    ``b``; −1 marks a FREE slot (continuous-batching scheduler — no KV
+    writes, no attention work, position counter frozen).  All-zeros is
+    a fresh lockstep batch."""
     kinds = cfg.layer_kinds
     period = len(cfg.block_pattern)
     n_groups = cfg.n_layers // period
@@ -101,7 +115,9 @@ def init_decode_state(cfg: ModelConfig, scfg: ServeConfig, ctx: ParallelCtx
         items = [fn() for _ in range(n)]
         return jax.tree.map(lambda *xs: jnp.stack(xs), *items)
 
-    state: Dict[str, Any] = {"cache_len": jnp.zeros((), jnp.int32)}
+    state: Dict[str, Any] = {"cache_lens": jnp.zeros((B,), jnp.int32)}
+    if scfg.track_work:
+        state["work_blocks"] = jnp.zeros((B,), jnp.int32)
     per_pos: List[Any] = []
     for p, kind in enumerate(cfg.block_pattern):
         if kind in (ATTN_GLOBAL, ATTN_LOCAL):
@@ -348,6 +364,19 @@ def greedy_sample(ctx: ParallelCtx, logits_loc: jax.Array) -> jax.Array:
     return idx
 
 
+def _check_not_param_pair(params_dm: PyTree, want: str) -> None:
+    """PR-2 footgun guard: ``build_engine`` returns ``params`` as the
+    ``{"train", "serve"}`` layout pair — stepping with the whole pair
+    silently used to trace the wrong tree.  Fail loudly, naming the
+    fix."""
+    if isinstance(params_dm, dict) and {"train", "serve"} <= params_dm.keys():
+        raise ValueError(
+            "got the full {'train', 'serve'} param pair from build_engine; "
+            f"pass params[{want!r}] — decode_step consumes the serve "
+            "layout, prefill the training layout (see launch/serve.py "
+            "generate() and the bench_tpot.py call sites)")
+
+
 def decode_step(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
                 params_dm: PyTree, state: Dict[str, Any],
                 tokens: jax.Array) -> Tuple[jax.Array, Dict[str, Any]]:
@@ -357,7 +386,15 @@ def decode_step(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
     head, sampling) is one computation — the TPU analogue of the paper's
     single-CUDA-graph decode step, with kernel-launch overhead replaced by
     a single XLA dispatch.
+
+    Decode is RAGGED: ``state["cache_lens"]`` is a per-slot [B] vector,
+    so every sequence advances independently (per-slot RoPE position,
+    append slot, live-span cull — DESIGN.md §6).  Slots at −1 are FREE
+    (continuous batching): they write no KV, run zero attend steps, and
+    their position counter stays frozen; their sampled token is
+    meaningless and ignored by the scheduler.
     """
+    _check_not_param_pair(params_dm, "serve")
     params = unwrap_local(params_dm)
     # Step-invariant rank slicing of attention weights happens HERE, once
     # per step, not per layer-group iteration (no-op when the params are
@@ -366,7 +403,20 @@ def decode_step(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
     kinds = cfg.layer_kinds
     period = len(cfg.block_pattern)
     n_groups = cfg.n_layers // period
-    cache_len = state["cache_len"]
+    cache_len = state["cache_lens"]
+
+    def _blk_work(kind: str, cache_i) -> jax.Array:
+        """Per-slot attend-step count for one attention layer (runtime
+        work counters — core/tracecount.py)."""
+        if not scfg.track_work or kind not in (ATTN_GLOBAL, ATTN_LOCAL):
+            return jnp.zeros_like(cache_len)
+        window = cfg.sliding_window if (kind == ATTN_LOCAL
+                                        and cfg.mla is None) else 0
+        s_blk = cache_i.k.shape[0]
+        return tracecount.live_attend_blocks(
+            cache_len, s_blk=s_blk,
+            block_s=df._fit_block_s(s_blk, scfg.block_s),
+            rank=ctx.cluster_index(), window=window, ring=window > 0)
 
     x = embed_lookup(ctx, EmbedParams(params["embed"]), tokens)
     if cfg.tie_embeddings:
@@ -380,9 +430,10 @@ def decode_step(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
     # dead after the write), instead of staging a full per-layer copy
     # through scan ys (§Perf iter 3: ~3× decode HBM-byte reduction).
     n_groups_t = jnp.arange(max(n_groups, 1))
+    work0 = jnp.zeros_like(cache_len)
 
     def group_body(carry, inp):
-        x, caches = carry
+        x, caches, work = carry
         if cfg.encoder is not None:
             blks, gi, ca, ek, ev = inp
         else:
@@ -397,33 +448,41 @@ def decode_step(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
                 blk = dict(blk)
                 blk["cross"] = ca
                 enc = (ek, ev)
+            work = work + _blk_work(kinds[p_i], cache_i)
             x, nc = decode_block(ctx, cfg, kinds[p_i], blk, x,
                                  cache_i, cache_len, scfg, enc)
             new_caches.append(jax.tree.map(
                 lambda full, upd: lax.dynamic_update_index_in_dim(
                     full, upd.astype(full.dtype), gi, axis=0),
                 caches[p_i], nc))
-        return (x, tuple(new_caches)), None
+        return (x, tuple(new_caches), work), None
 
     xs = ((tuple(params["blocks"]), n_groups_t, params["cross_attn"],
            enc_kv_all["k"], enc_kv_all["v"]) if cfg.encoder is not None
           else (tuple(params["blocks"]), n_groups_t))
-    (x, new_caches), _ = lax.scan(
-        group_body, (x, tuple(state["layers"])), xs)
+    (x, new_caches, work), _ = lax.scan(
+        group_body, (x, tuple(state["layers"]), work0), xs)
 
     new_state = dict(state)
     new_state["layers"] = list(new_caches)
     new_tail = []
     for t_i, blk in enumerate(params["tail"]):
-        x, nc = decode_block(ctx, cfg, kinds[n_groups * period + t_i], blk,
+        kind_t = kinds[n_groups * period + t_i]
+        work = work + _blk_work(kind_t, state["tail"][t_i])
+        x, nc = decode_block(ctx, cfg, kind_t, blk,
                              x, state["tail"][t_i], cache_len, scfg)
         new_tail.append(nc)
     new_state["tail"] = new_tail
+    if scfg.track_work:
+        new_state["work_blocks"] = state["work_blocks"] + work
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
     logits = lm_head_logits(ctx, table, x)
     if cfg.logit_softcap:
         logits = softcap(logits, cfg.logit_softcap)
     nxt = greedy_sample(ctx, logits)
-    new_state["cache_len"] = cache_len + 1
+    # only ACTIVE slots advance; free slots (−1) stay frozen until the
+    # scheduler re-admits them via a prefill insert
+    new_state["cache_lens"] = jnp.where(cache_len >= 0, cache_len + 1,
+                                        cache_len)
     return nxt, new_state

@@ -2,6 +2,15 @@
 KV (or recurrent states), and scatter them into the decode cache layout
 (sequence blocks over the cluster sub-axis, ring layout for sliding-window
 layers).  Returns the first generated token.
+
+Supports per-slot ``lengths`` for the continuous-batching scheduler
+(serving/scheduler.py): tokens arrive padded to one capacity, each slot
+declares its true prompt length, and ``lengths[b] == 0`` means "do NOT
+touch slot b" — its caches, recurrent state and cache_len ride through
+unchanged.  That makes prefill a targeted *insert*: admitting requests
+into free slots of a live decode state while the other slots' sequences
+keep their KV (causal masking guarantees the padded tail never leaks
+into positions < length).
 """
 from __future__ import annotations
 
@@ -24,48 +33,85 @@ from repro.models.layers import (EmbedParams, embed_lookup, ffn_apply,
 from repro.models.moe import MoEParams, moe_apply
 from repro.models.transformer import (apply_block, cross_attention, encode,
                                       unwrap_local)
-from repro.serving.engine import ServeConfig, greedy_sample
+from repro.serving.engine import (ServeConfig, _check_not_param_pair,
+                                  greedy_sample)
 
 PyTree = Any
 
 
-def _fill_global(cache: df.KVBlock, kv: jax.Array, c_rank, s_prompt: int
-                 ) -> df.KVBlock:
-    """kv: [S, rows, hd] full-sequence values → this rank's seq block."""
-    s_blk = cache.k.shape[0]
-    idx = c_rank * s_blk + jnp.arange(s_blk)
-    valid = idx < s_prompt
-    take = jnp.clip(idx, 0, s_prompt - 1)
-    pos = jnp.where(valid, idx, -1).astype(jnp.int32)
+def _merge_admitted(cache: df.KVBlock, k_new, v_new, pos_new,
+                    adm: jax.Array) -> df.KVBlock:
+    """Keep non-admitted slots' cache untouched (targeted insert).
+
+    ``k_new``/``v_new``: [s_blk, B, R] flat per-slot rows; ``pos_new``
+    [s_blk, B]; ``adm`` [B] bool."""
+    s_blk, B = pos_new.shape
+    old_k = cache.k.reshape(s_blk, B, -1)
+    old_v = cache.v.reshape(s_blk, B, -1)
+    m = adm[None, :, None]
     return df.KVBlock(
-        k=jnp.where(valid[:, None, None], kv[0][take], 0).astype(cache.k.dtype),
-        v=jnp.where(valid[:, None, None], kv[1][take], 0).astype(cache.v.dtype),
-        pos=pos)
+        k=jnp.where(m, k_new, old_k).reshape(cache.k.shape)
+        .astype(cache.k.dtype),
+        v=jnp.where(m, v_new, old_v).reshape(cache.v.shape)
+        .astype(cache.v.dtype),
+        pos=jnp.where(adm[None, :], pos_new, cache.pos).astype(jnp.int32))
 
 
-def _fill_ring(cache: df.KVBlock, kv: jax.Array, c_rank, s_prompt: int,
-               window: int) -> df.KVBlock:
-    """Sliding-window ring: slot s holds the largest p < s_prompt with
-    p ≡ s (mod window)."""
+def _fill_global(cache: df.KVBlock, kv: jax.Array, c_rank,
+                 lens: jax.Array) -> df.KVBlock:
+    """kv: [S, rows, hd] full-sequence values → this rank's seq block,
+    per slot: slot b keeps positions < lens[b] (lens [B]; 0 ⇒ slot
+    untouched)."""
     s_blk = cache.k.shape[0]
-    base = c_rank * s_blk + jnp.arange(s_blk)          # global slot index
-    have = base < s_prompt
-    kwrap = jnp.maximum(s_prompt - 1 - base, 0) // window
-    p = base + kwrap * window
-    take = jnp.clip(p, 0, s_prompt - 1)
+    B = lens.shape[0]
+    idx = c_rank * s_blk + jnp.arange(s_blk)            # [s_blk]
+    valid = idx[:, None] < lens[None, :]                # [s_blk, B]
+    take = jnp.clip(idx, 0, kv[0].shape[0] - 1)
+    k3 = kv[0].reshape(kv[0].shape[0], B, -1)[take]     # [s_blk, B, R]
+    v3 = kv[1].reshape(kv[1].shape[0], B, -1)[take]
+    pos = jnp.where(valid, idx[:, None], -1).astype(jnp.int32)
+    return _merge_admitted(cache, jnp.where(valid[:, :, None], k3, 0),
+                           jnp.where(valid[:, :, None], v3, 0), pos,
+                           lens > 0)
+
+
+def _fill_ring(cache: df.KVBlock, kv: jax.Array, c_rank,
+               lens: jax.Array, window: int) -> df.KVBlock:
+    """Sliding-window ring, per slot: ring slot s of batch slot b holds
+    the largest p < lens[b] with p ≡ s (mod window)."""
+    s_blk = cache.k.shape[0]
+    B = lens.shape[0]
+    base = c_rank * s_blk + jnp.arange(s_blk)           # global ring slot
+    have = base[:, None] < lens[None, :]                # [s_blk, B]
+    kwrap = jnp.maximum(lens[None, :] - 1 - base[:, None], 0) // window
+    p = base[:, None] + kwrap * window                  # [s_blk, B]
+    take = jnp.clip(p, 0, kv[0].shape[0] - 1)
+    b_ix = jnp.arange(B)[None, :]
+    k3 = kv[0].reshape(kv[0].shape[0], B, -1)[take, b_ix]  # [s_blk, B, R]
+    v3 = kv[1].reshape(kv[1].shape[0], B, -1)[take, b_ix]
     pos = jnp.where(have, p, -1).astype(jnp.int32)
-    return df.KVBlock(
-        k=jnp.where(have[:, None, None], kv[0][take], 0).astype(cache.k.dtype),
-        v=jnp.where(have[:, None, None], kv[1][take], 0).astype(cache.v.dtype),
-        pos=pos)
+    return _merge_admitted(cache, jnp.where(have[:, :, None], k3, 0),
+                           jnp.where(have[:, :, None], v3, 0), pos,
+                           lens > 0)
+
+
+def _merge_state(new_st, old_st, adm: jax.Array):
+    """Per-slot merge of recurrent-state trees (batch at axis 0)."""
+    def mb(n, o):
+        m = adm.reshape((adm.shape[0],) + (1,) * (n.ndim - 1))
+        return jnp.where(m, n.astype(o.dtype), o)
+    return jax.tree.map(mb, new_st, old_st)
 
 
 def _prefill_block(ctx: ParallelCtx, cfg: ModelConfig, kind: str,
                    blk: Dict[str, Any], x: jax.Array, cache, c_rank,
-                   scfg: ServeConfig, enc_out=None, cross_blk=None):
-    """Prefill one layer; returns (x, decode-ready cache)."""
+                   scfg: ServeConfig, lens: jax.Array,
+                   enc_out=None, cross_blk=None):
+    """Prefill one layer; returns (x, decode-ready cache).  ``lens [B]``
+    is each slot's true prompt length (0 ⇒ keep the slot's cache)."""
     B, S, D = x.shape
     eps = cfg.norm_eps
+    adm = lens > 0
     if kind == RWKV6:
         p = blk["rwkv"]
         h1 = rms_norm(x, blk["ln1"], eps)
@@ -76,7 +122,7 @@ def _prefill_block(ctx: ParallelCtx, cfg: ModelConfig, kind: str,
         x = x + c
         st = cache._replace(s=s_fin.astype(cache.s.dtype),
                             x_prev_t=h1[:, -1], x_prev_c=h2[:, -1])
-        return x, st
+        return x, _merge_state(st, cache, adm)
     if kind == RECURRENT:
         p = blk["rglru"]
         h1 = rms_norm(x, blk["ln1"], eps)
@@ -93,34 +139,46 @@ def _prefill_block(ctx: ParallelCtx, cfg: ModelConfig, kind: str,
         f = (moe_apply(ctx, blk["ffn"], h2, cfg.ffn_act, cfg.moe)
              if isinstance(blk["ffn"], MoEParams)
              else ffn_apply(ctx, blk["ffn"], h2, cfg.ffn_act))
-        return x + f, st
+        return x + f, _merge_state(st, cache, adm)
     # attention layers: reuse the train block with KV collection
     x, kv = apply_block(ctx, cfg, kind, blk, x, return_kv=True,
                         enc_kv=enc_out, cross_blk=cross_blk)
     if cfg.mla is not None:
         c_seq = kv                                   # [B, S, l+rope]
         ckv = jnp.moveaxis(c_seq, 1, 0)              # [S, B, l+rope]
-        newc = _fill_global(cache, (ckv, ckv[..., :1]), c_rank, S)
+        newc = _fill_global(cache, (ckv, ckv[..., :1]), c_rank, lens)
         return x, newc
     k, v = kv                                        # [B, S, kv_loc, hd]
     rows = k.shape[0] * k.shape[2]
     ks = jnp.moveaxis(k, 1, 0).reshape(S, rows, k.shape[3])
     vs = jnp.moveaxis(v, 1, 0).reshape(S, rows, v.shape[3])
     if kind == ATTN_LOCAL:
-        newc = _fill_ring(cache, (ks, vs), c_rank, S, cfg.sliding_window)
+        newc = _fill_ring(cache, (ks, vs), c_rank, lens,
+                          cfg.sliding_window)
     else:
-        newc = _fill_global(cache, (ks, vs), c_rank, S)
+        newc = _fill_global(cache, (ks, vs), c_rank, lens)
     return x, newc
 
 
 def prefill(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
             params_dm: PyTree, state: Dict[str, Any], tokens: jax.Array,
-            frontend_embeds: Optional[jax.Array] = None, fsdp=None
+            frontend_embeds: Optional[jax.Array] = None, fsdp=None,
+            lengths: Optional[jax.Array] = None
             ) -> Tuple[jax.Array, Dict[str, Any]]:
     """tokens [B_loc, S_prompt] → (first generated token [B_loc], state).
 
     ``fsdp=(ax_tree, dp_axes)``: params arrive dp-sliced; non-stacked
-    leaves gather here, scanned groups gather per group in the scan."""
+    leaves gather here, scanned groups gather per group in the scan.
+
+    ``lengths [B_loc]``: per-slot true prompt lengths for the targeted
+    prefill-INSERT (continuous batching).  Slots with length 0 keep
+    their existing caches, recurrent state and cache_len; admitted
+    slots sample their first token from position ``length − 1``.
+    Default (None) = every slot uses the full ``S_prompt``.  Partial
+    admission is attention-only: recurrent (RG-LRU / RWKV-6) scans and
+    encoder K/V would fold the padded tail into their final state.
+    """
+    _check_not_param_pair(params_dm, "train")
     params = unwrap_local(params_dm)
     if fsdp is not None:
         from repro.models.transformer import fsdp_gather, fsdp_gather_top
@@ -130,6 +188,14 @@ def prefill(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
     n_groups = cfg.n_layers // period
     B, S = tokens.shape
     c_rank = ctx.cluster_index()
+    partial = lengths is not None
+    if partial:
+        lengths = jnp.asarray(lengths, jnp.int32)
+        assert cfg.encoder is None and not any(
+            k in (RECURRENT, RWKV6) for k in kinds), \
+            "per-slot prefill insert supports attention-only models"
+    else:
+        lengths = jnp.full((B,), S, jnp.int32)
 
     x = embed_lookup(ctx, EmbedParams(params["embed"]), tokens)
     if cfg.tie_embeddings:
@@ -175,7 +241,7 @@ def prefill(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
         new_caches = []
         for p_i in range(period):
             x, nc = _prefill_block(ctx, cfg, kinds[p_i], blks[p_i], x,
-                                   caches[p_i], c_rank, scfg,
+                                   caches[p_i], c_rank, scfg, lengths,
                                    enc_out=enc_out, cross_blk=ca_l)
             new_caches.append(nc)
         return x, tuple(new_caches)
@@ -188,16 +254,23 @@ def prefill(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
     new_tail = []
     for t_i, blk in enumerate(params["tail"]):
         x, nc = _prefill_block(ctx, cfg, kinds[n_groups * period + t_i],
-                               blk, x, state["tail"][t_i], c_rank, scfg)
+                               blk, x, state["tail"][t_i], c_rank, scfg,
+                               lengths)
         new_tail.append(nc)
     new_state["tail"] = new_tail
 
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    last = x[:, -1]
+    # each slot samples from its own last REAL position (length − 1)
+    last = x[jnp.arange(B), jnp.clip(lengths, 1, S) - 1]
     table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
     logits = lm_head_logits(ctx, table, last)
     if cfg.logit_softcap:
         logits = softcap(logits, cfg.logit_softcap)
     nxt = greedy_sample(ctx, logits)
-    new_state["cache_len"] = jnp.asarray(S, jnp.int32)
+    adm = lengths > 0
+    new_state["cache_lens"] = jnp.where(adm, lengths,
+                                        state["cache_lens"])
+    if "work_blocks" in state:       # admitted slots start a fresh count
+        new_state["work_blocks"] = jnp.where(
+            adm, 0, state["work_blocks"]).astype(jnp.int32)
     return nxt, new_state

@@ -1,0 +1,222 @@
+"""Slot-based continuous batching over the ragged decode engine.
+
+The decode step is RAGGED (per-slot ``cache_lens`` — serving/engine.py,
+DESIGN.md §6), so the batch no longer advances in lockstep: this module
+runs the request-level loop on top of it.  The engine's ``B`` batch rows
+become **slots** with a lifecycle::
+
+    FREE (cache_lens = −1)
+      └─ admit ──▶ ACTIVE   targeted prefill-insert at the slot's offset
+                            (EngineHandle.admit_fn; one jitted call admits
+                            every request picked this tick, and emits each
+                            request's FIRST token)
+    ACTIVE ── decode ──▶    one ragged decode step per tick advances ALL
+                            active slots (per-slot RoPE position, append
+                            slot, live-span cull; free slots do zero
+                            attend-step work — state["work_blocks"])
+      └─ retire ──▶ FREE    on EOS or max_new (EngineHandle.retire_fn);
+                            the slot is immediately re-admittable
+
+Scheduling policy (deterministic, mirrored by the pure-Python reference
+simulator in tests/test_scheduler.py): arrivals enqueue FIFO; each tick
+admits queue-head requests into the lowest-numbered free slots, retires
+any one-token requests, runs one decode step for the active slots, then
+retires finished ones.
+
+The driver is host-side Python issuing three jitted programs (admit /
+decode / retire) — the decode hot loop itself stays ONE fused dispatch
+per token, exactly the paper's fusion story; continuous batching only
+changes which slots carry live work.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.launch.serve import EngineHandle
+
+
+@dataclass
+class Request:
+    """One generation request.  ``prompt``: token ids (≤ the scheduler's
+    ``prompt_cap``); ``max_new``: tokens to generate (counting the one
+    sampled by the prefill insert)."""
+    rid: int
+    prompt: Sequence[int]
+    max_new: int
+
+
+@dataclass
+class _Slot:
+    rid: Optional[int] = None
+    remaining: int = 0          # tokens still to emit
+    last_tok: int = 0
+
+    @property
+    def free(self) -> bool:
+        return self.rid is None
+
+
+@dataclass
+class RequestResult:
+    rid: int
+    tokens: List[int] = field(default_factory=list)
+    slot: int = -1
+    admit_tick: int = -1
+    finish_tick: int = -1
+
+
+class SlotScheduler:
+    """Continuous-batching driver over an :class:`EngineHandle`.
+
+    Build the engine with ``build_engine_full(..., track_work=True)`` to
+    get the per-slot attend-step counters the tests assert on.  Requires
+    an attention-only decoder (the targeted prefill-insert pads prompts
+    to ``prompt_cap`` — recurrent scans would fold the padding into
+    their state) and the batch replicated over the data axes.
+    """
+
+    def __init__(self, engine: EngineHandle, *, prompt_cap: int,
+                 eos_id: Optional[int] = None):
+        cfg = engine.cfg
+        assert cfg.frontend is None and cfg.encoder is None, \
+            "SlotScheduler supports decoder-only text models"
+        # capacity-based MoE dispatch couples batch rows (experts drop by
+        # PER-BATCH capacity), so a request's tokens would depend on its
+        # slot neighbors — breaking the slot-independence contract the
+        # scheduler (and its tests) guarantee
+        assert cfg.moe is None, \
+            "SlotScheduler requires dense-FFN models: MoE capacity " \
+            "routing makes tokens depend on co-resident slots"
+        assert engine.scfg.batch_local == engine.batch_global, \
+            "SlotScheduler needs the batch replicated over data axes"
+        self.eng = engine
+        self.prompt_cap = int(prompt_cap)
+        self.eos_id = eos_id
+        self.n_slots = engine.batch_global
+        self.slots = [_Slot() for _ in range(self.n_slots)]
+        self.queue: List[Request] = []
+        self.results: Dict[int, RequestResult] = {}
+        self.events: List[Tuple[int, str, int, int]] = []   # (tick, kind,
+        self.occupancy: List[float] = []                    #  rid, slot)
+        self.tick = 0
+        self.decode_calls = 0
+        # all slots start FREE (cache_lens = −1)
+        self.state = engine.retire_fn(engine.state,
+                                      np.ones((self.n_slots,), np.int32))
+
+    # -- host views of the device state ----------------------------------
+    def cache_lens(self) -> np.ndarray:
+        """Per-slot cache lengths (−1 = free); identical across shards."""
+        leaf = np.asarray(jax.device_get(self.state["cache_lens"]))
+        return leaf.reshape(-1, self.n_slots)[0]
+
+    def work_blocks(self) -> np.ndarray:
+        """Per-slot attend-step counters, summed over the (dp, model)
+        device grid — each cluster rank counts its own rank-local blocks
+        (core/tracecount.live_attend_blocks)."""
+        if "work_blocks" not in self.state:
+            raise ValueError("build the engine with track_work=True")
+        leaf = np.asarray(jax.device_get(self.state["work_blocks"]))
+        return leaf.reshape(-1, self.n_slots).sum(axis=0)
+
+    # -- request intake ---------------------------------------------------
+    def submit(self, req: Request) -> None:
+        # length 0 means "slot untouched" to the prefill insert, so an
+        # empty prompt would desync host bookkeeping from device state
+        assert 1 <= len(req.prompt) <= self.prompt_cap, \
+            (len(req.prompt), self.prompt_cap)
+        assert req.max_new >= 1 and req.rid not in self.results
+        self.queue.append(req)
+        self.results[req.rid] = RequestResult(rid=req.rid)
+
+    # -- lifecycle pieces -------------------------------------------------
+    def _admit(self) -> None:
+        free = [i for i, s in enumerate(self.slots) if s.free]
+        admitted: List[Tuple[int, Request]] = []
+        while self.queue and free:
+            admitted.append((free.pop(0), self.queue.pop(0)))
+        if not admitted:
+            return
+        toks = np.zeros((self.n_slots, self.prompt_cap), np.int32)
+        lens = np.zeros((self.n_slots,), np.int32)
+        for b, req in admitted:
+            toks[b, :len(req.prompt)] = np.asarray(req.prompt, np.int32)
+            lens[b] = len(req.prompt)
+        first, self.state = self.eng.admit_fn(
+            self.eng.params["train"], self.state, toks, lens)
+        first = np.asarray(jax.device_get(first)).reshape(-1)
+        for b, req in admitted:
+            self.slots[b] = _Slot(rid=req.rid, remaining=req.max_new)
+            res = self.results[req.rid]
+            res.slot, res.admit_tick = b, self.tick
+            self.events.append((self.tick, "admit", req.rid, b))
+            self._emit(b, int(first[b]))
+
+    def _emit(self, b: int, tok: int) -> None:
+        s = self.slots[b]
+        s.last_tok = tok
+        s.remaining -= 1
+        self.results[s.rid].tokens.append(tok)
+
+    def _retire_finished(self) -> None:
+        fin = [b for b, s in enumerate(self.slots) if not s.free
+               and (s.remaining <= 0
+                    or (self.eos_id is not None
+                        and s.last_tok == self.eos_id))]
+        if not fin:
+            return
+        mask = np.zeros((self.n_slots,), np.int32)
+        for b in fin:
+            mask[b] = 1
+            rid = self.slots[b].rid
+            self.results[rid].finish_tick = self.tick
+            self.events.append((self.tick, "finish", rid, b))
+            self.slots[b] = _Slot()
+        self.state = self.eng.retire_fn(self.state, mask)
+
+    # -- one scheduler tick ----------------------------------------------
+    def step(self) -> None:
+        self._admit()
+        self._retire_finished()          # one-token / instant-EOS admits
+        active = [b for b, s in enumerate(self.slots) if not s.free]
+        if active:
+            tok_in = np.asarray([s.last_tok for s in self.slots], np.int32)
+            nxt, self.state = self.eng.decode_fn(
+                self.eng.params["serve"], self.state, tok_in)
+            self.decode_calls += 1
+            nxt = np.asarray(jax.device_get(nxt)).reshape(-1)
+            for b in active:
+                self._emit(b, int(nxt[b]))
+            self._retire_finished()
+        self.occupancy.append(len(active) / self.n_slots)
+        self.tick += 1
+
+    def idle(self) -> bool:
+        return not self.queue and all(s.free for s in self.slots)
+
+    def run(self, max_ticks: int = 10_000) -> Dict[int, RequestResult]:
+        while not self.idle() and self.tick < max_ticks:
+            self.step()
+        assert self.idle(), f"scheduler did not drain in {max_ticks} ticks"
+        return self.results
+
+
+def replay_trace(sched: SlotScheduler,
+                 trace: Sequence[Tuple[int, Request]],
+                 max_ticks: int = 10_000) -> Dict[int, RequestResult]:
+    """Drive ``sched`` from an arrival trace: ``(arrival_tick, Request)``
+    pairs.  Requests join the queue at the START of their arrival tick;
+    the scheduler then runs until drained."""
+    pending = sorted(trace, key=lambda ar: ar[0])
+    i = 0
+    while (i < len(pending) or not sched.idle()) and sched.tick < max_ticks:
+        while i < len(pending) and pending[i][0] <= sched.tick:
+            sched.submit(pending[i][1])
+            i += 1
+        sched.step()
+    assert sched.idle(), "trace did not drain"
+    return sched.results

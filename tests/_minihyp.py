@@ -1,0 +1,98 @@
+"""Deterministic fallback for the hypothesis API subset our property
+tests use — so ``test_properties.py`` RUNS in tier-1 even when the
+container lacks hypothesis (it is in requirements-dev.txt; CI installs
+the real thing and gets shrinking + the registered "ci" profile from
+conftest.py).
+
+Semantics: ``@given`` draws ``max_examples`` example tuples from a
+PRNG seeded by the test name (stable across runs and machines — a
+failure reproduces by just re-running the test) and calls the test
+once per tuple.  No shrinking, no database; strategies implement only
+what the suite draws: integers, floats, sampled_from, lists, composite.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example_from(self, rng):
+        return self._sample(rng)
+
+    def map(self, f):
+        return _Strategy(lambda rng: f(self._sample(rng)))
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value, **_):
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+    @staticmethod
+    def lists(elem, min_size=0, max_size=10):
+        def sample(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elem.example_from(rng) for _ in range(n)]
+        return _Strategy(sample)
+
+    @staticmethod
+    def composite(fn):
+        def build(*args, **kw):
+            def sample(rng):
+                return fn(lambda s: s.example_from(rng), *args, **kw)
+            return _Strategy(sample)
+        return build
+
+
+# expose the usual alias
+st = strategies
+
+
+def settings(max_examples=20, deadline=None, **_):
+    def deco(fn):
+        fn._minihyp_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats, **kw_strats):
+    assert not kw_strats, "minihyp supports positional strategies only"
+
+    def deco(fn):
+        n = getattr(fn, "_minihyp_max_examples", 20)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__name__.encode()) & 0x7FFFFFFF)
+            for _ in range(n):
+                drawn = tuple(s.example_from(rng) for s in strats)
+                fn(*args, *drawn, **kwargs)
+
+        # pytest must not see the drawn parameters as fixtures
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco

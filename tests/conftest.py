@@ -1,0 +1,22 @@
+"""Shared test config: the hypothesis CI profile.
+
+The "ci" profile pins property runs deterministic — derandomized (fixed
+seed), no deadline (CPU-emulated runs have wild per-example variance),
+no local example database (stateless runners).  CI selects it via
+``HYPOTHESIS_PROFILE=ci`` (.github/workflows/ci.yml); locally the
+default profile keeps random exploration.  When hypothesis is absent
+entirely, test_properties.py falls back to the deterministic shim in
+``tests/_minihyp.py`` and this registration is a no-op.
+"""
+import os
+
+try:
+    import hypothesis
+
+    hypothesis.settings.register_profile(
+        "ci", derandomize=True, deadline=None, database=None,
+        max_examples=50)
+    if os.environ.get("HYPOTHESIS_PROFILE"):
+        hypothesis.settings.load_profile(os.environ["HYPOTHESIS_PROFILE"])
+except ImportError:
+    pass

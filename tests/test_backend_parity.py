@@ -7,6 +7,8 @@ import pytest
 
 from helpers import run_multidevice
 
+pytestmark = pytest.mark.multidevice
+
 
 def test_split_token_backend_parity_gqa_window():
     # heads 2 × cluster 4 over an 8-device axis; 6 sequential decode steps

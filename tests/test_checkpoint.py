@@ -58,6 +58,7 @@ def test_elastic_restore_dp_change(tmp_path):
                                np.arange(16.0).reshape(4, 4))
 
 
+@pytest.mark.multidevice
 def test_train_driver_resume(tmp_path):
     """End-to-end: train 10 steps w/ checkpoints, kill, resume — the loss
     stream continues from the same data position (exact resume)."""

@@ -5,6 +5,8 @@ import pytest
 
 from helpers import run_multidevice
 
+pytestmark = pytest.mark.multidevice
+
 SHARDED_BODY = """
 from repro.configs import get_config, reduced
 from repro.models import (forward, init_logical, layout_for, loss_fn,

@@ -123,6 +123,7 @@ def test_prepack_mla_fold_matches_manual():
 # ---------------------------------------------------------------------------
 # Trace-time op counts: zero weight movement, one kernel + one ClusterReduce
 # ---------------------------------------------------------------------------
+@pytest.mark.multidevice
 def test_counters_dataflow_packed_vs_adapter():
     run_multidevice("""
     from repro.core import dataflow as df
@@ -200,6 +201,7 @@ def test_counters_dataflow_packed_vs_adapter():
     """)
 
 
+@pytest.mark.multidevice
 def test_counters_engine_zero_weight_movement():
     """End-to-end decode step (gemma2 GQA ring + softcap, forced
     cluster 2): the prepacked engine traces with zero weight gathers and

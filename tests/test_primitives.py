@@ -23,6 +23,7 @@ def test_traffic_gather_matches_message_doubling():
         assert prim.traffic_gather(3, n) == 3 * per_rank * n
 
 
+@pytest.mark.multidevice
 def test_cluster_reduce_and_gather_vs_xla():
     run_multidevice("""
     from repro.core import primitives as prim
@@ -67,6 +68,7 @@ def test_cluster_reduce_and_gather_vs_xla():
     """)
 
 
+@pytest.mark.multidevice
 def test_flash_combine_fused_vs_faithful_vs_oracle():
     run_multidevice("""
     from repro.core import primitives as prim
@@ -99,6 +101,7 @@ def test_flash_combine_fused_vs_faithful_vs_oracle():
     """)
 
 
+@pytest.mark.multidevice
 def test_offchip_vs_onchip_reduce_equivalence():
     run_multidevice("""
     from repro.core import primitives as prim

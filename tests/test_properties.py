@@ -1,18 +1,20 @@
-"""Hypothesis property tests on the system's invariants.
+"""Property tests on the system's invariants.
 
-Marked ``slow``: CI's tier-1 job deselects them (``-m "not slow"``) so
-the fast suite stays fast; run them explicitly with ``-m slow`` (they
-also skip gracefully when hypothesis is absent).
+Part of tier-1 (no skip): with hypothesis installed (requirements-dev
+— the CI env) these shrink and explore; without it they run through
+the deterministic fallback shim in ``tests/_minihyp.py`` (fixed seed,
+same API subset).  CI pins determinism either way via the registered
+"ci" profile (conftest.py, ``HYPOTHESIS_PROFILE=ci``).
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytestmark = pytest.mark.slow
-
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # tier-1 container: deterministic shim
+    from _minihyp import given, settings, strategies as st
 
 from repro.core.primitives import flash_merge, traffic_gather, traffic_reduce
 from repro.core.dataflow import (traffic_split_head, traffic_split_token)
@@ -138,6 +140,56 @@ def test_moe_capacity_positions_are_unique_and_fifo(T, k, e_exp):
         idxs = np.nonzero(flat_e == e)[0]
         # FIFO: earlier slot ⇒ smaller position
         assert (np.diff(pos[idxs]) > 0).all()
+
+
+@given(st.lists(st.integers(0, 15), min_size=3, max_size=3))
+@settings(max_examples=6, deadline=None)
+def test_ragged_cache_lens_lockstep_equivalence(lens):
+    """Ragged decode property (shrinkable): a batch of per-slot
+    ``cache_lens`` through the vmapped fused kernel equals (a) the
+    per-sequence scalar oracle slot by slot, and (b) when all lens are
+    equal, ONE lockstep batched kernel call — the ragged path is a
+    strict generalization of lockstep decode."""
+    from repro.kernels.fused_decode.ops import fused_decode, rope_at
+    B, D, S, q_loc, kv_loc, hd = 3, 16, 16, 2, 1, 8
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((B, D)) * 0.2, jnp.float32)
+    wqkv = jnp.asarray(rng.standard_normal((D, (q_loc + 2 * kv_loc) * hd))
+                       * 0.05, jnp.float32)
+    wo = jnp.asarray(rng.standard_normal((q_loc * hd, D)) * 0.05,
+                     jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((S, kv_loc, hd)) * 0.3,
+                     jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((S, kv_loc, hd)) * 0.3,
+                     jnp.float32)
+    kw = dict(q_heads=q_loc, kv_heads=kv_loc, interpret=True, block_s=4)
+
+    def one(xb, cl, cosb, sinb):
+        return fused_decode(xb[None], wqkv, None, wo, kc, vc, cl,
+                            cosb, sinb, **kw)[0][0]
+
+    def ragged(lens_v):
+        cls = jnp.asarray(lens_v, jnp.int32)
+        cos, sin = rope_at(cls, hd)
+        return jax.vmap(one, in_axes=(0, 0, 0, 0))(x, cls, cos, sin)
+
+    # (a) slot-by-slot per-sequence oracle
+    o_rag = ragged(lens)
+    for b, L in enumerate(lens):
+        cos, sin = rope_at(jnp.int32(L), hd)
+        o_b = fused_decode(x[b:b + 1], wqkv, None, wo, kc, vc,
+                           jnp.int32(L), cos, sin, **kw)[0]
+        np.testing.assert_allclose(np.asarray(o_rag[b]),
+                                   np.asarray(o_b[0]),
+                                   rtol=2e-5, atol=2e-5)
+    # (b) all-equal cache_lens ≡ one lockstep batched call
+    L = lens[0]
+    cos, sin = rope_at(jnp.int32(L), hd)
+    o_lock = fused_decode(x, wqkv, None, wo, kc, vc, jnp.int32(L),
+                          cos, sin, **kw)[0]
+    np.testing.assert_allclose(np.asarray(ragged([L] * B)),
+                               np.asarray(o_lock),
+                               rtol=2e-5, atol=2e-5)
 
 
 def test_elastic_reshard_roundtrip():
