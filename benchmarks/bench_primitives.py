@@ -7,7 +7,6 @@ the fabric traffic from the paper's analytical model (§3.2).
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 

@@ -37,7 +37,10 @@ import numpy as np
 
 from benchmarks.common import row, time_fn
 from repro.configs import get_config, reduced
-from repro.core.autotune import weight_gather_bytes_per_step
+from repro.core import tracecount
+from repro.core.autotune import (ffn_cluster_reduce_bytes_per_step,
+                                 ffn_psum_bytes_per_step,
+                                 weight_gather_bytes_per_step)
 from repro.launch.mesh import make_test_mesh
 from repro.launch.serve import build_engine
 from repro.models import layout_for, single_device_ctx, unwrap_local
@@ -167,14 +170,28 @@ def _bench_variant(cfg, arch, label, kw, *, max_seq, batch, prompt_len,
         fe = jax.random.normal(key, (batch, cfg.frontend.num_positions,
                                      cfg.frontend.feature_dim))
     p_serve = params["serve"]
+    # Trace-time structure counters — measured BEFORE the first dispatch
+    # (a cached trace would skip the counting hooks): exact per-step
+    # pallas_call launch and activation-psum counts of this variant.
+    tok0 = jnp.zeros((batch,), jnp.int32)
+    with tracecount.counting() as c:
+        jax.eval_shape(dec, p_serve, state, tok0)
+    launches = int(c.get("pallas_kernel", 0))
+    psums = int(c.get("psum_model", 0))
     nxt, st = pf(params["train"], state, prompts, fe)
     t = time_fn(lambda: dec(p_serve, st, nxt), iters=iters)
+    byte_kw = dict(model_axis=mesh.shape["model"], batch=scfg.batch_local,
+                   backend=scfg.backend, prepack=scfg.prepack)
     gather_bytes = weight_gather_bytes_per_step(
         cfg, model_axis=mesh.shape["model"], cluster_size=lay.cluster,
         backend=scfg.backend, prepack=scfg.prepack)
+    ffn_psum_bytes = ffn_psum_bytes_per_step(cfg, **byte_kw)
+    ffn_reduce_bytes = ffn_cluster_reduce_bytes_per_step(cfg, **byte_kw)
     rows.append(row(f"tpot_{label}_{arch}", t,
                     f"cluster={lay.cluster},prepack={scfg.prepack},"
-                    f"ici_weight_gather_bytes={gather_bytes:.0f}"))
+                    f"ici_weight_gather_bytes={gather_bytes:.0f},"
+                    f"ffn_psum_bytes={ffn_psum_bytes:.0f},"
+                    f"pallas_launches={launches},psum_model={psums}"))
     sweep = {}
     for L in cache_lens:
         pr = jax.random.randint(key, (batch, L), 0, cfg.vocab_size)
@@ -190,6 +207,13 @@ def _bench_variant(cfg, arch, label, kw, *, max_seq, batch, prompt_len,
         "backend": scfg.backend,
         "prepack": scfg.prepack,
         "ici_weight_gather_bytes_per_step": gather_bytes,
+        # full-block fusion evidence (DESIGN.md §7): per-layer FFN psum
+        # bytes eliminated by the fused ClusterReduce, its replacement's
+        # tree-traffic, and the measured trace-time launch/psum counts
+        "ffn_psum_ici_bytes_per_step": ffn_psum_bytes,
+        "ffn_fused_reduce_ici_bytes_per_step": ffn_reduce_bytes,
+        "pallas_launches_per_step": launches,
+        "psum_model_per_step": psums,
     }
 
 

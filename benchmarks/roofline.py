@@ -11,16 +11,14 @@ import dataclasses
 import json
 from typing import Dict, Optional
 
-from repro.configs import SHAPES, get_config
-from repro.launch.dryrun import (HBM_BW, ICI_BW, PEAK_FLOPS, analyse,
-                                 run_cell)
+from repro.configs import get_config
+from repro.launch.dryrun import HBM_BW, ICI_BW, PEAK_FLOPS, run_cell
 
 
 def scan_extrapolated_cell(arch: str, shape_name: str, *,
                            multi_pod: bool = False,
                            tcfg_kw: Optional[dict] = None) -> Dict:
     """Two-point extrapolation of per-device flops/bytes/collective bytes."""
-    import repro.configs.base as base
     cfg = get_config(arch)
     period = len(cfg.block_pattern)
     n_groups = cfg.n_layers // period

@@ -1,6 +1,5 @@
 """Run the scan-extrapolated roofline over all single-pod cells."""
 import json
-import sys
 
 from repro.configs import SHAPES, get_config, list_archs, shapes_for
 from benchmarks.roofline import scan_extrapolated_cell, to_markdown

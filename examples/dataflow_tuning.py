@@ -5,7 +5,7 @@ chosen configuration — what ``serving_layout`` does automatically.
     PYTHONPATH=src python examples/dataflow_tuning.py
 """
 from repro.configs import get_config, list_archs
-from repro.core.autotune import sweep, tune_cluster
+from repro.core.autotune import tune_cluster
 
 
 def main():

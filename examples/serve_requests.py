@@ -34,6 +34,11 @@ def main():
     ap.add_argument("--prompt-cap", type=int, default=12)
     ap.add_argument("--backend", default="xla",
                     choices=("xla", "pallas", "auto"))
+    ap.add_argument("--prepack", default="auto",
+                    choices=("auto", "on", "off"),
+                    help="serve-layout weight prepack (auto: on whenever "
+                         "the backend resolves to pallas — parity with "
+                         "serve_decode.py)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -44,6 +49,7 @@ def main():
     eng = build_engine_full(
         cfg, mesh, max_seq=args.prompt_cap + max_new_cap + 8,
         batch_global=args.slots, backend=args.backend,
+        prepack=args.prepack,
         interpret=(args.backend != "xla"
                    and jax.default_backend() == "cpu"),
         track_work=True,

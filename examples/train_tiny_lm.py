@@ -11,10 +11,7 @@ if "xla_force_host_platform_device_count" not in os.environ.get(
         "XLA_FLAGS", ""):
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
-import dataclasses
 
-from repro.configs import get_config
-from repro.launch.mesh import make_test_mesh
 from repro.launch.train import run
 from repro.training.optimizer import OptConfig
 from repro.training.train_step import TrainConfig
@@ -27,7 +24,7 @@ def main():
     args = ap.parse_args()
 
     # ~100M params: 8 layers, d_model 512, llama-style
-    from repro.configs.base import ModelConfig, register, _REGISTRY
+    from repro.configs.base import ModelConfig, _REGISTRY
     _REGISTRY["tiny-100m"] = lambda: ModelConfig(
         name="tiny-100m", family="dense", n_layers=8, d_model=512,
         n_heads=8, n_kv_heads=4, head_dim=64, d_ff=1536, vocab_size=65536,

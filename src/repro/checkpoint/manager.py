@@ -21,7 +21,6 @@ import os
 import re
 import shutil
 import threading
-import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax

@@ -8,10 +8,9 @@ dry-run, never allocated).
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from dataclasses import dataclass, field, replace
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Block kinds

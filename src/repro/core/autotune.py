@@ -137,6 +137,11 @@ class ServePlan:
     # re-laid out once at load time so the decode step performs zero
     # weight-segment ICI gathers and zero dynamic-slice weight slicing
     prepack: bool
+    # d_ff tile of the fused-FFN block-tail megakernel (kernels/fused_ffn,
+    # DESIGN.md §7); fitted down to a divisor of F_loc at the call site.
+    # Pre-fused-FFN table entries lack this field and self-heal by
+    # re-tuning (same schema-drift path as the prepack field).
+    block_f: int
     est_seconds: float
 
 
@@ -182,6 +187,33 @@ def pick_block_s(cfg: ModelConfig, seq_len: int, cluster_size: int,
     # wide-KV configs: even the smallest candidate can blow the budget —
     # halve until the double-buffered tiles fit (floor 8)
     while best > 8 and best * row * 2 > VMEM_BUDGET:
+        best //= 2
+    return best
+
+
+_BLOCK_F_CANDIDATES = (256, 512, 1024, 2048, 4096)
+
+
+def pick_block_f(cfg: ModelConfig) -> int:
+    """d_ff tile for the fused-FFN megakernel (kernels/fused_ffn).
+
+    Each grid step streams an up tile [D, bf], an optional gate tile
+    [D, bf] and a down-row tile [bf, D]; prefer the largest tile whose
+    double-buffered weights fit the VMEM budget (fewer grid steps ⇒
+    less fixed per-step overhead; the [B, D] activation scratch is
+    batch-small and deliberately outside the model).  The call site
+    fits the pick down to a divisor of the local ``d_ff`` shard
+    (``_fit_block_s``).
+    """
+    d = cfg.d_model
+    bpe = 2
+    tiles = 3 if cfg.ffn_gated else 2      # up (+gate) cols + down rows
+    best = _BLOCK_F_CANDIDATES[0]
+    for b in _BLOCK_F_CANDIDATES:
+        if b * d * tiles * bpe * 2 > VMEM_BUDGET:   # ×2: double-buffered
+            break
+        best = b
+    while best > 8 and best * d * tiles * bpe * 2 > VMEM_BUDGET:
         best //= 2
     return best
 
@@ -253,6 +285,58 @@ def weight_gather_bytes_per_step(cfg: ModelConfig, *, model_axis: int,
     return total
 
 
+def _n_dense_ffn_layers(cfg: ModelConfig) -> int:
+    """Attention layers whose dense FFN the fused block tail covers
+    (MoE layers keep the XLA expert dispatch; enc-dec interleaves
+    cross-attention — DESIGN.md §7)."""
+    if cfg.moe is not None or cfg.encoder is not None:
+        return 0
+    return sum(1 for k in cfg.layer_kinds if k in (ATTN_GLOBAL, ATTN_LOCAL))
+
+
+def _fused_ffn_reduce_active(model_axis: int, backend: str,
+                             prepack: bool) -> bool:
+    """Mirror of the runtime dispatch in ``engine._fused_ffn_tail``: the
+    fused tree ClusterReduce runs only on the prepacked Pallas path AND
+    only for power-of-two model axes (the tree schedule's validity
+    condition); otherwise the layer pays the ``psum_model`` all-reduce."""
+    return (backend == "pallas" and prepack
+            and model_axis > 1 and not (model_axis & (model_axis - 1)))
+
+
+def ffn_psum_bytes_per_step(cfg: ModelConfig, *, model_axis: int,
+                            batch: int, backend: str, prepack: bool,
+                            bytes_per_el: int = 2) -> float:
+    """Modeled per-step ICI bytes of the per-layer FFN activation
+    all-reduce (``ctx.psum_model`` on the ``[B, D]`` down-projection
+    partials; XLA's bandwidth-optimal schedule moves ``2·(N−1)·size``
+    over the fabric).  The fused full-block path replaces it with ONE
+    fused tree ClusterReduce per layer — this column reads 0 there and
+    :func:`ffn_cluster_reduce_bytes_per_step` carries the replacement's
+    traffic, so the trade stays auditable in BENCH_tpot.json.  Non-pow2
+    model axes keep the psum even when prepacked (the runtime fallback
+    in ``engine._fused_ffn_tail``)."""
+    if model_axis <= 1 or _fused_ffn_reduce_active(model_axis, backend,
+                                                   prepack):
+        return 0.0
+    size = batch * cfg.d_model * bytes_per_el
+    return _n_dense_ffn_layers(cfg) * 2.0 * (model_axis - 1) * size
+
+
+def ffn_cluster_reduce_bytes_per_step(cfg: ModelConfig, *, model_axis: int,
+                                      batch: int, backend: str,
+                                      prepack: bool,
+                                      bytes_per_el: int = 2) -> float:
+    """Modeled per-step ICI bytes of the fused ClusterReduce that
+    replaces the FFN ``psum_model`` on the full-block path (the paper's
+    tree schedule: ``size · log2 N · N``)."""
+    if not _fused_ffn_reduce_active(model_axis, backend, prepack):
+        return 0.0
+    size = batch * cfg.d_model * bytes_per_el
+    return (_n_dense_ffn_layers(cfg)
+            * prim.traffic_reduce(size, model_axis))
+
+
 def tune_serving(cfg: ModelConfig, *, seq_len: int, batch: int,
                  model_axis: int = 16, backend: str = "auto",
                  prepack="auto",
@@ -288,6 +372,7 @@ def tune_serving(cfg: ModelConfig, *, seq_len: int, batch: int,
         backend=backend_resolved,
         block_s=pick_block_s(cfg, bucket, best.cluster_size, batch),
         prepack=pp,
+        block_f=pick_block_f(cfg),
         est_seconds=best.est_seconds,
     )
     table[key] = asdict(plan)

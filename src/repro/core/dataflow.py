@@ -364,11 +364,16 @@ class PackedSplitTokenWeights(NamedTuple):
               the SAME output basis, so the flash merge sums them exactly
               and no post-combine cluster gather remains.
     ``bqkv`` [(q_loc + 2·kv_loc)·hd] fused bias, or None.
+    ``ln1``  [D] pre-attention RMSNorm scale, fused into the kernel's
+             projection phase (the raw residual stream crosses HBM, the
+             normed copy exists only in VMEM — DESIGN.md §7); None keeps
+             the legacy caller-normalizes contract.
     """
 
     wqkv: jax.Array
     wo: jax.Array
     bqkv: Optional[jax.Array] = None
+    ln1: Optional[jax.Array] = None
 
 
 class PackedMLAWeights(NamedTuple):
@@ -389,6 +394,33 @@ class PackedMLAWeights(NamedTuple):
     wdkv: jax.Array
     wuk: jax.Array
     wproj: jax.Array
+    # [D] fused pre-attention RMSNorm scale (None = caller normalizes)
+    ln1: Optional[jax.Array] = None
+
+
+class PackedFFNWeights(NamedTuple):
+    """Serve-layout dense-FFN bundle for the fused block-tail megakernel
+    (kernels/fused_ffn, DESIGN.md §7).
+
+    The Megatron training layout is ALREADY the serve layout — gate/up
+    column tiles ``[D, F_loc]`` and full-width down rows ``[F_loc, D]``
+    (one output basis per rank, so down-projection partials sum exactly
+    under one fused ClusterReduce — the same invariant as
+    :class:`PackedSplitTokenWeights`.wo) — so the pack is pure aliasing:
+    every weight field references the training tree's buffer, and only
+    the fused norm scales ride along.  Zero extra HBM residency.
+
+    ``w_in``  [D, F_loc] up columns · ``w_gate`` [D, F_loc] or None ·
+    ``w_out`` [F_loc, D] full-width down rows · ``ln2`` [D] pre-FFN
+    norm scale · ``post_ln1`` [D] post-attention norm scale (Gemma-2
+    sandwich) or None.
+    """
+
+    w_in: jax.Array
+    w_out: jax.Array
+    ln2: jax.Array
+    w_gate: Optional[jax.Array] = None
+    post_ln1: Optional[jax.Array] = None
 
 
 def split_token_attention(
@@ -403,6 +435,8 @@ def split_token_attention(
     attn_softcap: float = 0.0,
     rope_theta: float = 10000.0,
     scale: Optional[float] = None,
+    norm_eps: float = 1e-6,       # fused pre-attention RMSNorm eps (packed
+                                  # serve layout with ``ln1`` only)
 ) -> Tuple[jax.Array, KVBlock]:
     """One decode step of fused QKV-Projection → Attention → Output-Projection.
 
@@ -436,7 +470,8 @@ def split_token_attention(
             "prepacked serve-layout weights require backend='pallas'"
         return _split_token_attention_pallas_packed(
             spec, x, w, cache, cache_len, window=window,
-            attn_softcap=attn_softcap, rope_theta=rope_theta, scale=scale)
+            attn_softcap=attn_softcap, rope_theta=rope_theta, scale=scale,
+            norm_eps=norm_eps)
     if spec.backend == "pallas":
         return _split_token_attention_pallas(
             spec, x, w, cache, cache_len, window=window,
@@ -636,6 +671,7 @@ def _split_token_attention_pallas_packed(
     attn_softcap: float,
     rope_theta: float,
     scale: Optional[float],
+    norm_eps: float = 1e-6,
 ) -> Tuple[jax.Array, KVBlock]:
     """SplitToken on prepacked serve-layout weights — the full Alg. 3
     fusion scope (DESIGN.md §2).  Returns ``(o [B, D], cache)`` — the
@@ -678,7 +714,8 @@ def _split_token_attention_pallas_packed(
             q_heads=q_local, kv_heads=kv_local, scale=scale,
             attn_softcap=attn_softcap, window=window, ring=window > 0,
             block_s=blk, fuse_out="partial_o", interpret=spec.interpret,
-            pos=posb, include_new=inc, pos_base=ap.pos_base)
+            pos=posb, include_new=inc, pos_base=ap.pos_base,
+            norm_scale=w.ln1, norm_eps=norm_eps)
         return acc[0], k_new[0], v_new[0], m[0], l[0]
 
     kern_axes = (0, 1, 1, 0, 0, 0, 1, 0) if ragged \
@@ -808,6 +845,8 @@ def mla_attention(
     nope_dim: int,
     rope_dim: int,
     rope_theta: float = 10000.0,
+    norm_eps: float = 1e-6,       # fused pre-attention RMSNorm eps (packed
+                                  # serve layout with ``ln1`` only)
 ) -> Tuple[jax.Array, KVBlock]:
     """Fused MLA decode per paper Alg. 4 (weight-absorbed, Fig. 14 right).
 
@@ -830,7 +869,7 @@ def mla_attention(
             "prepacked serve-layout weights require backend='pallas'"
         return _mla_attention_pallas_packed(
             spec, x, w, cache, cache_len, nope_dim=nope_dim,
-            rope_dim=rope_dim, rope_theta=rope_theta)
+            rope_dim=rope_dim, rope_theta=rope_theta, norm_eps=norm_eps)
     if spec.backend == "pallas":
         return _mla_attention_pallas(
             spec, x, w, cache, cache_len, nope_dim=nope_dim,
@@ -983,6 +1022,7 @@ def _mla_attention_pallas_packed(
     nope_dim: int,
     rope_dim: int,
     rope_theta: float,
+    norm_eps: float = 1e-6,
 ) -> Tuple[jax.Array, KVBlock]:
     """Alg. 4 on prepacked serve-layout weights — fully fused.  Returns
     ``(o [B, D], cache)``; no cluster gather follows.
@@ -1015,7 +1055,8 @@ def _mla_attention_pallas_packed(
             cl, cosb, sinb, q_heads=q_local, nope=nope_dim,
             rope_d=rope_dim, l_rank=l_rank, v_dim=d_out, block_s=blk,
             fuse_out="partial_o", interpret=spec.interpret, pos=posb,
-            include_new=inc, pos_base=ap.pos_base)
+            include_new=inc, pos_base=ap.pos_base,
+            norm_scale=w.ln1, norm_eps=norm_eps)
         return acc[0], c_new[0], m[0], l[0]
 
     kern_axes = (0, 1, 0, 0, 0, 1, 0) if ragged \

@@ -18,12 +18,24 @@ Labels used across the codebase:
   the train-layout adapters (``_split_token_weights``/``_mla_weights``).
 * ``weight_slice_hoisted`` — the once-per-step rank slices hoisted out
   of the layer scan (non-prepacked fast path).
-* ``pallas_kernel`` — fused decode kernel invocations.
+* ``pallas_kernel`` — ``pallas_call`` launch counter: one bump per
+  kernel invocation as it traces (a vmapped kernel traces once, so this
+  is the per-step launch count under ``jit``).
+* ``ffn_pallas_kernel`` — the fused-FFN block-tail megakernel's own
+  launches (a subset of ``pallas_kernel``).
+* ``psum_model`` — per-step activation all-reduces over the model axis
+  (``ParallelCtx.psum_model``: embedding assembly + the per-layer FFN
+  combine on the unfused path).
+* ``ffn_cluster_reduce`` — the fused ClusterReduce that replaces the
+  per-layer FFN ``psum_model`` on the full-block path (DESIGN.md §7).
 
-Evidence target (tests/test_prepack.py): the prepacked Pallas path
+Evidence targets (tests/test_prepack.py): the prepacked Pallas path
 traces with ``weight_gather == weight_slice == 0`` and exactly one
 ``pallas_kernel`` + one ``tree_reduce`` on the cluster axis per
-attention layer.
+attention layer; the FULL-block path (fused FFN) traces with exactly
+TWO ``pallas_kernel`` per dense-FFN attention layer and ``psum_model
+== 1`` per decode step (the embedding lookup — zero per-layer
+activation psums).
 
 Besides the trace-time counters, this module hosts the RUNTIME work
 counters for ragged decode (:func:`live_attend_blocks`): a pure-jnp

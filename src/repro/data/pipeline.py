@@ -17,8 +17,6 @@ import os
 from dataclasses import dataclass
 from typing import Dict, Iterator, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 

@@ -18,7 +18,7 @@ last stage and returns a scalar every rank agrees on.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Tuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -73,13 +73,13 @@ from repro.kernels import tpu_compiler_params
 def _kernel(scalars_ref,                         # scalar prefetch (SMEM):
                                                  # [cache_len, include_new,
                                                  #  pos_base]
-            x_ref, wqkv_ref, bqkv_ref, wo_ref, cos_ref, sin_ref,
+            x_ref, wqkv_ref, bqkv_ref, wo_ref, cos_ref, sin_ref, norm_ref,
             k_blk_ref, v_blk_ref, pos_blk_ref,
             o_ref, k_new_ref, v_new_ref, m_out_ref, l_out_ref,
             q_s, k_s, v_s, m_s, l_s, acc_s,
             *, blk_s: int, n_blocks: int, q_loc: int, kv_loc: int,
             hd: int, scale: float, cap: float, window: int, ring: bool,
-            fuse_out):
+            fuse_out, fuse_norm: bool, norm_eps: float):
     j = pl.program_id(0)
     cache_len = scalars_ref[0]
     B = x_ref.shape[0]
@@ -89,6 +89,15 @@ def _kernel(scalars_ref,                         # scalar prefetch (SMEM):
     @pl.when(j == 0)
     def _proj():
         x = x_ref[...].astype(jnp.float32)               # [B, D]
+        if fuse_norm:
+            # Pre-attention RMSNorm fused into the projection phase: the
+            # RAW residual stream crosses HBM; the normed copy exists only
+            # in VMEM.  The dtype round-trip reproduces the XLA oracle's
+            # rms_norm output exactly (it returns x.dtype).
+            g = norm_ref[...].astype(jnp.float32)        # [1, D] scale
+            var = jnp.mean(x * x, axis=-1, keepdims=True)
+            x = x * jax.lax.rsqrt(var + norm_eps) * (1.0 + g)
+            x = x.astype(x_ref.dtype).astype(jnp.float32)
         w = wqkv_ref[...].astype(jnp.float32)            # [D, P]
         qkv = jax.lax.dot(x, w, precision=lax.Precision.DEFAULT)
         qkv += bqkv_ref[...].astype(jnp.float32)         # [1, P] bias
@@ -291,6 +300,10 @@ def fused_decode_attention(
                                               # attention (cluster: owner only)
     pos_base: Optional[jax.Array] = None,     # pos[i] = pos_base + i when the
                                               # layout is linear; −1 otherwise
+    norm_scale: Optional[jax.Array] = None,   # [D] fused pre-attention
+                                              # RMSNorm scale; None = caller
+                                              # pre-normed x (legacy)
+    norm_eps: float = 1e-6,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Returns ``(o, k_new, v_new, m, l)``.
 
@@ -331,11 +344,14 @@ def fused_decode_attention(
         jnp.asarray(include_new, jnp.int32).reshape(()),
         jnp.asarray(pos_base, jnp.int32).reshape(()),
     ])
+    fuse_norm = norm_scale is not None
+    norm_op = (jnp.asarray(norm_scale, jnp.float32).reshape(1, D)
+               if fuse_norm else jnp.zeros((1, 1), jnp.float32))
 
     kernel = functools.partial(
         _kernel, blk_s=blk_s, n_blocks=n_blocks, q_loc=q_loc, kv_loc=kv_loc,
         hd=hd, scale=scale, cap=attn_softcap, window=window, ring=ring,
-        fuse_out=fuse_out)
+        fuse_out=fuse_out, fuse_norm=fuse_norm, norm_eps=norm_eps)
 
     grid = (n_blocks + 2,)
     if fuse_out == "partial_o":
@@ -367,6 +383,7 @@ def fused_decode_attention(
                 pl.BlockSpec(wo.shape, lambda j, *_: (0,) * wo.ndim),       # wo
                 pl.BlockSpec((1, hd // 2), lambda j, *_: (0, 0)),           # cos
                 pl.BlockSpec((1, hd // 2), lambda j, *_: (0, 0)),           # sin
+                pl.BlockSpec(norm_op.shape, lambda j, *_: (0, 0)),          # ln1
                 pl.BlockSpec((blk_s, kv_loc, hd), cache_map),           # k
                 pl.BlockSpec((blk_s, kv_loc, hd), cache_map),           # v
                 pl.BlockSpec((1, blk_s), pos_map),                      # pos
@@ -400,6 +417,6 @@ def fused_decode_attention(
         interpret=interpret,
     )(scalars,
       x, wqkv, bqkv.reshape(1, -1), wo,
-      cos.reshape(1, -1), sin.reshape(1, -1), k_cache, v_cache,
+      cos.reshape(1, -1), sin.reshape(1, -1), norm_op, k_cache, v_cache,
       jnp.asarray(pos, jnp.int32).reshape(1, S))
     return tuple(out)

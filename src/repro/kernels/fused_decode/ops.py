@@ -13,15 +13,16 @@ from repro.kernels.fused_decode.ref import fused_decode_attention_ref
 @partial(jax.jit, static_argnames=("q_heads", "kv_heads", "scale",
                                    "attn_softcap", "window", "ring",
                                    "block_s", "fuse_out", "interpret",
-                                   "use_ref"))
+                                   "use_ref", "norm_eps"))
 def fused_decode(x, wqkv, bqkv, wo, k_cache, v_cache, cache_len, cos, sin,
                  *, q_heads, kv_heads, scale=None, attn_softcap=0.0,
                  window=0, ring=False, block_s=512, fuse_out=True,
                  interpret=False, use_ref=False, pos=None, include_new=None,
-                 pos_base=None):
+                 pos_base=None, norm_scale=None, norm_eps=1e-6):
     kw = dict(q_heads=q_heads, kv_heads=kv_heads, scale=scale,
               attn_softcap=attn_softcap, window=window, block_s=block_s,
-              fuse_out=fuse_out, pos=pos, include_new=include_new)
+              fuse_out=fuse_out, pos=pos, include_new=include_new,
+              norm_scale=norm_scale, norm_eps=norm_eps)
     if use_ref:
         return fused_decode_attention_ref(
             x, wqkv, bqkv, wo, k_cache, v_cache, cache_len, cos, sin, **kw)

@@ -15,6 +15,7 @@ def fused_decode_attention_ref(
     q_heads: int, kv_heads: int, scale: Optional[float] = None,
     attn_softcap: float = 0.0, window: int = 0, fuse_out=True,
     pos: Optional[jax.Array] = None, include_new=None,
+    norm_scale: Optional[jax.Array] = None, norm_eps: float = 1e-6,
     **_,
 ) -> Tuple[jax.Array, ...]:
     B, D = x.shape
@@ -23,7 +24,13 @@ def fused_decode_attention_ref(
     qpk = q_loc // kv_loc
     scale = scale if scale is not None else 1.0 / math.sqrt(hd)
 
-    qkv = x.astype(jnp.float32) @ wqkv.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    if norm_scale is not None:      # fused pre-attention RMSNorm
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        xf = xf * jax.lax.rsqrt(var + norm_eps) \
+            * (1.0 + norm_scale.astype(jnp.float32))
+        xf = xf.astype(x.dtype).astype(jnp.float32)
+    qkv = xf @ wqkv.astype(jnp.float32)
     if bqkv is not None:
         qkv = qkv + bqkv.astype(jnp.float32)
     q = qkv[:, : q_loc * hd].reshape(B, q_loc, hd)

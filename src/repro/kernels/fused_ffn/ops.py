@@ -1,0 +1,21 @@
+"""Jitted public wrapper for the fused FFN block-tail kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.fused_ffn.fused_ffn import fused_ffn_block
+from repro.kernels.fused_ffn.ref import fused_ffn_block_ref
+
+
+@partial(jax.jit, static_argnames=("act", "eps", "block_f", "interpret",
+                                   "use_ref"))
+def fused_ffn(x, a, w_in, w_gate, w_out, ln2, post_ln1, add_r, *,
+              act, eps=1e-6, block_f=512, interpret=False, use_ref=False):
+    if use_ref:
+        return fused_ffn_block_ref(x, a, w_in, w_gate, w_out, ln2,
+                                   post_ln1, add_r, act=act, eps=eps)
+    return fused_ffn_block(x, a, w_in, w_gate, w_out, ln2, post_ln1, add_r,
+                           act=act, eps=eps, block_f=block_f,
+                           interpret=interpret)

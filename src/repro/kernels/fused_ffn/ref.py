@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the fused FFN block-tail kernel."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import activation
+
+
+def fused_ffn_block_ref(
+    x: jax.Array, a: jax.Array, w_in: jax.Array,
+    w_gate: Optional[jax.Array], w_out: jax.Array, ln2: jax.Array,
+    post_ln1: Optional[jax.Array], add_r, *,
+    act: str, eps: float = 1e-6, **_,
+) -> Tuple[jax.Array, jax.Array]:
+    """Mirrors the kernel's math (f32 matmuls, dtype-rounded norms and
+    residual) — ``(o, r)`` with ``o`` this rank's partial + ``add_r·r``."""
+    def rms(v, scale):
+        var = jnp.mean(v * v, axis=-1, keepdims=True)
+        out = v * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+        return out.astype(x.dtype).astype(jnp.float32)
+
+    def q(v):                       # model-dtype op-boundary rounding
+        return v.astype(x.dtype).astype(jnp.float32)
+
+    xf = x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    if post_ln1 is not None:
+        af = rms(af, post_ln1)
+    r = (xf + af).astype(x.dtype).astype(jnp.float32)
+    h = rms(r, ln2)
+    act_fn = activation(act)
+    u = q(h @ w_in.astype(jnp.float32))
+    if w_gate is not None:
+        hm = q(act_fn(q(h @ w_gate.astype(jnp.float32))) * u)
+    else:
+        hm = q(act_fn(u))
+    o = hm @ w_out.astype(jnp.float32) \
+        + r * jnp.asarray(add_r, jnp.float32)
+    return o.astype(x.dtype), r.astype(x.dtype)

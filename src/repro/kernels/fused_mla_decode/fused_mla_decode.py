@@ -42,7 +42,6 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -53,12 +52,12 @@ from repro.kernels.fused_decode.fused_decode import _cache_block_index
 
 def _kernel(scalars_ref,          # [cache_len, include_new, pos_base] (SMEM)
             x_ref, wq_ref, wdkv_ref, wuk_ref, wuv_ref, wo_ref,
-            cos_ref, sin_ref, c_blk_ref, pos_blk_ref,
+            cos_ref, sin_ref, norm_ref, c_blk_ref, pos_blk_ref,
             o_ref, c_new_ref, m_out_ref, l_out_ref,
             q_s, m_s, l_s, acc_s,
             *, blk_s: int, n_blocks: int, q_loc: int, nope: int,
             rope_d: int, l_rank: int, v_dim: int, scale: float,
-            fuse_out):
+            fuse_out, fuse_norm: bool, norm_eps: float):
     j = pl.program_id(0)
     cache_len = scalars_ref[0]
     B = x_ref.shape[0]
@@ -67,6 +66,13 @@ def _kernel(scalars_ref,          # [cache_len, include_new, pos_base] (SMEM)
     @pl.when(j == 0)
     def _proj():
         x = x_ref[...].astype(jnp.float32)                   # [B, D]
+        if fuse_norm:
+            # fused pre-attention RMSNorm (raw residual stream crossed
+            # HBM; dtype round-trip matches the XLA oracle's rms_norm)
+            g = norm_ref[...].astype(jnp.float32)            # [1, D]
+            var = jnp.mean(x * x, axis=-1, keepdims=True)
+            x = x * jax.lax.rsqrt(var + norm_eps) * (1.0 + g)
+            x = x.astype(x_ref.dtype).astype(jnp.float32)
         q = jax.lax.dot(x, wq_ref[...].astype(jnp.float32))  # [B, q*(n+r)]
         q = q.reshape(B, q_loc, nope + rope_d)
         c = jax.lax.dot(x, wdkv_ref[...].astype(jnp.float32))  # [B, l+r]
@@ -190,6 +196,9 @@ def fused_mla_decode_attention(
     pos: Optional[jax.Array] = None,
     include_new: Optional[jax.Array] = None,
     pos_base: Optional[jax.Array] = None,
+    norm_scale: Optional[jax.Array] = None,   # [D] fused pre-attention
+                                              # RMSNorm scale (None = legacy)
+    norm_eps: float = 1e-6,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Returns ``(o, c_new, m, l)``.
 
@@ -231,10 +240,13 @@ def fused_mla_decode_attention(
         jnp.asarray(pos_base, jnp.int32).reshape(()),
     ])
 
+    fuse_norm = norm_scale is not None
+    norm_op = (jnp.asarray(norm_scale, jnp.float32).reshape(1, D)
+               if fuse_norm else jnp.zeros((1, 1), jnp.float32))
     kernel = functools.partial(
         _kernel, blk_s=blk_s, n_blocks=n_blocks, q_loc=q_heads, nope=nope,
         rope_d=rope_d, l_rank=l_rank, v_dim=v_dim, scale=scale,
-        fuse_out=fuse_out)
+        fuse_out=fuse_out, fuse_norm=fuse_norm, norm_eps=norm_eps)
 
     def cache_map(j, s_ref):
         b = _cache_block_index(j, s_ref[0], blk_s=blk_s, n_blocks=n_blocks,
@@ -260,6 +272,7 @@ def fused_mla_decode_attention(
                 pl.BlockSpec(wo.shape, lambda j, *_: (0, 0)),
                 pl.BlockSpec((1, rope_d // 2), lambda j, *_: (0, 0)),
                 pl.BlockSpec((1, rope_d // 2), lambda j, *_: (0, 0)),
+                pl.BlockSpec(norm_op.shape, lambda j, *_: (0, 0)),  # ln1
                 pl.BlockSpec((blk_s, lr), cache_map),
                 pl.BlockSpec((1, blk_s), pos_map),
             ],
@@ -289,5 +302,5 @@ def fused_mla_decode_attention(
         interpret=interpret,
     )(scalars,
       x, wq, wdkv, wuk, wuv, wo, cos.reshape(1, -1), sin.reshape(1, -1),
-      c_cache, jnp.asarray(pos, jnp.int32).reshape(1, S))
+      norm_op, c_cache, jnp.asarray(pos, jnp.int32).reshape(1, S))
     return tuple(out)

@@ -12,14 +12,16 @@ from repro.kernels.fused_mla_decode.ref import fused_mla_decode_attention_ref
 
 @partial(jax.jit, static_argnames=("q_heads", "nope", "rope_d", "l_rank",
                                    "v_dim", "block_s", "fuse_out",
-                                   "interpret", "use_ref"))
+                                   "interpret", "use_ref", "norm_eps"))
 def fused_mla_decode(x, wq, wdkv, wuk, wuv, wo, c_cache, cache_len, cos, sin,
                      *, q_heads, nope, rope_d, l_rank, v_dim, block_s=512,
                      fuse_out=True, interpret=False, use_ref=False,
-                     pos=None, include_new=None, pos_base=None):
+                     pos=None, include_new=None, pos_base=None,
+                     norm_scale=None, norm_eps=1e-6):
     kw = dict(q_heads=q_heads, nope=nope, rope_d=rope_d, l_rank=l_rank,
               v_dim=v_dim, fuse_out=fuse_out, pos=pos,
-              include_new=include_new)
+              include_new=include_new, norm_scale=norm_scale,
+              norm_eps=norm_eps)
     if use_ref:
         return fused_mla_decode_attention_ref(
             x, wq, wdkv, wuk, wuv, wo, c_cache, cache_len, cos, sin, **kw)

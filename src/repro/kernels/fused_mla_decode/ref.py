@@ -11,7 +11,8 @@ import jax.numpy as jnp
 def fused_mla_decode_attention_ref(
     x, wq, wdkv, wuk, wuv, wo, c_cache, cache_len, cos, sin, *,
     q_heads, nope, rope_d, l_rank, v_dim, fuse_out=True,
-    pos: Optional[jax.Array] = None, include_new=None, **_,
+    pos: Optional[jax.Array] = None, include_new=None,
+    norm_scale: Optional[jax.Array] = None, norm_eps: float = 1e-6, **_,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Returns ``(o, c_new, m, l)`` — same contract as the kernel:
     ``fuse_out=False`` gives the *unnormalized* latent accumulator."""
@@ -19,6 +20,11 @@ def fused_mla_decode_attention_ref(
     S, lr = c_cache.shape
     scale = 1.0 / math.sqrt(nope + rope_d)
     xf = x.astype(jnp.float32)
+    if norm_scale is not None:      # fused pre-attention RMSNorm
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        xf = xf * jax.lax.rsqrt(var + norm_eps) \
+            * (1.0 + norm_scale.astype(jnp.float32))
+        xf = xf.astype(x.dtype).astype(jnp.float32)
     q = (xf @ wq.astype(jnp.float32)).reshape(B, q_heads, nope + rope_d)
     c = xf @ wdkv.astype(jnp.float32)
     q_nope, q_rope = q[..., :nope], q[..., nope:]

@@ -2,7 +2,6 @@
 models/rwkv6._wkv_scan)."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.models.rwkv6 import _wkv_scan

@@ -21,7 +21,6 @@ import time
 from typing import Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import SHAPES, get_config, list_archs, shapes_for
 from repro.launch.mesh import make_production_mesh

@@ -80,7 +80,8 @@ def build_engine_full(cfg, mesh, *, max_seq: int, batch_global: int,
                       fused_combine: bool = False,
                       cluster: Optional[int] = None,
                       backend: str = "xla", interpret: bool = False,
-                      block_s: Optional[int] = None, prepack="auto",
+                      block_s: Optional[int] = None,
+                      block_f: Optional[int] = None, prepack="auto",
                       autotune_table: Optional[str] = None,
                       track_work: bool = False,
                       plan_seq_len: Optional[int] = None) -> EngineHandle:
@@ -125,6 +126,7 @@ def build_engine_full(cfg, mesh, *, max_seq: int, batch_global: int,
     scfg = ServeConfig(max_seq=max_seq, batch_local=b_loc,
                        backend=plan.backend, interpret=interpret,
                        block_s=block_s or plan.block_s,
+                       block_f=block_f or plan.block_f,
                        prepack=plan.prepack, track_work=track_work)
     params_abs = jax.eval_shape(
         lambda: init_device_major(cfg, lay, jax.random.PRNGKey(0)))
@@ -141,7 +143,8 @@ def build_engine_full(cfg, mesh, *, max_seq: int, batch_global: int,
     # extra residency is just the packed attention tensors (DESIGN.md §5).
     if scfg.prepack:
         from functools import partial as _partial
-        from repro.serving.prepack import (attn_subtree, merge_packed,
+        from repro.serving.prepack import (attn_subtree, bundle_ffn,
+                                           merge_packed,
                                            prepack_for_serving)
         pp_fn = _partial(prepack_for_serving, cfg, lay,
                          backend=scfg.backend)
@@ -150,8 +153,12 @@ def build_engine_full(cfg, mesh, *, max_seq: int, batch_global: int,
         sub_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), sub_specs)
         packed_attn = jax.jit(pp_fn, out_shardings=sub_sh)(
             attn_subtree(params))
-        params_serve = merge_packed(params, packed_attn)
-        sv_specs = merge_packed(p_specs, sub_specs)
+        # dense-FFN bundle is pure aliasing (no jit, no copy): the
+        # Megatron layout already IS the fused-FFN serve layout
+        params_serve = bundle_ffn(cfg, merge_packed(params, packed_attn),
+                                  backend=scfg.backend)
+        sv_specs = bundle_ffn(cfg, merge_packed(p_specs, sub_specs),
+                              backend=scfg.backend)
     else:
         params_serve, sv_specs = params, p_specs
     params = {"train": params, "serve": params_serve}

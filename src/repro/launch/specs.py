@@ -13,9 +13,6 @@ Spec conventions (device-major storage, DESIGN.md §5):
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -25,7 +22,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.autotune import tune_cluster, tune_serving
-from repro.models.ctx import ParallelCtx, make_train_ctx, pick_heads_sub
+from repro.models.ctx import ParallelCtx, make_train_ctx
 from repro.models.transformer import (Layout, fsdp_axes,
                                       fsdp_param_specs, fsdp_shard_abstract,
                                       grad_sync_tree, init_device_major,
@@ -33,9 +30,8 @@ from repro.models.transformer import (Layout, fsdp_axes,
 from repro.launch.mesh import dp_axes_of, dp_size_of
 from repro.serving.engine import ServeConfig, decode_step, init_decode_state
 from repro.serving.prefill import prefill
-from repro.training.optimizer import OptConfig
 from repro.training.train_step import (TrainConfig, init_train_state,
-                                       make_train_step, zero1_slice)
+                                       make_train_step)
 
 PyTree = Any
 
@@ -297,6 +293,7 @@ def build_decode_step(cfg: ModelConfig, mesh, shape: ShapeConfig,
                        dff_shard=dff, backend=plan.backend,
                        interpret=interpret,
                        block_s=block_s or plan.block_s,
+                       block_f=plan.block_f,
                        prepack=plan.prepack)
     params_abs = abstract_params(cfg, lay)
     if scfg.prepack:

@@ -21,7 +21,7 @@ from repro.configs import get_config, reduced
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import DataConfig, SyntheticLM, frontend_embeds_at
 from repro.launch.mesh import dp_axes_of, dp_size_of, make_test_mesh
-from repro.launch.specs import (abstract_opt_state, ctx_for, input_specs,
+from repro.launch.specs import (abstract_opt_state, ctx_for,
                                 state_spec_tree, train_layout)
 from repro.models.transformer import (grad_sync_tree, init_device_major,
                                       param_specs)

@@ -9,7 +9,7 @@ lowered HLO (which the roofline analysis parses).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 import jax
@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import primitives as prim
+from repro.core import tracecount
 from repro.core.primitives import Axis, SubAxis
 
 
@@ -61,6 +62,10 @@ class ParallelCtx:
 
     # -- collectives (no-ops when unbound) ----------------------------------
     def psum_model(self, x):
+        # trace-time counter: the fused full-block decode path must issue
+        # ZERO per-layer activation psums (tests/test_prepack.py asserts
+        # exactly one per step — the embedding lookup)
+        tracecount.bump("psum_model")
         if self.model is None:
             return x
         if isinstance(self.model, SubAxis):

@@ -29,7 +29,6 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.models.ctx import ParallelCtx
-from repro.models.layers import FFNParams
 
 
 class RWKV6Params(NamedTuple):

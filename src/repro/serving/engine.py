@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,6 +59,8 @@ class ServeConfig:
     backend: str = "xla"
     interpret: bool = False        # Pallas interpret mode (CPU/tests)
     block_s: int = 256             # KV block granularity (autotunable)
+    block_f: int = 512             # d_ff tile of the fused-FFN megakernel
+                                   # (autotunable; fitted to F_loc per call)
     # serve-layout weight prepack (serving/prepack.py): params arrive
     # already packed per rank — no per-step weight gathers or slices
     prepack: bool = False
@@ -250,6 +252,44 @@ def _spec(ctx: ParallelCtx, scfg: ServeConfig) -> df.ClusterSpec:
                           block_s=scfg.block_s)
 
 
+def _fused_ffn_tail(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
+                    blk: Dict[str, Any], x: jax.Array, a: jax.Array,
+                    w: df.PackedFFNWeights) -> jax.Array:
+    """Fused block tail (DESIGN.md §7): post-attention norm + both
+    residual adds + pre-FFN norm + gate/up/act/down in ONE Pallas kernel
+    per rank, with the per-layer FFN activation ``psum_model`` replaced
+    by ONE fused ClusterReduce over the full-width down-projection
+    partials (the residual folds into exactly one rank's partial, so the
+    reduce completes the layer output directly).
+
+    Post-norm models (``post_ln2``) normalize the SUMMED FFN output, so
+    there the second residual add runs after the combine on the
+    kernel-emitted ``r``.
+    """
+    from repro.kernels.fused_ffn.fused_ffn import fused_ffn_block
+    eps = cfg.norm_eps
+    has_post2 = "post_ln2" in blk
+    if has_post2:
+        add_r = jnp.float32(0.0)
+    else:
+        add_r = (ctx.model_index() == 0).astype(jnp.float32)
+    bf = df._fit_block_s(w.w_in.shape[-1], scfg.block_f)
+    o_part, r = fused_ffn_block(
+        x, a, w.w_in, w.w_gate, w.w_out, w.ln2, w.post_ln1, add_r,
+        act=cfg.ffn_act, eps=eps, block_f=bf, interpret=scfg.interpret)
+    n = ctx.model_size
+    if ctx.model is None:
+        f = o_part
+    elif n & (n - 1):              # non-pow2 axis: tree schedule invalid
+        f = ctx.psum_model(o_part)
+    else:
+        tracecount.bump("ffn_cluster_reduce")
+        f = prim.cluster_reduce(o_part, ctx.model, "sum")
+    if has_post2:
+        return r + rms_norm(f, blk["post_ln2"], eps)
+    return f
+
+
 def decode_block(ctx: ParallelCtx, cfg: ModelConfig, kind: str,
                  blk: Dict[str, Any], x: jax.Array, cache, cache_len,
                  scfg: ServeConfig, enc_kv=None):
@@ -271,10 +311,14 @@ def decode_block(ctx: ParallelCtx, cfg: ModelConfig, kind: str,
         w = blk["attn"]
         if isinstance(w, MLAAttnParams):       # train layout: adapt per layer
             w = _mla_weights(ctx, w, cfg)
+        # serve layout with a fused ln1: the RAW residual stream goes in,
+        # the kernel normalizes in VMEM (DESIGN.md §7)
+        fused_ln1 = isinstance(w, df.PackedMLAWeights) and w.ln1 is not None
+        x_in = x if fused_ln1 else rms_norm(x, blk["ln1"], eps)
         o_seg, cache = df.mla_attention(
-            spec, rms_norm(x, blk["ln1"], eps), w, cache, cache_len,
+            spec, x_in, w, cache, cache_len,
             nope_dim=cfg.mla.nope_head_dim, rope_dim=cfg.mla.rope_head_dim,
-            rope_theta=cfg.rope_theta)
+            rope_theta=cfg.rope_theta, norm_eps=eps)
         # prepacked serve layout emits the full [B, D] output directly
         a = o_seg if isinstance(w, df.PackedMLAWeights) \
             else ctx.gather_cluster(o_seg, axis=1)
@@ -284,12 +328,21 @@ def decode_block(ctx: ParallelCtx, cfg: ModelConfig, kind: str,
         if isinstance(w, AttnParams):          # train layout: adapt per layer
             w = _split_token_weights(ctx, w)
         window = cfg.sliding_window if kind == ATTN_LOCAL else 0
+        fused_ln1 = (isinstance(w, df.PackedSplitTokenWeights)
+                     and w.ln1 is not None)
+        x_in = x if fused_ln1 else rms_norm(x, blk["ln1"], eps)
         o_seg, cache = df.split_token_attention(
-            spec, rms_norm(x, blk["ln1"], eps), w, cache, cache_len,
+            spec, x_in, w, cache, cache_len,
             window=window, attn_softcap=cfg.attn_softcap,
-            rope_theta=cfg.rope_theta)
+            rope_theta=cfg.rope_theta, norm_eps=eps)
         a = o_seg if isinstance(w, df.PackedSplitTokenWeights) \
             else ctx.gather_cluster(o_seg, axis=1)
+    # Fused block tail: dense-FFN attention blocks on the prepacked Pallas
+    # path run post_ln1 + both residual adds + ln2 + the whole FFN as the
+    # layer's SECOND (and last) kernel launch; the activation psum_model
+    # is replaced by one fused ClusterReduce (DESIGN.md §7).
+    if isinstance(blk.get("ffn"), df.PackedFFNWeights) and enc_kv is None:
+        return _fused_ffn_tail(ctx, cfg, scfg, blk, x, a, blk["ffn"]), cache
     if "post_ln1" in blk:
         a = rms_norm(a, blk["post_ln1"], eps)
     x = x + a

@@ -21,18 +21,16 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.configs.base import (ATTN_GLOBAL, ATTN_LOCAL, RECURRENT, RWKV6,
+from repro.configs.base import (ATTN_LOCAL, RECURRENT, RWKV6,
                                 ModelConfig)
 from repro.core import dataflow as df
-from repro.models import attention as attn_mod
 from repro.models import rglru as rglru_mod
 from repro.models import rwkv6 as rwkv_mod
 from repro.models.ctx import ParallelCtx
 from repro.models.layers import (EmbedParams, embed_lookup, ffn_apply,
                                  lm_head_logits, rms_norm, softcap)
 from repro.models.moe import MoEParams, moe_apply
-from repro.models.transformer import (apply_block, cross_attention, encode,
-                                      unwrap_local)
+from repro.models.transformer import apply_block, encode, unwrap_local
 from repro.serving.engine import (ServeConfig, _check_not_param_pair,
                                   greedy_sample)
 

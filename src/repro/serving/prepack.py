@@ -38,9 +38,11 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ModelConfig
-from repro.core.dataflow import (MLAWeights, PackedMLAWeights,
-                                 PackedSplitTokenWeights, SplitTokenWeights)
+from repro.core.dataflow import (MLAWeights, PackedFFNWeights,
+                                 PackedMLAWeights, PackedSplitTokenWeights,
+                                 SplitTokenWeights)
 from repro.models.attention import AttnParams, MLAAttnParams
+from repro.models.layers import FFNParams
 from repro.models.transformer import Layout
 
 PyTree = Any
@@ -79,7 +81,8 @@ def _col_tile(x: jax.Array, hs: int, n: int, axis: int) -> jax.Array:
     return g.reshape((hs * n,) + g.shape[2:])
 
 
-def _pack_attn(cfg: ModelConfig, lay: Layout, backend: str, a: AttnParams):
+def _pack_attn(cfg: ModelConfig, lay: Layout, backend: str, a: AttnParams,
+               ln1=None):
     hs, n = lay.heads_sub, lay.cluster
     if backend != "pallas":
         # XLA dataflow keeps the train-layout segments; only the rank
@@ -107,10 +110,13 @@ def _pack_attn(cfg: ModelConfig, lay: Layout, backend: str, a: AttnParams):
     # single-ClusterReduce combine) and the post-combine cluster gather
     # of the output vanishes.
     wo = a.wo.reshape(ms, q_loc, hd, a.wo.shape[-1])
-    return PackedSplitTokenWeights(wqkv=wqkv, wo=wo, bqkv=bqkv)
+    # Pre-attention RMSNorm scale rides the pack: the kernel normalizes
+    # the raw residual stream in VMEM (DESIGN.md §7).
+    return PackedSplitTokenWeights(wqkv=wqkv, wo=wo, bqkv=bqkv, ln1=ln1)
 
 
-def _pack_mla(cfg: ModelConfig, lay: Layout, backend: str, a: MLAAttnParams):
+def _pack_mla(cfg: ModelConfig, lay: Layout, backend: str, a: MLAAttnParams,
+              ln1=None):
     hs, n = lay.heads_sub, lay.cluster
     if backend != "pallas":
         return MLAWeights(wq=a.wq, wdkv=a.wdkv,
@@ -134,7 +140,8 @@ def _pack_mla(cfg: ModelConfig, lay: Layout, backend: str, a: MLAAttnParams):
     # output basis (summable by the flash merge, no post-combine gather).
     wproj = jnp.einsum("mqlv,mqvd->mqld", a.wuv.astype(jnp.float32),
                        wo4.astype(jnp.float32)).astype(a.wo.dtype)
-    return PackedMLAWeights(wq=wq2, wdkv=wdkv, wuk=a.wuk, wproj=wproj)
+    return PackedMLAWeights(wq=wq2, wdkv=wdkv, wuk=a.wuk, wproj=wproj,
+                            ln1=ln1)
 
 
 # ---------------------------------------------------------------------------
@@ -156,15 +163,59 @@ def map_blocks(fn, params: PyTree, *others: PyTree) -> PyTree:
     return out
 
 
+def _ffn_packable(cfg: ModelConfig, backend: str, blk: Dict[str, Any]) -> bool:
+    """The fused block-tail megakernel applies to dense-FFN self-attention
+    blocks on the Pallas backend.  MoE blocks keep the XLA expert
+    dispatch, enc-dec blocks interleave cross-attention between the
+    residual adds, and recurrent/RWKV blocks have their own fused steps
+    (DESIGN.md §4/§7)."""
+    return (backend == "pallas" and cfg.encoder is None
+            and isinstance(blk.get("attn"), (AttnParams, MLAAttnParams,
+                                             PackedSplitTokenWeights,
+                                             PackedMLAWeights))
+            and isinstance(blk.get("ffn"), FFNParams))
+
+
+def _pack_ffn(blk: Dict[str, Any]) -> PackedFFNWeights:
+    """Pure-aliasing FFN bundle: the Megatron train layout is already the
+    serve layout (column gate/up, FULL-width down rows), so no tensor is
+    re-materialized — the bundle just binds the fused norm scales."""
+    f: FFNParams = blk["ffn"]
+    return PackedFFNWeights(w_in=f.w_in, w_out=f.w_out, ln2=blk["ln2"],
+                            w_gate=f.w_gate,
+                            post_ln1=blk.get("post_ln1"))
+
+
+def bundle_ffn(cfg: ModelConfig, params: PyTree, *,
+               backend: str = "pallas") -> PyTree:
+    """Replace every packable dense-FFN entry with its
+    :class:`PackedFFNWeights` bundle — a structural pass (NamedTuple
+    wrapping of the existing buffers, zero copies), valid on param AND
+    spec trees.  Kept separate from the jitted attention pack so the FFN
+    bytes never round-trip through ``jax.jit`` (which would duplicate
+    them instead of aliasing — DESIGN.md §5)."""
+    def bb(blk, stacked):
+        if not _ffn_packable(cfg, backend, blk):
+            return blk
+        return dict(blk, ffn=_pack_ffn(blk))
+
+    return map_blocks(bb, params)
+
+
 def prepack_for_serving(cfg: ModelConfig, lay: Layout, params: PyTree,
                         *, backend: str = "pallas") -> PyTree:
     """Training-layout device-major params → serve-layout params.
 
     Replaces every self-attention block's ``attn`` entry with the
-    backend's packed form; every other leaf (FFN/MoE, norms, recurrent
-    blocks, embeddings, encoder, cross-attention) rides through
-    untouched.  Pure layout math — run it under ``jax.jit`` with
-    ``out_shardings`` to materialize device-major (launch/serve.py).
+    backend's packed form (carrying the fused pre-attention norm scale
+    on the Pallas backend) and — for dense-FFN attention blocks on the
+    Pallas backend — the ``ffn`` entry with the aliasing
+    :class:`PackedFFNWeights` bundle; every other leaf (MoE, norms,
+    recurrent blocks, embeddings, encoder, cross-attention) rides
+    through untouched.  Pure layout math — run it under ``jax.jit`` with
+    ``out_shardings`` to materialize device-major (launch/serve.py jits
+    only the attention subtree and applies :func:`bundle_ffn` outside
+    the jit, so FFN bytes stay aliased).
     """
     def pack_block(blk: Dict[str, Any], stacked: bool) -> Dict[str, Any]:
         a = blk.get("attn")
@@ -175,11 +226,11 @@ def prepack_for_serving(cfg: ModelConfig, lay: Layout, params: PyTree,
         else:
             return blk
         out = dict(blk)
-        out["attn"] = (jax.vmap(fn, in_axes=1, out_axes=1)(a) if stacked
-                       else fn(a))
+        out["attn"] = (jax.vmap(fn, in_axes=(1, 1), out_axes=1)(
+            a, blk["ln1"]) if stacked else fn(a, blk["ln1"]))
         return out
 
-    return map_blocks(pack_block, params)
+    return bundle_ffn(cfg, map_blocks(pack_block, params), backend=backend)
 
 
 def prepack_abstract(cfg: ModelConfig, lay: Layout, params_abs: PyTree,
@@ -190,23 +241,27 @@ def prepack_abstract(cfg: ModelConfig, lay: Layout, params_abs: PyTree,
 
 
 def attn_subtree(params: PyTree) -> PyTree:
-    """``{"blocks": …, "tail": …}`` carrying ONLY the attention entries —
-    the subset the pack actually transforms.  launch/serve.py jits the
-    pack over this subtree so the serve tree duplicates no FFN/MoE/
-    embedding bytes: everything else is aliased from the training tree
-    (:func:`merge_packed`)."""
+    """``{"blocks": …, "tail": …}`` carrying ONLY the attention entries
+    (plus their pre-attention norm scale, which the Pallas pack fuses
+    into the kernel) — the subset the jitted pack actually transforms.
+    launch/serve.py jits the pack over this subtree so the serve tree
+    duplicates no FFN/MoE/embedding bytes: everything else is aliased
+    from the training tree (:func:`merge_packed`; the FFN bundle is the
+    separate no-copy :func:`bundle_ffn` pass)."""
     def pick(blk, stacked):
-        return {"attn": blk["attn"]} if "attn" in blk else {}
+        if "attn" not in blk:
+            return {}
+        return {"attn": blk["attn"], "ln1": blk["ln1"]}
     return map_blocks(pick, {"blocks": params["blocks"],
                              "tail": params["tail"]})
 
 
 def merge_packed(params: PyTree, packed_attn: PyTree) -> PyTree:
-    """Serve tree = packed attention entries + every other leaf ALIASED
+    """Serve tree = packed subtree entries + every other leaf ALIASED
     from the training tree (same buffers, no duplication).  Works on
     spec trees too.  The residual memory cost of serving with prepack is
     therefore only the packed attention tensors themselves (DESIGN.md
     §5)."""
     def mb(tb, pb, stacked):
-        return dict(tb, attn=pb["attn"]) if "attn" in pb else tb
+        return dict(tb, **pb) if pb else tb
     return map_blocks(mb, params, packed_attn)

@@ -19,21 +19,19 @@ gradient scale is batch-size invariant.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ModelConfig
-from repro.distributed.compression import (EFState, compressed_psum,
-                                           init_ef_state, plain_psum_mean)
+from repro.distributed.compression import compressed_psum, init_ef_state
 from repro.models.ctx import ParallelCtx
 from repro.models.transformer import loss_fn, sync_grads, unwrap_local
 from repro.training.optimizer import (OptConfig, clip_by_global_norm,
-                                      global_norm, opt_init, opt_update)
+                                      opt_init, opt_update)
 
 PyTree = Any
 

@@ -2,7 +2,6 @@
 must match ``backend="xla"`` decode outputs — dataflow-level to ≤1e-2
 (bf16 caches), and engine-level greedy tokens exactly — for a GQA config
 (bias + softcap + sliding-window ring cache) and an MLA config."""
-import numpy as np
 import pytest
 
 from helpers import run_multidevice

@@ -1,6 +1,5 @@
 """Checkpoint manager: atomic commit, keep-k, async, resume, elastic."""
 import os
-import time
 
 import jax
 import jax.numpy as jnp

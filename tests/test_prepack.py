@@ -66,7 +66,8 @@ def _small_gqa_setup(cluster=2):
 
 
 def test_prepack_tree_gqa_shapes_and_passthrough():
-    from repro.core.dataflow import (PackedSplitTokenWeights,
+    from repro.core.dataflow import (PackedFFNWeights,
+                                     PackedSplitTokenWeights,
                                      SplitTokenWeights)
     from repro.serving.prepack import prepack_for_serving
     cfg, lay, params = _small_gqa_setup(cluster=2)
@@ -82,9 +83,19 @@ def test_prepack_tree_gqa_shapes_and_passthrough():
     assert a.wqkv.shape == (ms, G, cfg.d_model, (q_loc + 2 * kv_loc) * hd)
     assert a.wo.shape == (ms, G, q_loc, hd, cfg.d_model)
     assert a.bqkv.shape == (ms, G, (q_loc + 2 * kv_loc) * hd)
+    # the pre-attention norm scale rides the pack (fused in-kernel norm)
+    assert a.ln1.shape == (ms, G, cfg.d_model)
     # non-attention leaves ride through untouched (same objects)
     assert packed["embed"] is params["embed"]
-    assert packed["blocks"][0]["ffn"] is params["blocks"][0]["ffn"]
+    # dense FFN: the bundle is PURE aliasing — every weight field IS the
+    # training tree's buffer (full-width down rows are already the serve
+    # layout), only the fused norm scales are bound alongside
+    pf = packed["blocks"][0]["ffn"]
+    tf = params["blocks"][0]["ffn"]
+    assert isinstance(pf, PackedFFNWeights)
+    assert pf.w_in is tf.w_in and pf.w_out is tf.w_out
+    assert pf.w_gate is tf.w_gate
+    assert pf.ln2 is params["blocks"][0]["ln2"]
 
     # xla serve layout: plain dataflow weights with the wo tile pre-sliced
     packed_x = prepack_for_serving(cfg, lay, params, backend="xla")
@@ -92,6 +103,8 @@ def test_prepack_tree_gqa_shapes_and_passthrough():
     assert isinstance(ax, SplitTokenWeights)
     assert ax.wo.shape == (ms, G, q_loc * hd, cfg.d_model // n)
     assert ax.wq is params["blocks"][0]["attn"].wq
+    # the xla path keeps the unfused FFN
+    assert packed_x["blocks"][0]["ffn"] is params["blocks"][0]["ffn"]
 
 
 def test_prepack_mla_fold_matches_manual():
@@ -234,6 +247,55 @@ def test_counters_engine_zero_weight_movement():
     assert counts["adapter"].get("weight_slice", 0) == 0, counts
     print("ENGINE COUNTS OK")
     """)
+
+
+@pytest.mark.multidevice
+def test_counters_fullblock_two_launches_zero_ffn_psum():
+    """Full-block decode fusion proof (DESIGN.md §7): the fused prepacked
+    decode step traces with exactly TWO ``pallas_call`` launches per
+    dense-FFN attention layer (fused attention + fused FFN tail) and
+    exactly ONE activation ``psum_model`` per STEP (the embedding lookup
+    — zero per-layer FFN psums, replaced by one fused ClusterReduce per
+    layer); the unfused XLA step pays one FFN psum per layer on top."""
+    run_multidevice("""
+    from repro.configs import get_config, reduced
+    from repro.core import tracecount
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.serve import build_engine
+
+    # llama2: dense gated FFN, 1-position pattern; gemma2: ring + softcap,
+    # 2-position pattern — the count scales with distinct layer positions
+    for arch in ("llama2-7b", "gemma2-27b"):
+        cfg = reduced(get_config(arch))
+        period = len(cfg.block_pattern)
+        mesh = make_test_mesh()
+        counts = {}
+        for label, kw in (("fused", dict(backend="pallas", interpret=True)),
+                          ("xla", dict(backend="xla"))):
+            params, pf, dec, state, lay, scfg = build_engine(
+                cfg, mesh, max_seq=32, batch_global=4, **kw)
+            tok = jnp.zeros((4,), jnp.int32)
+            with tracecount.counting() as c:
+                jax.eval_shape(dec, params["serve"], state, tok)
+            counts[label] = dict(c)
+            print(arch, label, counts[label])
+        f = counts["fused"]
+        # exactly 2 launches per traced layer position: fused attention +
+        # fused FFN tail (the scan re-dispatches the same pair per group)
+        assert f.get("pallas_kernel") == 2 * period, (arch, f)
+        assert f.get("ffn_pallas_kernel") == period, (arch, f)
+        # zero per-layer activation psums: the only psum_model in the
+        # whole step is the embedding assembly
+        assert f.get("psum_model") == 1, (arch, f)
+        assert f.get("ffn_cluster_reduce") == period, (arch, f)
+        # no weight movement either (PR-2 invariant still holds)
+        assert f.get("weight_gather", 0) == 0, (arch, f)
+        assert f.get("weight_slice", 0) == 0, (arch, f)
+        # the unfused step pays embed + one FFN psum per layer position
+        assert counts["xla"].get("psum_model") == 1 + period, (arch, counts)
+        assert counts["xla"].get("pallas_kernel", 0) == 0, (arch, counts)
+    print("FULL-BLOCK COUNTS OK")
+    """, timeout=1200)
 
 
 # ---------------------------------------------------------------------------

@@ -9,7 +9,6 @@ same API subset).  CI pins determinism either way via the registered
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st

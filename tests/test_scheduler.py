@@ -14,7 +14,6 @@
   param pair raises a ValueError naming the fix.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
