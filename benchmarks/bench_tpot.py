@@ -40,6 +40,8 @@ from repro.configs import get_config, reduced
 from repro.core import tracecount
 from repro.core.autotune import (ffn_cluster_reduce_bytes_per_step,
                                  ffn_psum_bytes_per_step,
+                                 head_hbm_logits_bytes_per_step,
+                                 head_ici_bytes_per_step,
                                  weight_gather_bytes_per_step)
 from repro.launch.mesh import make_test_mesh
 from repro.launch.serve import build_engine
@@ -187,10 +189,13 @@ def _bench_variant(cfg, arch, label, kw, *, max_seq, batch, prompt_len,
         backend=scfg.backend, prepack=scfg.prepack)
     ffn_psum_bytes = ffn_psum_bytes_per_step(cfg, **byte_kw)
     ffn_reduce_bytes = ffn_cluster_reduce_bytes_per_step(cfg, **byte_kw)
+    head_ici = head_ici_bytes_per_step(cfg, **byte_kw)
+    head_hbm = head_hbm_logits_bytes_per_step(cfg, **byte_kw)
     rows.append(row(f"tpot_{label}_{arch}", t,
                     f"cluster={lay.cluster},prepack={scfg.prepack},"
                     f"ici_weight_gather_bytes={gather_bytes:.0f},"
                     f"ffn_psum_bytes={ffn_psum_bytes:.0f},"
+                    f"head_hbm_logits_bytes={head_hbm:.0f},"
                     f"pallas_launches={launches},psum_model={psums}"))
     sweep = {}
     for L in cache_lens:
@@ -212,6 +217,12 @@ def _bench_variant(cfg, arch, label, kw, *, max_seq, batch, prompt_len,
         # tree-traffic, and the measured trace-time launch/psum counts
         "ffn_psum_ici_bytes_per_step": ffn_psum_bytes,
         "ffn_fused_reduce_ici_bytes_per_step": ffn_reduce_bytes,
+        # LM-head/sampling-tail evidence (DESIGN.md §7 L5): the modeled
+        # per-chip HBM bytes of the [B, V_loc] logits tensor the fused
+        # head deletes (0 on the prepacked Pallas path) and the (value,
+        # index) pair tree-reduce ICI traffic both tails pay
+        "head_hbm_logits_bytes_per_step": head_hbm,
+        "head_ici_bytes_per_step": head_ici,
         "pallas_launches_per_step": launches,
         "psum_model_per_step": psums,
     }

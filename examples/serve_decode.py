@@ -72,7 +72,18 @@ def main():
         print("note: prepack unifies the combine — both rows ran the "
               "fused single-tree merge")
     print(f"paper-faithful vs fused-merge token agreement: {agree:.3f}")
-    print("sample:", outs[True][0][:12])
+    # Print the sample through the SERVE view of the head — the (table,
+    # ln) decode actually sampled with.  With --prepack the fused head
+    # bundle is what ran, not the train tree; head_table_np also
+    # smoke-asserts the serve view aliases the train-layout head bytes
+    # (reaching into params["train"] was the footgun this replaces).
+    from repro.serving.prepack import head_table_np
+    table = head_table_np(cfg, params)
+    sample = outs[True][0][:12]
+    assert (sample >= 0).all() and (sample < table.shape[0]).all(), sample
+    norms = np.linalg.norm(table[sample], axis=-1)
+    print("sample:", sample)
+    print("serve-view head rows |e| of sample:", np.round(norms, 3))
 
 
 if __name__ == "__main__":

@@ -75,10 +75,21 @@ def main():
     print(f"mean slot occupancy: "
           f"{np.mean(sched.occupancy):.2f}")
     print(f"per-slot attend-block work: {sched.work_blocks()}")
+    # Token printout goes through the SERVE view of the head — with
+    # --prepack the fused head bundle is what sampling consumed, not the
+    # train tree (reaching into eng.params["train"] was the footgun);
+    # head_table_np smoke-asserts the serve view aliases the train-
+    # layout head bytes on the way.
+    from repro.serving.prepack import head_table_np
+    table = head_table_np(cfg, eng.params)
     for rid in sorted(results):
         r = results[rid]
+        assert all(0 <= t < table.shape[0] for t in r.tokens), r.tokens
+        norms = np.linalg.norm(table[np.asarray(r.tokens, np.int32)],
+                               axis=-1) if r.tokens else np.array([])
         print(f"req {rid}: slot {r.slot} ticks "
-              f"[{r.admit_tick}, {r.finish_tick}] tokens {r.tokens}")
+              f"[{r.admit_tick}, {r.finish_tick}] tokens {r.tokens} "
+              f"|e|={np.round(norms, 2)}")
 
 
 if __name__ == "__main__":

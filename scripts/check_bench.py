@@ -1,0 +1,142 @@
+#!/usr/bin/env python
+"""CI perf-regression gate for ``BENCH_tpot.json``.
+
+Diffs the DETERMINISTIC columns of a fresh bench report against the
+committed baseline (``benchmarks/BENCH_baseline.json``): trace-time
+launch/psum counts and the modeled ICI/HBM byte columns.  Wall-clock
+columns (``tpot_us`` and friends) are machine-dependent noise on CI
+runners and are never gated.
+
+Per-column policy:
+
+* **counters** (``pallas_launches_per_step``, ``psum_model_per_step``)
+  must match the baseline EXACTLY in both directions — an unexpected
+  drop is as suspicious as a rise (it usually means a dispatch stopped
+  reaching the fused path at all).
+* **byte columns** fail only when they INCREASE beyond the per-column
+  relative tolerance; decreases are improvements, reported in the delta
+  table and accepted (update the baseline in the same PR to lock them
+  in).
+* every (arch × variant × column) cell present in the baseline must be
+  present in the current report — a vanished cell is a regression (a
+  variant silently dropped out of the bench).  Cells only in the
+  current report are listed as NEW and accepted.
+
+Exit status 0 on pass, 1 on regression; the delta table always prints.
+
+Usage::
+
+    python scripts/check_bench.py BENCH_tpot.json benchmarks/BENCH_baseline.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List, Tuple
+
+# column → (kind, relative tolerance).  kind "count" = exact both ways;
+# kind "bytes" = one-sided (increase beyond tol fails).
+GATED_COLUMNS: Dict[str, Tuple[str, float]] = {
+    "pallas_launches_per_step": ("count", 0.0),
+    "psum_model_per_step": ("count", 0.0),
+    "ici_weight_gather_bytes_per_step": ("bytes", 0.01),
+    "ffn_psum_ici_bytes_per_step": ("bytes", 0.01),
+    "ffn_fused_reduce_ici_bytes_per_step": ("bytes", 0.01),
+    "head_ici_bytes_per_step": ("bytes", 0.01),
+    "head_hbm_logits_bytes_per_step": ("bytes", 0.01),
+}
+
+_ABS_EPS = 1e-9      # float-repr jitter floor for the bytes columns
+
+
+def _cells(report: dict):
+    """Yield ((arch, variant), column, value) for every gated column."""
+    for arch, entry in sorted(report.get("archs", {}).items()):
+        for variant, d in sorted(entry.get("variants", {}).items()):
+            for col in GATED_COLUMNS:
+                if col in d:
+                    yield (arch, variant), col, float(d[col])
+
+
+def diff_reports(current: dict, baseline: dict) -> List[dict]:
+    """Row per (cell × column): status ok | improved | NEW | REGRESSION."""
+    cur = {(cell, col): v for cell, col, v in _cells(current)}
+    base = {(cell, col): v for cell, col, v in _cells(baseline)}
+    rows = []
+    for key in sorted(set(base) | set(cur)):
+        (arch, variant), col = key
+        kind, tol = GATED_COLUMNS[col]
+        b, c = base.get(key), cur.get(key)
+        if b is None:
+            status = "NEW"
+        elif c is None:
+            status = "REGRESSION (cell vanished)"
+        elif kind == "count":
+            status = "ok" if c == b else "REGRESSION (count changed)"
+        else:
+            if c > b * (1.0 + tol) + _ABS_EPS:
+                status = "REGRESSION (bytes up)"
+            elif c < b - _ABS_EPS:
+                status = "improved"
+            else:
+                status = "ok"
+        rows.append({"arch": arch, "variant": variant, "column": col,
+                     "baseline": b, "current": c, "status": status})
+    return rows
+
+
+def format_table(rows: List[dict]) -> str:
+    def fmt(v):
+        if v is None:
+            return "-"
+        return f"{v:.0f}" if float(v) == int(v) else f"{v:.1f}"
+
+    widths = [
+        max([len("arch/variant")] + [len(f"{r['arch']}/{r['variant']}")
+                                     for r in rows]),
+        max([len("column")] + [len(r["column"]) for r in rows]),
+        max([len("baseline")] + [len(fmt(r["baseline"])) for r in rows]),
+        max([len("current")] + [len(fmt(r["current"])) for r in rows]),
+    ]
+    head = (f"{'arch/variant':<{widths[0]}}  {'column':<{widths[1]}}  "
+            f"{'baseline':>{widths[2]}}  {'current':>{widths[3]}}  status")
+    lines = [head, "-" * len(head)]
+    for r in rows:
+        lines.append(
+            f"{r['arch'] + '/' + r['variant']:<{widths[0]}}  "
+            f"{r['column']:<{widths[1]}}  "
+            f"{fmt(r['baseline']):>{widths[2]}}  "
+            f"{fmt(r['current']):>{widths[3]}}  {r['status']}")
+    return "\n".join(lines)
+
+
+def check(current: dict, baseline: dict) -> Tuple[bool, str]:
+    """(passed, delta table) — the gate used by CI and the tests."""
+    rows = diff_reports(current, baseline)
+    table = format_table(rows)
+    n_reg = sum("REGRESSION" in r["status"] for r in rows)
+    n_imp = sum(r["status"] == "improved" for r in rows)
+    summary = (f"\n{len(rows)} gated cells: {n_reg} regressions, "
+               f"{n_imp} improvements")
+    if n_imp and not n_reg:
+        summary += ("\nimprovements detected — refresh "
+                    "benchmarks/BENCH_baseline.json to lock them in")
+    return n_reg == 0, table + summary
+
+
+def main(argv: List[str]) -> int:
+    if len(argv) != 3:
+        print(__doc__)
+        return 2
+    with open(argv[1]) as f:
+        current = json.load(f)
+    with open(argv[2]) as f:
+        baseline = json.load(f)
+    passed, report = check(current, baseline)
+    print(report)
+    print("\nbench gate:", "PASS" if passed else "FAIL")
+    return 0 if passed else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

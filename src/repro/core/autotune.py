@@ -142,6 +142,11 @@ class ServePlan:
     # Pre-fused-FFN table entries lack this field and self-heal by
     # re-tuning (same schema-drift path as the prepack field).
     block_f: int
+    # vocab tile of the fused LM-head/sampling kernel (kernels/fused_head,
+    # DESIGN.md §7); fitted down to a divisor of V_loc at the call site.
+    # Pre-fused-head table entries lack this field and self-heal by
+    # re-tuning through the same TypeError path.
+    block_v: int
     est_seconds: float
 
 
@@ -214,6 +219,32 @@ def pick_block_f(cfg: ModelConfig) -> int:
             break
         best = b
     while best > 8 and best * d * tiles * bpe * 2 > VMEM_BUDGET:
+        best //= 2
+    return best
+
+
+_BLOCK_V_CANDIDATES = (512, 1024, 2048, 4096)
+
+
+def pick_block_v(cfg: ModelConfig) -> int:
+    """Vocab tile for the fused LM-head/sampling kernel (kernels/fused_head).
+
+    Each grid step streams one ``[bv, D]`` tile of the (possibly tied)
+    embedding table in the model dtype; prefer the largest tile whose
+    double-buffered weight stream fits the VMEM budget (fewer grid
+    steps ⇒ less fixed per-step overhead; the ``[B, D]`` normed-input
+    scratch and the ``[B, 1]`` running (max, argmax) partials are
+    batch-small and deliberately outside the model).  The call site
+    fits the pick down to a divisor of the local vocab shard
+    (``_fit_block_s``)."""
+    d = cfg.d_model
+    bpe = 2
+    best = _BLOCK_V_CANDIDATES[0]
+    for b in _BLOCK_V_CANDIDATES:
+        if b * d * bpe * 2 > VMEM_BUDGET:           # ×2: double-buffered
+            break
+        best = b
+    while best > 8 and best * d * bpe * 2 > VMEM_BUDGET:
         best //= 2
     return best
 
@@ -337,6 +368,49 @@ def ffn_cluster_reduce_bytes_per_step(cfg: ModelConfig, *, model_axis: int,
             * prim.traffic_reduce(size, model_axis))
 
 
+def _fused_head_active(backend: str, prepack: bool) -> bool:
+    """Mirror of the runtime dispatch in ``engine.decode_step``: the
+    fused LM-head/sampling tail runs whenever the serve tree carries the
+    head bundle — the prepacked Pallas path (``prepack.bundle_head``).
+    Assumes ``build_engine_full``'s default ``fuse_head=True``; an
+    ablation engine built with ``fuse_head=False`` runs the loose tail
+    and pays the logits bytes this model would report as 0."""
+    return backend == "pallas" and prepack
+
+
+def head_hbm_logits_bytes_per_step(cfg: ModelConfig, *, model_axis: int,
+                                   batch: int, backend: str, prepack: bool,
+                                   bytes_per_el: int = 4) -> float:
+    """Modeled per-chip HBM bytes of the ``[B, V_loc]`` logits tensor
+    the unfused LM-head tail materializes every decode step — the
+    single largest activation the step writes, and the one the fused
+    head kernel deletes (greedy only ever needed the per-slot (max,
+    argmax)).  Reads 0 on the fused path; ``bytes_per_el`` defaults to
+    4 (``lm_head_logits`` pins f32 logits).  Tracked per variant in
+    BENCH_tpot.json and gated against the committed baseline by
+    ``scripts/check_bench.py``."""
+    if _fused_head_active(backend, prepack):
+        return 0.0
+    v_loc = (cfg.vocab_size + model_axis - 1) // model_axis
+    return float(batch * v_loc * bytes_per_el)
+
+
+def head_ici_bytes_per_step(cfg: ModelConfig, *, model_axis: int,
+                            batch: int, backend: str, prepack: bool,
+                            bytes_per_el: int = 4) -> float:
+    """Modeled per-step ICI bytes of the greedy (value, index) pair tree
+    reduce over the vocab shards (paper tree schedule; f32 value +
+    int32 index per slot).  Identical on the fused and unfused tails by
+    construction — the fused head changes WHERE the partials come from
+    (streaming VMEM tiles vs an HBM logits tensor), not the collective
+    — so a regression in this column means the reduce schedule itself
+    changed."""
+    if model_axis <= 1:
+        return 0.0
+    pair = batch * bytes_per_el * 2          # f32 value + int32 index
+    return prim.traffic_reduce(float(pair), model_axis)
+
+
 def tune_serving(cfg: ModelConfig, *, seq_len: int, batch: int,
                  model_axis: int = 16, backend: str = "auto",
                  prepack="auto",
@@ -373,6 +447,7 @@ def tune_serving(cfg: ModelConfig, *, seq_len: int, batch: int,
         block_s=pick_block_s(cfg, bucket, best.cluster_size, batch),
         prepack=pp,
         block_f=pick_block_f(cfg),
+        block_v=pick_block_v(cfg),
         est_seconds=best.est_seconds,
     )
     table[key] = asdict(plan)

@@ -423,6 +423,27 @@ class PackedFFNWeights(NamedTuple):
     post_ln1: Optional[jax.Array] = None
 
 
+class PackedHeadWeights(NamedTuple):
+    """Serve-layout LM-head/sampling-tail bundle for the fused head
+    kernel (kernels/fused_head, DESIGN.md §7).
+
+    PURE aliasing, like :class:`PackedFFNWeights`: ``table`` IS the
+    training tree's vocab-sharded ``embed`` buffer (``tie_embeddings``)
+    or ``lm_head`` buffer, and ``ln`` IS the ``final_norm`` scale — the
+    bundle binds them for the fused tail without materializing a byte
+    (``serving/prepack.py:bundle_head`` runs outside the jitted
+    attention pack).  The kernel streams ``[block_v, D]`` tiles of
+    ``table``, normalizes the raw residual stream in VMEM, and emits
+    only per-slot ``(max, argmax)`` greedy partials — the ``[B, V]``
+    logits never touch HBM.
+
+    ``table`` [V_loc, D] vocab shard · ``ln`` [D] final RMSNorm scale.
+    """
+
+    table: jax.Array
+    ln: jax.Array
+
+
 def split_token_attention(
     spec: ClusterSpec,
     x: jax.Array,                 # [B, D] full hidden states (paper: every

@@ -28,14 +28,25 @@ Labels used across the codebase:
   combine on the unfused path).
 * ``ffn_cluster_reduce`` — the fused ClusterReduce that replaces the
   per-layer FFN ``psum_model`` on the full-block path (DESIGN.md §7).
+* ``head_pallas_kernel`` — the fused LM-head/sampling tail kernel's
+  launches (a subset of ``pallas_kernel``; kernels/fused_head).
+* ``head_cluster_reduce`` — the single (value, index) pair tree reduce
+  that merges the fused head's per-shard greedy partials.
+* ``lm_head_logits`` — materializations of the ``[B, V_loc]`` logits
+  tensor (``models.layers.lm_head_logits``).  The fused head path must
+  trace ZERO of these: the logits exist only as VMEM tiles inside the
+  kernel, never in HBM.
 
-Evidence targets (tests/test_prepack.py): the prepacked Pallas path
-traces with ``weight_gather == weight_slice == 0`` and exactly one
-``pallas_kernel`` + one ``tree_reduce`` on the cluster axis per
-attention layer; the FULL-block path (fused FFN) traces with exactly
-TWO ``pallas_kernel`` per dense-FFN attention layer and ``psum_model
-== 1`` per decode step (the embedding lookup — zero per-layer
-activation psums).
+Evidence targets (tests/test_prepack.py, tests/test_fused_head.py):
+the prepacked Pallas path traces with ``weight_gather == weight_slice
+== 0`` and exactly one ``pallas_kernel`` + one ``tree_reduce`` on the
+cluster axis per attention layer; the FULL-block path (fused FFN)
+traces with exactly TWO ``pallas_kernel`` per dense-FFN attention
+layer and ``psum_model == 1`` per decode step (the embedding lookup —
+zero per-layer activation psums); the fused-head step adds exactly ONE
+``head_pallas_kernel`` + ONE ``head_cluster_reduce`` and ZERO
+``lm_head_logits`` — embed psum + 2 launches/layer + 1 head launch +
+1 head reduce is the complete dense decode step.
 
 Besides the trace-time counters, this module hosts the RUNTIME work
 counters for ragged decode (:func:`live_attend_blocks`): a pure-jnp

@@ -21,6 +21,7 @@ def tpu_compiler_params(**kwargs):
 from repro.kernels.fused_decode.ops import fused_decode, rope_at  # noqa: F401,E402
 from repro.kernels.flash_decode.ops import flash_decode  # noqa: F401,E402
 from repro.kernels.fused_ffn.ops import fused_ffn  # noqa: F401,E402
+from repro.kernels.fused_head.ops import fused_head  # noqa: F401,E402
 from repro.kernels.fused_mla_decode.ops import fused_mla_decode  # noqa: F401,E402
 from repro.kernels.rglru_scan.ops import rglru_scan  # noqa: F401,E402
 from repro.kernels.rwkv6_scan.ops import rwkv6_scan  # noqa: F401,E402

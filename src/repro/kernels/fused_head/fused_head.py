@@ -1,0 +1,149 @@
+"""Fused LM-head/sampling tail: final RMSNorm + vocab-tiled logits +
+softcap + streaming greedy partials in ONE ``pallas_call`` (DESIGN.md §7).
+
+After the last fused layer, the decode step still ended with a loose XLA
+tail: final ``rms_norm``, a full ``[B, V_loc]`` logits tensor
+materialized in HBM, ``softcap``, and the local max/argmax feeding
+``greedy_sample``'s (value, index) tree reduce.  The logits tensor is
+the single largest activation a decode step writes — and it is never
+needed: greedy sampling only consumes the per-slot running
+``(max_value, argmax_index)``.  This kernel runs the whole tail per
+vocab shard:
+
+* grid = (V_loc / block_v,), sequential.  Step 0 additionally computes
+  the *prologue* in VMEM scratch: the final RMSNorm of the raw residual
+  stream ``h = rms(x, ln)`` with a model-dtype round-trip, so the fused
+  value is bit-identical to the unfused ``rms_norm`` (the same contract
+  as the in-kernel ``ln1`` of the fused attention kernels).
+* every step streams one ``[block_v, D]`` tile of the (possibly tied)
+  embedding table, computes the logit tile ``h @ tileᵀ`` in f32 —
+  exactly ``lm_head_logits``'s pinned f32 staging, so fused and unfused
+  logits are bit-identical — applies ``logit_softcap`` in-tile (f32),
+  and folds the tile's ``(max, argmax)`` into ``[B]`` running scratch;
+  the ``[B, V]`` logits NEVER exist outside one VMEM tile.
+* the last step writes the per-shard ``(max_value, argmax_local_index)``
+  partials — two ``[B, 1]`` vectors, the only HBM output.
+
+**Tie-breaking.**  Within a tile the argmax takes the LOWEST index
+among equal maxima (``jnp.argmax`` semantics); across tiles the merge
+is strictly ``>``, so earlier tiles win ties — together: lowest local
+index among the shard's maxima, exactly the unfused
+``jnp.argmax(logits)``.  The caller lifts the local index to the
+global vocab (``+ shard · V_loc``) and merges shards with ONE tree
+ClusterReduce on (value, index) pairs using the same
+lowest-index-wins operator (``engine._greedy_pair_merge``), so the
+fused tail reproduces ``greedy_sample`` token-exactly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import tracecount
+from repro.kernels import tpu_compiler_params
+
+_INT32_MAX = 2 ** 31 - 1
+
+
+def _kernel(x_ref, tab_ref, ln_ref,
+            mx_ref, ix_ref,
+            h_s, m_s, i_s,
+            *, n_v: int, bv: int, eps: float, cap: float):
+    j = pl.program_id(0)
+
+    # ---------------- prologue: final RMSNorm in VMEM -------------------
+    @pl.when(j == 0)
+    def _prologue():
+        xf = x_ref[...].astype(jnp.float32)
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        h = xf * jax.lax.rsqrt(var + eps) \
+            * (1.0 + ln_ref[...].astype(jnp.float32))
+        # model-dtype round-trip: bit-identical to the unfused rms_norm
+        h_s[...] = h.astype(x_ref.dtype).astype(jnp.float32)
+        m_s[...] = jnp.full_like(m_s[...], -jnp.inf)
+        i_s[...] = jnp.zeros_like(i_s[...])
+
+    # ---------------- one vocab tile per grid step ----------------------
+    # logits stay in f32, matching `lm_head_logits`'s pinned staging (the
+    # rounded-rms h against the f32-upcast table, softcap in f32) — so
+    # fused-vs-unfused values are bit-identical and greedy is token-exact
+    h = h_s[...]
+    lf = jax.lax.dot_general(h, tab_ref[...].astype(jnp.float32),
+                             (((1,), (1,)), ((), ())))          # [B, bv]
+    if cap > 0:
+        lf = jnp.tanh(lf / cap) * cap
+    ids = jax.lax.broadcasted_iota(jnp.int32, lf.shape, 1) + j * bv
+    t_max = jnp.max(lf, axis=-1, keepdims=True)                 # [B, 1]
+    # lowest index among the tile's maxima (jnp.argmax semantics)
+    t_arg = jnp.min(jnp.where(lf == t_max, ids, _INT32_MAX),
+                    axis=-1, keepdims=True)
+    better = t_max > m_s[...]          # strict: earlier tiles win ties
+    i_s[...] = jnp.where(better, t_arg, i_s[...])
+    m_s[...] = jnp.where(better, t_max, m_s[...])
+
+    # ---------------- epilogue: write the [B] partials once -------------
+    @pl.when(j == n_v - 1)
+    def _epilogue():
+        mx_ref[...] = m_s[...]
+        ix_ref[...] = i_s[...]
+
+
+def fused_head_block(
+    x: jax.Array,                     # [B, D] raw residual stream
+    table: jax.Array,                 # [V_loc, D] vocab-sharded head table
+                                      # (aliases the embed table when tied)
+    ln: jax.Array,                    # [D] final RMSNorm scale
+    *,
+    eps: float = 1e-6,
+    logit_softcap: float = 0.0,
+    block_v: int = 1024,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns ``(max_value [B] f32, argmax_local_index [B] int32)`` over
+    this rank's vocab shard — the streaming greedy partials.  The caller
+    adds ``shard · V_loc`` and tree-reduces (value, index) pairs across
+    the model axis; ``[B, V]`` logits never touch HBM.
+    """
+    tracecount.bump("pallas_kernel")
+    tracecount.bump("head_pallas_kernel")
+    B, D = x.shape
+    V_loc = table.shape[0]
+    bv = min(block_v, V_loc)
+    assert V_loc % bv == 0, (V_loc, bv)
+    n_v = V_loc // bv
+    ln_op = jnp.asarray(ln, jnp.float32).reshape(1, D)
+
+    kernel = functools.partial(_kernel, n_v=n_v, bv=bv, eps=eps,
+                               cap=float(logit_softcap or 0.0))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_v,),
+        in_specs=[
+            pl.BlockSpec((B, D), lambda j: (0, 0)),            # x
+            pl.BlockSpec((bv, D), lambda j: (j, 0)),           # table tile
+            pl.BlockSpec((1, D), lambda j: (0, 0)),            # ln
+        ],
+        out_specs=[
+            pl.BlockSpec((B, 1), lambda j: (0, 0)),
+            pl.BlockSpec((B, 1), lambda j: (0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((B, D), jnp.float32),                   # h (normed)
+            pltpu.VMEM((B, 1), jnp.float32),                   # running max
+            pltpu.VMEM((B, 1), jnp.int32),                     # running arg
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(x, table, ln_op)
+    return out[0][:, 0], out[1][:, 0]

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the fused LM-head/sampling tail.
+
+This IS the unfused engine composition per vocab shard —
+``rms_norm`` → ``lm_head_logits`` (f32 logits) → ``softcap`` → the
+local half of ``greedy_sample`` — so kernel-vs-ref equality is exactly
+the fused ≡ unfused token-exactness claim.  The full ``[B, V_loc]``
+logits the kernel never materializes exist only here.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm, softcap
+
+
+def fused_head_ref(
+    x: jax.Array, table: jax.Array, ln: jax.Array, *,
+    eps: float = 1e-6, logit_softcap: float = 0.0, **_,
+) -> Tuple[jax.Array, jax.Array]:
+    """``(max_value [B] f32, argmax_local_index [B] int32)`` over this
+    shard.  Mirrors ``lm_head_logits``'s pinned staging: the model-dtype
+    rounded ``rms_norm`` output against the f32-upcast table, softcap
+    in f32."""
+    h = rms_norm(x, ln, eps)
+    logits = jnp.matmul(h, table.T.astype(h.dtype),
+                        preferred_element_type=jnp.float32)
+    if logit_softcap and logit_softcap > 0:
+        logits = softcap(logits, logit_softcap)
+    return (jnp.max(logits, axis=-1),
+            jnp.argmax(logits, axis=-1).astype(jnp.int32))

@@ -81,9 +81,10 @@ def build_engine_full(cfg, mesh, *, max_seq: int, batch_global: int,
                       cluster: Optional[int] = None,
                       backend: str = "xla", interpret: bool = False,
                       block_s: Optional[int] = None,
-                      block_f: Optional[int] = None, prepack="auto",
+                      block_f: Optional[int] = None,
+                      block_v: Optional[int] = None, prepack="auto",
                       autotune_table: Optional[str] = None,
-                      track_work: bool = False,
+                      track_work: bool = False, fuse_head: bool = True,
                       plan_seq_len: Optional[int] = None) -> EngineHandle:
     """Build every jitted serving step for (cfg × mesh).
 
@@ -101,7 +102,9 @@ def build_engine_full(cfg, mesh, *, max_seq: int, batch_global: int,
 
     ``track_work`` adds the per-slot attend-step counters
     (``state["work_blocks"]``, core/tracecount.py) the scheduler tests
-    read.  ``plan_seq_len`` keys the autotune bucket on the EXPECTED MAX
+    read.  ``fuse_head=False`` skips the LM-head/sampling tail bundle on
+    the prepacked path (ablation/parity knob: same fused layers, loose
+    XLA head tail — tests prove the two sample token-identically).  ``plan_seq_len`` keys the autotune bucket on the EXPECTED MAX
     LIVE length rather than the allocated ``max_seq`` — ragged serving
     allocates slack capacity that no slot's live span ever reaches, and
     the plan (block_s, cluster) should follow the live spans
@@ -127,6 +130,7 @@ def build_engine_full(cfg, mesh, *, max_seq: int, batch_global: int,
                        backend=plan.backend, interpret=interpret,
                        block_s=block_s or plan.block_s,
                        block_f=block_f or plan.block_f,
+                       block_v=block_v or plan.block_v,
                        prepack=plan.prepack, track_work=track_work)
     params_abs = jax.eval_shape(
         lambda: init_device_major(cfg, lay, jax.random.PRNGKey(0)))
@@ -144,7 +148,7 @@ def build_engine_full(cfg, mesh, *, max_seq: int, batch_global: int,
     if scfg.prepack:
         from functools import partial as _partial
         from repro.serving.prepack import (attn_subtree, bundle_ffn,
-                                           merge_packed,
+                                           bundle_head, merge_packed,
                                            prepack_for_serving)
         pp_fn = _partial(prepack_for_serving, cfg, lay,
                          backend=scfg.backend)
@@ -153,12 +157,17 @@ def build_engine_full(cfg, mesh, *, max_seq: int, batch_global: int,
         sub_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), sub_specs)
         packed_attn = jax.jit(pp_fn, out_shardings=sub_sh)(
             attn_subtree(params))
-        # dense-FFN bundle is pure aliasing (no jit, no copy): the
-        # Megatron layout already IS the fused-FFN serve layout
-        params_serve = bundle_ffn(cfg, merge_packed(params, packed_attn),
-                                  backend=scfg.backend)
-        sv_specs = bundle_ffn(cfg, merge_packed(p_specs, sub_specs),
-                              backend=scfg.backend)
+        # dense-FFN and LM-head bundles are pure aliasing (no jit, no
+        # copy): the Megatron layout already IS the fused-FFN serve
+        # layout, and the head bundle binds the tied-embed/lm_head table
+        # + final_norm scale for the fused sampling tail
+        def _bundles(tree):
+            tree = bundle_ffn(cfg, tree, backend=scfg.backend)
+            if fuse_head:
+                tree = bundle_head(cfg, tree, backend=scfg.backend)
+            return tree
+        params_serve = _bundles(merge_packed(params, packed_attn))
+        sv_specs = _bundles(merge_packed(p_specs, sub_specs))
     else:
         params_serve, sv_specs = params, p_specs
     params = {"train": params, "serve": params_serve}

@@ -134,8 +134,29 @@ def embed_lookup(ctx: ParallelCtx, p: EmbedParams, tokens: jax.Array
 
 def lm_head_logits(ctx: ParallelCtx, table: jax.Array, x: jax.Array
                    ) -> jax.Array:
-    """Returns vocab-SHARDED logits [..., V_loc] (never materialize full V)."""
-    return x @ table.T.astype(x.dtype)
+    """Returns vocab-SHARDED logits [..., V_loc] in f32 (never materialize
+    full V).
+
+    f32 on purpose: every consumer (cross-entropy, greedy sampling)
+    immediately upcasts, so XLA's excess-precision pass elided the
+    model-dtype round-trip anyway — computing in f32 PINS that staging,
+    making the fused head kernel's math (f32 logit tiles on the rounded
+    ``rms_norm`` output) bit-identical to this path instead of dependent
+    on a convert-elision heuristic (kernels/fused_head, DESIGN.md §7).
+    The OPERANDS stay in the model dtype (``preferred_element_type``
+    carries the f32 accumulation): bf16 values are exact in f32, so the
+    result is bit-identical to an f32×f32 matmul, without forcing the
+    training-xent / prefill head matmul — the model's largest — onto
+    the half-throughput f32 MXU path or materializing an f32 table.
+
+    Trace-time counter: the fused LM-head/sampling tail must never
+    materialize the ``[B, V_loc]`` logits — tests assert this traces
+    ZERO times in a fused decode step.
+    """
+    from repro.core import tracecount
+    tracecount.bump("lm_head_logits")
+    return jnp.matmul(x, table.T.astype(x.dtype),
+                      preferred_element_type=jnp.float32)
 
 
 def vocab_parallel_xent(ctx: ParallelCtx, logits_loc: jax.Array,

@@ -61,6 +61,8 @@ class ServeConfig:
     block_s: int = 256             # KV block granularity (autotunable)
     block_f: int = 512             # d_ff tile of the fused-FFN megakernel
                                    # (autotunable; fitted to F_loc per call)
+    block_v: int = 1024            # vocab tile of the fused LM-head/sampling
+                                   # kernel (autotunable; fitted to V_loc)
     # serve-layout weight prepack (serving/prepack.py): params arrive
     # already packed per rank — no per-step weight gathers or slices
     prepack: bool = False
@@ -396,9 +398,30 @@ def _cross_decode(ctx, cross_blk, x, enc_kv, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 # Full decode step
 # ---------------------------------------------------------------------------
+def _greedy_pair_merge(a, b):
+    """THE (value, index) reduce operator for greedy sampling: maximum
+    value, LOWEST global index among equal maxima.
+
+    The index tie-break makes the operator commutative as well as
+    associative, so every rank's tree association order yields the same
+    winner — without it, equal-max logits on different vocab shards
+    made ranks DISAGREE on the sampled token (each rank's tree folds
+    the shards in a different order, and a first-argument-wins tie kept
+    a different shard per rank).  One definition on purpose: the fused
+    head tail (``_fused_head_tail``) must reproduce ``greedy_sample``
+    exactly, and a divergent copy would be a silent cross-path token
+    mismatch on ties.
+    """
+    mv, mi = a
+    nv, ni = b
+    take_b = (nv > mv) | ((nv == mv) & (ni < mi))
+    return jnp.where(take_b, nv, mv), jnp.where(take_b, ni, mi)
+
+
 def greedy_sample(ctx: ParallelCtx, logits_loc: jax.Array) -> jax.Array:
     """Greedy over vocab-sharded logits: pair-wise tree reduce on
-    (max_value, argmax_global_index)."""
+    (max_value, argmax_global_index); ties pick the lowest global index
+    on every rank (:func:`_greedy_pair_merge`)."""
     v_loc = logits_loc.shape[-1]
     shard = ctx.model_index()
     lf = logits_loc.astype(jnp.float32)
@@ -406,14 +429,45 @@ def greedy_sample(ctx: ParallelCtx, logits_loc: jax.Array) -> jax.Array:
     loc_idx = jnp.argmax(lf, axis=-1).astype(jnp.int32) + shard * v_loc
     if ctx.model is None:
         return loc_idx
+    _, idx = prim.cluster_reduce_pairs((loc_max, loc_idx), ctx.model,
+                                       _greedy_pair_merge)
+    return idx
 
-    def merge(a, b):
-        mv, mi = a
-        nv, ni = b
-        take_b = nv > mv
-        return jnp.where(take_b, nv, mv), jnp.where(take_b, ni, mi)
 
-    _, idx = prim.cluster_reduce_pairs((loc_max, loc_idx), ctx.model, merge)
+def _fused_head_tail(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
+                     w: df.PackedHeadWeights, x: jax.Array) -> jax.Array:
+    """Fused LM-head/sampling tail (DESIGN.md §7): final RMSNorm + vocab-
+    tiled logits + softcap + streaming greedy partials in ONE Pallas
+    kernel per vocab shard, then ONE tree ClusterReduce on (value,
+    global index) pairs — ``[B, V]`` logits never touch HBM, and the
+    merge is :func:`_greedy_pair_merge`, so the result is token-exact
+    against the unfused ``lm_head_logits`` + ``greedy_sample`` tail.
+
+    Ragged decode needs no gating: the head is slot-local, so free
+    slots flow through (their token is ignored by the scheduler),
+    exactly as on the XLA path.
+    """
+    from repro.kernels.fused_head.fused_head import fused_head_block
+    v_loc = w.table.shape[0]
+    # largest divisor of V_loc ≤ block_v, WITHOUT _fit_block_s's
+    # fall-back-to-full-size: that fallback trades bucket overhead for
+    # skipped work on KV buckets, but here the tile is a VMEM-resident
+    # [bv, D] weight block — falling back to V_loc would blow the VMEM
+    # budget pick_block_v was sized against on awkward shard sizes
+    # (small divisors just mean more grid steps, still correct)
+    bv = min(scfg.block_v, v_loc)
+    while v_loc % bv:
+        bv -= 1
+    mx, ix = fused_head_block(
+        x, w.table, w.ln, eps=cfg.norm_eps,
+        logit_softcap=float(cfg.logit_softcap or 0.0), block_v=bv,
+        interpret=scfg.interpret)
+    idx = ix + ctx.model_index().astype(jnp.int32) * v_loc
+    if ctx.model is None:
+        return idx
+    tracecount.bump("head_cluster_reduce")
+    _, idx = prim.cluster_reduce_pairs((mx, idx), ctx.model,
+                                       _greedy_pair_merge)
     return idx
 
 
@@ -528,12 +582,21 @@ def decode_step(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
     new_state["tail"] = new_tail
     if scfg.track_work:
         new_state["work_blocks"] = state["work_blocks"] + work
-    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
-    logits = lm_head_logits(ctx, table, x)
-    if cfg.logit_softcap:
-        logits = softcap(logits, cfg.logit_softcap)
-    nxt = greedy_sample(ctx, logits)
+    # LM-head/sampling tail: the prepacked Pallas path carries the
+    # aliasing PackedHeadWeights bundle and runs the fused head kernel
+    # (final norm + vocab-tiled logits + softcap + streaming greedy
+    # partials, one tree (value, index) reduce — no [B, V] logits in
+    # HBM); otherwise the loose XLA tail (DESIGN.md §7).
+    head = params.get("head")
+    if isinstance(head, df.PackedHeadWeights):
+        nxt = _fused_head_tail(ctx, cfg, scfg, head, x)
+    else:
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        logits = lm_head_logits(ctx, table, x)
+        if cfg.logit_softcap:
+            logits = softcap(logits, cfg.logit_softcap)
+        nxt = greedy_sample(ctx, logits)
     # only ACTIVE slots advance; free slots (−1) stay frozen until the
     # scheduler re-admits them via a prefill insert
     new_state["cache_lens"] = jnp.where(cache_len >= 0, cache_len + 1,

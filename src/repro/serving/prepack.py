@@ -39,8 +39,8 @@ from jax import lax
 
 from repro.configs.base import ModelConfig
 from repro.core.dataflow import (MLAWeights, PackedFFNWeights,
-                                 PackedMLAWeights, PackedSplitTokenWeights,
-                                 SplitTokenWeights)
+                                 PackedHeadWeights, PackedMLAWeights,
+                                 PackedSplitTokenWeights, SplitTokenWeights)
 from repro.models.attention import AttnParams, MLAAttnParams
 from repro.models.layers import FFNParams
 from repro.models.transformer import Layout
@@ -202,6 +202,65 @@ def bundle_ffn(cfg: ModelConfig, params: PyTree, *,
     return map_blocks(bb, params)
 
 
+def bundle_head(cfg: ModelConfig, params: PyTree, *,
+                backend: str = "pallas") -> PyTree:
+    """Bind the LM-head/sampling tail's serve view: a pure-aliasing
+    :class:`PackedHeadWeights` under the top-level ``"head"`` key
+    (``table`` aliases the tied ``embed`` buffer or ``lm_head``, ``ln``
+    aliases ``final_norm`` — zero bytes duplicated).  The decode step
+    dispatches the fused head kernel on its presence
+    (``engine._fused_head_tail``); the XLA backend keeps the loose
+    ``lm_head_logits``/``greedy_sample`` tail.  Structural (NamedTuple
+    wrapping of existing leaves), valid on param AND spec trees; kept
+    outside the jitted attention pack like :func:`bundle_ffn` so the
+    table never round-trips through ``jax.jit``."""
+    key = "embed" if cfg.tie_embeddings else "lm_head"
+    if backend != "pallas" or key not in params:
+        # subtree passes (the jitted attention pack) carry no head leaves
+        return params
+    return dict(params, head=PackedHeadWeights(table=params[key],
+                                               ln=params["final_norm"]))
+
+
+def head_view(cfg: ModelConfig, params: PyTree) -> PackedHeadWeights:
+    """The (table, ln) view the DECODE step actually samples with.
+
+    Accepts ``build_engine``'s ``{"train", "serve"}`` pair or a bare
+    param tree; returns the serve tree's :class:`PackedHeadWeights`
+    when the head is bundled (fused tail), else the equivalent view of
+    the unfused tail's leaves.  Examples route token printing through
+    this helper instead of reaching into the train tree — with prepack
+    on, the train view is NOT what sampling consumed (they alias today,
+    but only because the head bundle is pure aliasing; the helper is
+    the contract, the aliasing the implementation)."""
+    if isinstance(params, dict) and {"train", "serve"} <= params.keys():
+        params = params["serve"]
+    h = params.get("head")
+    if isinstance(h, PackedHeadWeights):
+        return h
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return PackedHeadWeights(table=table, ln=params["final_norm"])
+
+
+def head_table_np(cfg: ModelConfig, params: PyTree):
+    """Serve-view head table as a ``[V, D]`` numpy array (device-major
+    vocab shards flattened back to global order) — the examples' token-
+    printout path.  Handed the engine's ``{"train", "serve"}`` pair it
+    ALSO smoke-asserts the serve view aliases the train-layout head
+    bytes (the head bundle is pure aliasing; a mismatch means the pack
+    materialized or drifted)."""
+    import numpy as np
+
+    hv = head_view(cfg, params)
+    tab = np.asarray(hv.table, np.float32).reshape(-1, cfg.d_model)
+    if isinstance(params, dict) and {"train", "serve"} <= params.keys():
+        src = "embed" if cfg.tie_embeddings else "lm_head"
+        np.testing.assert_array_equal(
+            tab, np.asarray(params["train"][src],
+                            np.float32).reshape(-1, cfg.d_model))
+    return tab
+
+
 def prepack_for_serving(cfg: ModelConfig, lay: Layout, params: PyTree,
                         *, backend: str = "pallas") -> PyTree:
     """Training-layout device-major params → serve-layout params.
@@ -210,9 +269,10 @@ def prepack_for_serving(cfg: ModelConfig, lay: Layout, params: PyTree,
     backend's packed form (carrying the fused pre-attention norm scale
     on the Pallas backend) and — for dense-FFN attention blocks on the
     Pallas backend — the ``ffn`` entry with the aliasing
-    :class:`PackedFFNWeights` bundle; every other leaf (MoE, norms,
-    recurrent blocks, embeddings, encoder, cross-attention) rides
-    through untouched.  Pure layout math — run it under ``jax.jit`` with
+    :class:`PackedFFNWeights` bundle, plus the aliasing
+    :class:`PackedHeadWeights` tail bundle (:func:`bundle_head`); every
+    other leaf (MoE, norms, recurrent blocks, embeddings, encoder,
+    cross-attention) rides through untouched.  Pure layout math — run it under ``jax.jit`` with
     ``out_shardings`` to materialize device-major (launch/serve.py jits
     only the attention subtree and applies :func:`bundle_ffn` outside
     the jit, so FFN bytes stay aliased).
@@ -230,7 +290,8 @@ def prepack_for_serving(cfg: ModelConfig, lay: Layout, params: PyTree,
             a, blk["ln1"]) if stacked else fn(a, blk["ln1"]))
         return out
 
-    return bundle_ffn(cfg, map_blocks(pack_block, params), backend=backend)
+    return bundle_head(cfg, bundle_ffn(cfg, map_blocks(pack_block, params),
+                                       backend=backend), backend=backend)
 
 
 def prepack_abstract(cfg: ModelConfig, lay: Layout, params_abs: PyTree,

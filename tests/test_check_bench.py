@@ -1,0 +1,138 @@
+"""The CI perf-regression gate (scripts/check_bench.py).
+
+The gate diffs the deterministic BENCH_tpot.json columns (trace-time
+launch/psum counts, modeled ICI/HBM bytes) against the committed
+baseline; these tests lock its comparison semantics: counters exact in
+both directions, byte columns one-sided with tolerance, vanished cells
+fail, new cells and improvements pass, and the delta table always
+names the offending column.
+"""
+import copy
+import importlib.util
+import json
+import os
+
+import pytest
+
+_SCRIPT = os.path.join(os.path.dirname(__file__), "..", "scripts",
+                       "check_bench.py")
+
+
+@pytest.fixture(scope="module")
+def cb():
+    spec = importlib.util.spec_from_file_location("check_bench", _SCRIPT)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _report(**overrides):
+    cell = {
+        "tpot_us": 123.4,                     # wall time: never gated
+        "pallas_launches_per_step": 5,
+        "psum_model_per_step": 1,
+        "ici_weight_gather_bytes_per_step": 0.0,
+        "ffn_psum_ici_bytes_per_step": 0.0,
+        "ffn_fused_reduce_ici_bytes_per_step": 3072.0,
+        "head_ici_bytes_per_step": 768.0,
+        "head_hbm_logits_bytes_per_step": 0.0,
+    }
+    cell.update(overrides)
+    return {"archs": {"llama2-7b": {"variants": {"pallas_prepack": cell}}}}
+
+
+def test_identical_reports_pass(cb):
+    base = _report()
+    ok, table = cb.check(copy.deepcopy(base), base)
+    assert ok
+    assert "0 regressions" in table
+
+
+def test_wall_time_changes_are_not_gated(cb):
+    ok, _ = cb.check(_report(tpot_us=9999.0), _report(tpot_us=1.0))
+    assert ok
+
+
+def test_counter_change_fails_both_directions(cb):
+    for launches in (4, 6):                   # drop AND rise both fail
+        ok, table = cb.check(_report(pallas_launches_per_step=launches),
+                             _report())
+        assert not ok, launches
+        assert "pallas_launches_per_step" in table
+        assert "count changed" in table
+
+
+def test_byte_increase_beyond_tolerance_fails(cb):
+    ok, table = cb.check(_report(head_hbm_logits_bytes_per_step=4096.0),
+                         _report())
+    assert not ok
+    assert "head_hbm_logits_bytes_per_step" in table
+    assert "bytes up" in table
+
+
+def test_byte_increase_within_tolerance_passes(cb):
+    ok, _ = cb.check(_report(head_ici_bytes_per_step=768.0 * 1.005),
+                     _report())
+    assert ok
+
+
+def test_byte_decrease_is_an_improvement(cb):
+    ok, table = cb.check(_report(ffn_fused_reduce_ici_bytes_per_step=0.0),
+                         _report())
+    assert ok
+    assert "improved" in table
+    assert "refresh" in table                 # baseline-update nudge
+
+
+def test_vanished_cell_fails_new_cell_passes(cb):
+    base = _report()
+    cur = copy.deepcopy(base)
+    # a whole variant silently dropping out of the bench is a regression
+    del cur["archs"]["llama2-7b"]["variants"]["pallas_prepack"]
+    cur["archs"]["llama2-7b"]["variants"]["pallas_new"] = \
+        copy.deepcopy(base["archs"]["llama2-7b"]["variants"]["pallas_prepack"])
+    ok, table = cb.check(cur, base)
+    assert not ok
+    assert "vanished" in table
+    assert "NEW" in table
+    # symmetric: only adding is fine
+    ok2, _ = cb.check(cur, {"archs": {}})
+    assert ok2
+
+
+def test_missing_column_in_current_fails(cb):
+    cur = _report()
+    del cur["archs"]["llama2-7b"]["variants"]["pallas_prepack"][
+        "head_hbm_logits_bytes_per_step"]
+    ok, table = cb.check(cur, _report())
+    assert not ok
+    assert "head_hbm_logits_bytes_per_step" in table
+
+
+def test_main_exit_codes_and_table(cb, tmp_path, capsys):
+    b = tmp_path / "base.json"
+    c = tmp_path / "cur.json"
+    b.write_text(json.dumps(_report()))
+    c.write_text(json.dumps(_report()))
+    assert cb.main(["check_bench", str(c), str(b)]) == 0
+    out = capsys.readouterr().out
+    assert "PASS" in out and "arch/variant" in out
+    c.write_text(json.dumps(_report(psum_model_per_step=7)))
+    assert cb.main(["check_bench", str(c), str(b)]) == 1
+    assert "FAIL" in capsys.readouterr().out
+
+
+def test_committed_baseline_gates_itself(cb):
+    """The committed baseline must pass against itself and carry every
+    gated column for every cell — guards against committing a stale or
+    column-less baseline."""
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "BENCH_baseline.json")
+    with open(path) as f:
+        base = json.load(f)
+    ok, _ = cb.check(copy.deepcopy(base), base)
+    assert ok
+    for arch, e in base["archs"].items():
+        for v, d in e["variants"].items():
+            for col in cb.GATED_COLUMNS:
+                assert col in d, (arch, v, col)

@@ -253,10 +253,13 @@ def test_counters_engine_zero_weight_movement():
 def test_counters_fullblock_two_launches_zero_ffn_psum():
     """Full-block decode fusion proof (DESIGN.md §7): the fused prepacked
     decode step traces with exactly TWO ``pallas_call`` launches per
-    dense-FFN attention layer (fused attention + fused FFN tail) and
-    exactly ONE activation ``psum_model`` per STEP (the embedding lookup
-    — zero per-layer FFN psums, replaced by one fused ClusterReduce per
-    layer); the unfused XLA step pays one FFN psum per layer on top."""
+    dense-FFN attention layer (fused attention + fused FFN tail) plus
+    ONE fused LM-head launch per STEP (the L5 sampling tail —
+    kernels/fused_head, counted in detail in tests/test_fused_head.py),
+    and exactly ONE activation ``psum_model`` per STEP (the embedding
+    lookup — zero per-layer FFN psums, replaced by one fused
+    ClusterReduce per layer); the unfused XLA step pays one FFN psum
+    per layer on top."""
     run_multidevice("""
     from repro.configs import get_config, reduced
     from repro.core import tracecount
@@ -280,10 +283,12 @@ def test_counters_fullblock_two_launches_zero_ffn_psum():
             counts[label] = dict(c)
             print(arch, label, counts[label])
         f = counts["fused"]
-        # exactly 2 launches per traced layer position: fused attention +
-        # fused FFN tail (the scan re-dispatches the same pair per group)
-        assert f.get("pallas_kernel") == 2 * period, (arch, f)
+        # exactly 2 launches per traced layer position (fused attention +
+        # fused FFN tail; the scan re-dispatches the same pair per group)
+        # + 1 per-step fused LM-head launch (L5)
+        assert f.get("pallas_kernel") == 2 * period + 1, (arch, f)
         assert f.get("ffn_pallas_kernel") == period, (arch, f)
+        assert f.get("head_pallas_kernel") == 1, (arch, f)
         # zero per-layer activation psums: the only psum_model in the
         # whole step is the embedding assembly
         assert f.get("psum_model") == 1, (arch, f)
