@@ -18,7 +18,11 @@ Measurements per arch:
   through the continuous-batching scheduler (serving/scheduler.py) and
   the report gains a ``ragged_trace`` section with per-request TPOT,
   slot occupancy, decode-dispatch count and the per-slot attend-block
-  work counters (DESIGN.md §6).
+  work counters (DESIGN.md §6) — plus a ``router_chaos`` section: the
+  multi-replica router (serving/router.py) driven through every fault
+  kind (serving/faults.py), emitting deterministic detection-latency /
+  recovery-steps / availability / oracle-exactness columns that
+  scripts/check_bench.py gates exactly (DESIGN.md §9).
 
 Besides the CSV rows, the run emits a machine-readable ``BENCH_tpot.json``
 (``--out``) carrying TPOT per (arch × variant × cache_len bucket) plus
@@ -300,6 +304,78 @@ def _bench_ragged_trace(arch, *, n_slots=3, prompt_cap=12, max_new_cap=10,
     }
 
 
+def _bench_router_chaos(arch, *, n_replicas=2, prompt_cap=8, max_new_cap=8,
+                        n_requests=6, fault_step=2, rows=None, seed=0):
+    """Fleet chaos sweep: a fixed arrival trace through the multi-replica
+    router once fault-free (the oracle), then once per fault kind with a
+    deterministic mid-trace injection (serving/faults.py).  Every
+    emitted column is TICK ARITHMETIC — detection latency, recovery
+    steps, availability and oracle-exactness are identical on every
+    machine, so check_bench.py gates them exactly like the launch/psum
+    counters."""
+    from repro.launch.mesh import make_test_mesh as _mk
+    from repro.launch.serve import build_replicas
+    from repro.serving.faults import FAULT_KINDS, FaultInjector, FaultSpec
+    from repro.serving.router import Router
+    from repro.serving.scheduler import Request
+
+    cfg = reduced(get_config(arch))
+    if cfg.moe is not None:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, moe=None)
+    mesh = _mk(data=1, model=1)
+    engines = build_replicas(cfg, mesh, n_replicas=n_replicas,
+                             max_seq=prompt_cap + max_new_cap + 8,
+                             batch_global=2, backend="xla")
+    rng = np.random.default_rng(seed)
+    trace = []
+    for rid in range(n_requests):
+        plen = int(rng.integers(2, prompt_cap - 1))
+        trace.append((int(rng.integers(0, 4)), Request(
+            rid, [int(t) for t in rng.integers(1, cfg.vocab_size, plen)],
+            int(rng.integers(3, max_new_cap - 1)))))
+
+    def _run(injectors=None):
+        r = Router(engines, prompt_cap=prompt_cap, max_new_cap=max_new_cap,
+                   injectors=injectors)
+        journal = r.run([(t, Request(q.rid, q.prompt, q.max_new))
+                         for t, q in trace])
+        return r, {rid: list(e.tokens) for rid, e in journal.items()}
+
+    _, oracle = _run()
+    faults = {}
+    for kind in FAULT_KINDS:
+        inj = FaultInjector(
+            [FaultSpec(kind, step=fault_step, target=0, replica=0)])
+        router, toks = _run({0: inj})
+        lat = router.detection_latency(inj)
+        exact = sum(toks[r] == oracle[r] for r in oracle)
+        cell = {
+            "detect_steps": max(lat) if lat else -1,
+            "recovery_steps": router.recovery_steps(),
+            "availability_pct": round(100.0 * router.availability(), 2),
+            "oracle_exact_pct": round(100.0 * exact / len(oracle), 2),
+            "ticks": router.tick,
+        }
+        faults[kind] = cell
+        if rows is not None:
+            rows.append(row(
+                f"router_chaos_{kind}_{arch}", float(cell["ticks"]),
+                f"detect_steps={cell['detect_steps']},"
+                f"recovery_steps={cell['recovery_steps']},"
+                f"availability={cell['availability_pct']:.1f}%,"
+                f"oracle_exact={cell['oracle_exact_pct']:.0f}%"))
+    return {
+        "arch": arch,
+        "n_replicas": n_replicas,
+        "n_requests": n_requests,
+        "fault_step": fault_step,
+        "faults": faults,
+        "note": "all columns are deterministic tick arithmetic — gated "
+                "exactly by scripts/check_bench.py (ROUTER_GATED_COLUMNS)",
+    }
+
+
 def main(archs=("llama2-7b", "deepseek-v2-lite"), *, max_seq=256, batch=4,
          prompt_len=64, cache_lens=(16, 64, 192), iters=15,
          out_path="BENCH_tpot.json", fusion_baseline=True,
@@ -360,6 +436,10 @@ def main(archs=("llama2-7b", "deepseek-v2-lite"), *, max_seq=256, batch=4,
                 or tc.encoder is not None:
             trace_arch = "llama2-7b"
         report["ragged_trace"] = _bench_ragged_trace(trace_arch, rows=rows)
+        # fleet chaos sweep: deterministic detection/recovery/availability
+        # columns per fault kind, gated by scripts/check_bench.py
+        # (ROUTER_GATED_COLUMNS) against the committed baseline
+        report["router_chaos"] = _bench_router_chaos(trace_arch, rows=rows)
     if out_path:
         with open(out_path, "w") as f:
             json.dump(report, f, indent=1, sort_keys=True)

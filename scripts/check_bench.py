@@ -46,6 +46,23 @@ GATED_COLUMNS: Dict[str, Tuple[str, float]] = {
     "head_hbm_logits_bytes_per_step": ("bytes", 0.01),
 }
 
+# Fleet-chaos columns (``report["router_chaos"]["faults"][<kind>]``,
+# emitted under ``--trace``): detection latency, recovery ticks,
+# availability and oracle-exactness of the fault-injected router runs.
+# All four are deterministic tick arithmetic (benchmarks/bench_tpot.py),
+# so they gate EXACTLY — a detection getting slower, a recovery taking
+# extra ticks, or a recovered stream diverging from the oracle is a
+# robustness regression even when no wall-clock moves.  Kept separate
+# from GATED_COLUMNS: these live on fault cells, not arch/variant cells.
+ROUTER_GATED_COLUMNS: Dict[str, Tuple[str, float]] = {
+    "detect_steps": ("count", 0.0),
+    "recovery_steps": ("count", 0.0),
+    "availability_pct": ("count", 0.0),
+    "oracle_exact_pct": ("count", 0.0),
+}
+
+_ALL_COLUMNS = {**GATED_COLUMNS, **ROUTER_GATED_COLUMNS}
+
 _ABS_EPS = 1e-9      # float-repr jitter floor for the bytes columns
 
 
@@ -56,6 +73,11 @@ def _cells(report: dict):
             for col in GATED_COLUMNS:
                 if col in d:
                     yield (arch, variant), col, float(d[col])
+    chaos = report.get("router_chaos", {})
+    for kind, d in sorted(chaos.get("faults", {}).items()):
+        for col in ROUTER_GATED_COLUMNS:
+            if col in d:
+                yield ("router_chaos", kind), col, float(d[col])
 
 
 def diff_reports(current: dict, baseline: dict) -> List[dict]:
@@ -65,7 +87,7 @@ def diff_reports(current: dict, baseline: dict) -> List[dict]:
     rows = []
     for key in sorted(set(base) | set(cur)):
         (arch, variant), col = key
-        kind, tol = GATED_COLUMNS[col]
+        kind, tol = _ALL_COLUMNS[col]
         b, c = base.get(key), cur.get(key)
         if b is None:
             status = "NEW"

@@ -82,6 +82,35 @@ def _leaf_paths(tree: PyTree) -> List[str]:
     return ["/".join(str(p) for p in kp) for kp, _ in paths]
 
 
+class CheckpointMismatch(RuntimeError):
+    """A checkpoint failed restore-time validation (missing/corrupt leaf
+    file, or shape/dtype drift vs the target tree).  The message names
+    the first offending leaf path."""
+
+
+def _dtype_tag(dt) -> str:
+    """Canonical dtype name for validation (bfloat16-aware)."""
+    return "bfloat16" if np.dtype(dt) == _BF16 else str(np.dtype(dt))
+
+
+def _load_leaf(d: str, i: int, manifest: Dict, path: str) -> np.ndarray:
+    """Load one leaf file, converting IO/parse failures into a
+    :class:`CheckpointMismatch` that names the leaf — a truncated or
+    bit-rotted checkpoint must fail loudly, never unflatten garbage."""
+    fn = os.path.join(d, f"leaf_{i:05d}.npy")
+    try:
+        arr = np.load(fn)
+    except FileNotFoundError:
+        raise CheckpointMismatch(
+            f"leaf {path!r} (index {i}): file {fn} is missing — "
+            "truncated checkpoint") from None
+    except (ValueError, OSError, EOFError) as e:
+        raise CheckpointMismatch(
+            f"leaf {path!r} (index {i}): file {fn} is unreadable "
+            f"({e}) — corrupted checkpoint") from None
+    return _from_storable(arr, manifest["leaves"][i]["dtype"])
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
         self.dir = directory
@@ -160,11 +189,18 @@ class CheckpointManager:
     # -- restore ------------------------------------------------------------
     def restore(self, like: PyTree, step: Optional[int] = None
                 ) -> Tuple[PyTree, Dict]:
-        """Restore into the structure of ``like`` (shapes must match leaf
-        by leaf — same layout).  Returns (tree, extra).  ``like`` is
-        stripped of derived serving state the same way :meth:`save`
-        strips the snapshot, so save/restore stay symmetric when handed
-        an engine's ``{"train", "serve"}`` params pair."""
+        """Restore into the structure of ``like`` (shapes AND dtypes must
+        match leaf by leaf — same layout).  Returns (tree, extra).
+        ``like`` is stripped of derived serving state the same way
+        :meth:`save` strips the snapshot, so save/restore stay symmetric
+        when handed an engine's ``{"train", "serve"}`` params pair.
+
+        Validation is loud on purpose: a truncated directory, a corrupt
+        leaf file, or a layout drift between the saving and restoring
+        run raises :class:`CheckpointMismatch` naming the first offending
+        leaf PATH (not just its flat index) — silently unflattening a
+        wrong-shaped buffer into params is how garbage weights reach a
+        serving fleet."""
         like = strip_derived(like)
         step = step if step is not None else self.latest_step()
         if step is None:
@@ -173,14 +209,25 @@ class CheckpointManager:
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
         leaves, treedef = jax.tree.flatten(like)
-        assert manifest["n_leaves"] == len(leaves), \
-            (manifest["n_leaves"], len(leaves))
+        paths = _leaf_paths(like)
+        if manifest["n_leaves"] != len(leaves):
+            raise CheckpointMismatch(
+                f"checkpoint {d} holds {manifest['n_leaves']} leaves but "
+                f"the target tree has {len(leaves)} — structure drift "
+                "between the saving and restoring run")
         out = []
         for i, ref in enumerate(leaves):
-            arr = np.load(os.path.join(d, f"leaf_{i:05d}.npy"))
-            arr = _from_storable(arr, manifest["leaves"][i]["dtype"])
-            assert tuple(arr.shape) == tuple(ref.shape), \
-                (i, arr.shape, ref.shape)
+            arr = _load_leaf(d, i, manifest, paths[i])
+            if tuple(arr.shape) != tuple(ref.shape):
+                raise CheckpointMismatch(
+                    f"leaf {paths[i]!r} (index {i}) in {d}: stored shape "
+                    f"{tuple(arr.shape)} != target shape "
+                    f"{tuple(ref.shape)}")
+            if _dtype_tag(arr.dtype) != _dtype_tag(ref.dtype):
+                raise CheckpointMismatch(
+                    f"leaf {paths[i]!r} (index {i}) in {d}: stored dtype "
+                    f"{_dtype_tag(arr.dtype)} != target dtype "
+                    f"{_dtype_tag(ref.dtype)}")
             out.append(arr)
         return treedef.unflatten(out), manifest.get("extra", {})
 
@@ -196,10 +243,10 @@ class CheckpointManager:
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
         leaves, treedef = jax.tree.flatten(like)
+        paths = _leaf_paths(like)
         out = []
         for i, ref in enumerate(leaves):
-            arr = np.load(os.path.join(d, f"leaf_{i:05d}.npy"))
-            arr = _from_storable(arr, manifest["leaves"][i]["dtype"])
+            arr = _load_leaf(d, i, manifest, paths[i])
             if tuple(arr.shape) != tuple(ref.shape):
                 arr = _reshard_leaf(arr, tuple(ref.shape))
             out.append(arr)

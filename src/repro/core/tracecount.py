@@ -48,6 +48,12 @@ zero per-layer activation psums); the fused-head step adds exactly ONE
 ``lm_head_logits`` — embed psum + 2 launches/layer + 1 head launch +
 1 head reduce is the complete dense decode step.
 
+* ``finite_guard`` — the per-step integrity sentinel traced into the
+  decode/admit steps when ``ServeConfig.check_finite`` is on
+  (``serving/engine._finite_violations``): one bump per guarded program,
+  proof the guard is IN the compiled step (and absent when the flag is
+  off — the bench path must trace zero of these).
+
 Besides the trace-time counters, this module hosts the RUNTIME work
 counters for ragged decode (:func:`live_attend_blocks`): a pure-jnp
 mirror of the kernels' live-block formula
@@ -57,6 +63,26 @@ when ``ServeConfig.track_work`` is on.  Trace-time counts prove the
 *structure* of a step; these prove the *amount* of attend-step work a
 slot actually paid — the scheduler tests assert a retired slot's
 counter stops moving while its batch neighbors keep streaming.
+
+A third family, the DETECTION-SIGNAL counters (:func:`record_signal`),
+is host-side and always on: the fleet router (serving/router.py) records
+one count per integrity probe that fires — labels:
+
+* ``detect_nonfinite`` — the ``check_finite`` sentinel leaf reported a
+  non-finite residual/head output for an active slot.
+* ``detect_lens_bounds`` — ``cache_lens`` left ``[−1, max_seq]`` or the
+  shards disagreed on it.
+* ``detect_journal_stale`` — the device ``cache_lens`` diverged from the
+  scheduler's host-side journal model (dropped/duplicated admit,
+  blackholed replica echoing stale tokens).
+* ``detect_journal_mismatch`` — a recovery replay re-emitted a token
+  that differs from the journaled stream (divergent replica weights —
+  out of the fault model, asserted zero in tests; DESIGN.md §9).
+* ``detect_heartbeat`` — the replica raised (killed) inside its step.
+* ``replica_failed`` — one per replica the router drained.
+
+These are plain host counters (no trace interaction) so chaos tests can
+assert detection latency in *scheduler ticks* without parsing events.
 """
 from __future__ import annotations
 
@@ -100,6 +126,25 @@ def live_attend_blocks(cache_lens, *, s_blk: int, block_s: int, rank,
     else:
         lo = jnp.zeros_like(hi)
     return jnp.where(eff > 0, hi - lo + 1, 0).astype(jnp.int32)
+
+
+_SIGNALS: Counter = Counter()
+
+
+def record_signal(name: str, n: int = 1) -> None:
+    """Record a detection-signal firing (always on, host-side — see the
+    label list in the module docstring)."""
+    _SIGNALS[name] += n
+
+
+def signal_totals() -> Counter:
+    """Snapshot of the detection-signal counters."""
+    return Counter(_SIGNALS)
+
+
+def reset_signals() -> None:
+    """Zero the detection-signal counters (test isolation)."""
+    _SIGNALS.clear()
 
 
 @contextmanager

@@ -85,6 +85,7 @@ def build_engine_full(cfg, mesh, *, max_seq: int, batch_global: int,
                       block_v: Optional[int] = None, prepack="auto",
                       autotune_table: Optional[str] = None,
                       track_work: bool = False, fuse_head: bool = True,
+                      check_finite: bool = False,
                       plan_seq_len: Optional[int] = None) -> EngineHandle:
     """Build every jitted serving step for (cfg × mesh).
 
@@ -102,7 +103,10 @@ def build_engine_full(cfg, mesh, *, max_seq: int, batch_global: int,
 
     ``track_work`` adds the per-slot attend-step counters
     (``state["work_blocks"]``, core/tracecount.py) the scheduler tests
-    read.  ``fuse_head=False`` skips the LM-head/sampling tail bundle on
+    read.  ``check_finite`` adds the per-slot integrity sentinel
+    (``state["nonfinite"]``) the fleet router's health probes poll
+    (serving/router.py, DESIGN.md §9); off by default so the bench path
+    traces an identical step.  ``fuse_head=False`` skips the LM-head/sampling tail bundle on
     the prepacked path (ablation/parity knob: same fused layers, loose
     XLA head tail — tests prove the two sample token-identically).  ``plan_seq_len`` keys the autotune bucket on the EXPECTED MAX
     LIVE length rather than the allocated ``max_seq`` — ragged serving
@@ -131,7 +135,8 @@ def build_engine_full(cfg, mesh, *, max_seq: int, batch_global: int,
                        block_s=block_s or plan.block_s,
                        block_f=block_f or plan.block_f,
                        block_v=block_v or plan.block_v,
-                       prepack=plan.prepack, track_work=track_work)
+                       prepack=plan.prepack, track_work=track_work,
+                       check_finite=check_finite)
     params_abs = jax.eval_shape(
         lambda: init_device_major(cfg, lay, jax.random.PRNGKey(0)))
     p_specs = param_specs(cfg, params_abs)
@@ -202,6 +207,9 @@ def build_engine_full(cfg, mesh, *, max_seq: int, batch_global: int,
         st = dict(_unwrap2(state))
         st["cache_lens"] = jnp.where(mask > 0, jnp.int32(-1),
                                      st["cache_lens"])
+        if "nonfinite" in st:        # retired slot: clear its sentinel
+            st["nonfinite"] = jnp.where(mask > 0, jnp.int32(0),
+                                        st["nonfinite"])
         return _wrap2(st)
 
     fe_spec = P(*tok1, None, None) if cfg.frontend is not None else P()
@@ -221,6 +229,29 @@ def build_engine_full(cfg, mesh, *, max_seq: int, batch_global: int,
                                out_specs=s_specs, check_vma=False))
     return EngineHandle(params, pf, dec, admit, retire, state, lay, scfg,
                         cfg, mesh, batch_global)
+
+
+def build_replicas(cfg, mesh, *, n_replicas: int, max_seq: int,
+                   batch_global: int, check_finite: bool = True,
+                   track_work: bool = False, **kw):
+    """N engine replicas for the fleet router (serving/router.py).
+
+    Each replica is an independent :class:`EngineHandle` on ``mesh``
+    (in production each would own its own mesh slice; tests run N
+    single-mesh engines), initialized from the SAME PRNG seed — so any
+    replica produces the identical greedy stream for a given prefix,
+    which is the invariant reconstructive recovery relies on: a request
+    re-queued onto a survivor continues token-for-token where the dead
+    replica's journal left off (DESIGN.md §9).
+
+    ``check_finite`` defaults ON here (unlike ``build_engine_full``):
+    the router's health probes read the per-slot non-finite sentinel.
+    """
+    return [build_engine_full(cfg, mesh, max_seq=max_seq,
+                              batch_global=batch_global,
+                              check_finite=check_finite,
+                              track_work=track_work, **kw)
+            for _ in range(n_replicas)]
 
 
 def generate(cfg, params, pf, dec, state, prompts: jnp.ndarray,

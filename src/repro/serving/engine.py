@@ -72,6 +72,15 @@ class ServeConfig:
     # scheduler slots pay zero attention work.  Off by default (adds a
     # [B]-int32 state leaf + a few integer ops per layer).
     track_work: bool = False
+    # per-step integrity sentinel (fleet router health probes,
+    # DESIGN.md §9): accumulate per-slot violation counts into
+    # state["nonfinite"] — non-finite residual row, non-finite head
+    # (value, index) max, or a sampled token outside [0, vocab) on an
+    # ACTIVE slot.  Pure where-mask arithmetic + a counter leaf: no
+    # jax.debug, no checkify, no host sync — the router reads the leaf
+    # on its own schedule.  Off by default so the bench path traces an
+    # identical program.
+    check_finite: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -122,6 +131,8 @@ def init_decode_state(cfg: ModelConfig, scfg: ServeConfig, ctx: ParallelCtx
     state: Dict[str, Any] = {"cache_lens": jnp.zeros((B,), jnp.int32)}
     if scfg.track_work:
         state["work_blocks"] = jnp.zeros((B,), jnp.int32)
+    if scfg.check_finite:
+        state["nonfinite"] = jnp.zeros((B,), jnp.int32)
     per_pos: List[Any] = []
     for p, kind in enumerate(cfg.block_pattern):
         if kind in (ATTN_GLOBAL, ATTN_LOCAL):
@@ -418,24 +429,51 @@ def _greedy_pair_merge(a, b):
     return jnp.where(take_b, nv, mv), jnp.where(take_b, ni, mi)
 
 
-def greedy_sample(ctx: ParallelCtx, logits_loc: jax.Array) -> jax.Array:
-    """Greedy over vocab-sharded logits: pair-wise tree reduce on
-    (max_value, argmax_global_index); ties pick the lowest global index
-    on every rank (:func:`_greedy_pair_merge`)."""
+def greedy_sample_pair(ctx: ParallelCtx, logits_loc: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Greedy over vocab-sharded logits, returning BOTH halves of the
+    reduced (max_value, argmax_global_index) pair: the index is the
+    sampled token, the max logit is the cheapest per-slot health value
+    the ``check_finite`` sentinel can test (a NaN anywhere in a slot's
+    logits surfaces in its max under IEEE max-with-NaN or upstream in
+    the residual check).  Ties pick the lowest global index on every
+    rank (:func:`_greedy_pair_merge`)."""
     v_loc = logits_loc.shape[-1]
     shard = ctx.model_index()
     lf = logits_loc.astype(jnp.float32)
     loc_max = jnp.max(lf, axis=-1)
     loc_idx = jnp.argmax(lf, axis=-1).astype(jnp.int32) + shard * v_loc
     if ctx.model is None:
-        return loc_idx
-    _, idx = prim.cluster_reduce_pairs((loc_max, loc_idx), ctx.model,
-                                       _greedy_pair_merge)
-    return idx
+        return loc_idx, loc_max
+    mx, idx = prim.cluster_reduce_pairs((loc_max, loc_idx), ctx.model,
+                                        _greedy_pair_merge)
+    return idx, mx
+
+
+def greedy_sample(ctx: ParallelCtx, logits_loc: jax.Array) -> jax.Array:
+    """Greedy over vocab-sharded logits: pair-wise tree reduce on
+    (max_value, argmax_global_index); ties pick the lowest global index
+    on every rank (:func:`_greedy_pair_merge`)."""
+    return greedy_sample_pair(ctx, logits_loc)[0]
+
+
+def _finite_violations(cfg: ModelConfig, resid: jax.Array, head_val,
+                       nxt: jax.Array, active: jax.Array) -> jax.Array:
+    """Per-slot integrity sentinel (``ServeConfig.check_finite``): int32
+    [B], 1 where an ACTIVE slot's step output is corrupt — non-finite
+    residual row, non-finite head max-logit, or a sampled index outside
+    ``[0, vocab)``.  Pure where-mask arithmetic: the guard is a handful
+    of elementwise ops folded into the step, never a host assert."""
+    tracecount.bump("finite_guard")
+    bad = ~jnp.isfinite(resid.astype(jnp.float32)).all(axis=-1)
+    bad = bad | ~jnp.isfinite(jnp.asarray(head_val, jnp.float32))
+    bad = bad | (nxt < 0) | (nxt >= cfg.vocab_size)
+    return (bad & active).astype(jnp.int32)
 
 
 def _fused_head_tail(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
-                     w: df.PackedHeadWeights, x: jax.Array) -> jax.Array:
+                     w: df.PackedHeadWeights, x: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array]:
     """Fused LM-head/sampling tail (DESIGN.md §7): final RMSNorm + vocab-
     tiled logits + softcap + streaming greedy partials in ONE Pallas
     kernel per vocab shard, then ONE tree ClusterReduce on (value,
@@ -446,6 +484,9 @@ def _fused_head_tail(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
     Ragged decode needs no gating: the head is slot-local, so free
     slots flow through (their token is ignored by the scheduler),
     exactly as on the XLA path.
+
+    Returns the sampled token AND the reduced max logit — the pair the
+    ``check_finite`` sentinel tests, mirroring :func:`greedy_sample_pair`.
     """
     from repro.kernels.fused_head.fused_head import fused_head_block
     v_loc = w.table.shape[0]
@@ -464,11 +505,11 @@ def _fused_head_tail(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
         interpret=scfg.interpret)
     idx = ix + ctx.model_index().astype(jnp.int32) * v_loc
     if ctx.model is None:
-        return idx
+        return idx, mx
     tracecount.bump("head_cluster_reduce")
-    _, idx = prim.cluster_reduce_pairs((mx, idx), ctx.model,
-                                       _greedy_pair_merge)
-    return idx
+    mx, idx = prim.cluster_reduce_pairs((mx, idx), ctx.model,
+                                        _greedy_pair_merge)
+    return idx, mx
 
 
 def _check_not_param_pair(params_dm: PyTree, want: str) -> None:
@@ -589,14 +630,17 @@ def decode_step(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
     # HBM); otherwise the loose XLA tail (DESIGN.md §7).
     head = params.get("head")
     if isinstance(head, df.PackedHeadWeights):
-        nxt = _fused_head_tail(ctx, cfg, scfg, head, x)
+        nxt, head_val = _fused_head_tail(ctx, cfg, scfg, head, x)
     else:
-        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        xh = rms_norm(x, params["final_norm"], cfg.norm_eps)
         table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
-        logits = lm_head_logits(ctx, table, x)
+        logits = lm_head_logits(ctx, table, xh)
         if cfg.logit_softcap:
             logits = softcap(logits, cfg.logit_softcap)
-        nxt = greedy_sample(ctx, logits)
+        nxt, head_val = greedy_sample_pair(ctx, logits)
+    if scfg.check_finite:
+        new_state["nonfinite"] = state["nonfinite"] + _finite_violations(
+            cfg, x, head_val, nxt, cache_len >= 0)
     # only ACTIVE slots advance; free slots (−1) stay frozen until the
     # scheduler re-admits them via a prefill insert
     new_state["cache_lens"] = jnp.where(cache_len >= 0, cache_len + 1,

@@ -1,0 +1,230 @@
+"""Deterministic fault injection for the fleet serving layer.
+
+Every fault is a declarative :class:`FaultSpec` — ``(kind, step,
+target, seed, replica)`` — applied through the scheduler's
+:class:`~repro.serving.scheduler.SchedulerHooks` extension points by
+:class:`FaultInjector`, never by monkeypatching: the injector IS the
+hooks object the scheduler was built with, so every perturbation is
+visible in the call graph and reproducible from the spec alone.
+
+Fault taxonomy (DESIGN.md §9) and the probe each one trips:
+
+* ``kill`` — the replica dies inside its step (:class:`ReplicaKilled`
+  raised from ``pre_step``); caught by the router's heartbeat.
+* ``blackhole`` — the decode call never returns; the host loop
+  proceeds on a stale echo of its own inputs while device state
+  freezes → the expected-``cache_lens`` cross-check trips.
+* ``corrupt_kv`` — NaN-poison the target slot's rank-0 KV rows at
+  sequence position 0 (live for any active slot, so the poison reaches
+  the attention scores on the very next decode) → non-finite sentinel.
+* ``corrupt_lens`` — the target slot's ``cache_lens`` entry is forced
+  out of ``[−1, max_seq]`` on every rank → bounds check.
+* ``poison_weight`` — NaN/Inf into a column of the serve-layout
+  embedding table (a poisoned COPY is fed to every subsequent decode
+  call; the replica's real params are never mutated, so test fixtures
+  can reuse the engine) → non-finite sentinel.
+* ``drop_admit`` — the device admit call sees length 0 for the target
+  slot while host bookkeeping proceeds → expected-lens mismatch.
+* ``dup_admit`` — an extra device-side admit is injected into the
+  target slot with a prompt length chosen to differ from the host's
+  expected ``cache_lens`` → expected-lens mismatch.  (A byte-identical
+  re-admit would be idempotent by construction — re-prefill of the
+  same prefix writes the same cache — so the harmful variant is the
+  one with different state, and that is what the harness injects.)
+
+All corruption is host-side ``device_get → mutate → device_put`` with
+the leaf's own sharding, so the injected state round-trips through the
+same jitted programs as real state.  Everything is seeded and
+step-addressed: the same spec over the same trace perturbs the same
+bytes every run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.serving.scheduler import SchedulerHooks, SlotScheduler
+
+FAULT_KINDS = ("kill", "blackhole", "corrupt_kv", "corrupt_lens",
+               "poison_weight", "drop_admit", "dup_admit")
+
+
+class ReplicaKilled(RuntimeError):
+    """The replica process is gone mid-step; the router's heartbeat
+    converts this into a drain + re-queue (serving/router.py)."""
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One declarative fault: ``kind`` fires at scheduler tick ``step``
+    on ``replica``; ``target`` addresses a batch slot where relevant
+    (``corrupt_kv`` / ``corrupt_lens`` / ``drop_admit`` / ``dup_admit``);
+    ``seed`` drives any generated corruption bytes."""
+    kind: str
+    step: int
+    target: int = 0
+    seed: int = 0
+    replica: int = 0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"one of {FAULT_KINDS}")
+
+
+# ---------------------------------------------------------------------------
+# Host-side state corruption (device_get → mutate → device_put)
+# ---------------------------------------------------------------------------
+def _put_back(host: np.ndarray, leaf) -> jax.Array:
+    return jax.device_put(host, leaf.sharding)
+
+
+def corrupt_kv_slot(state: Dict[str, Any], slot: int,
+                    value: float = np.nan) -> Dict[str, Any]:
+    """Poison ``slot``'s rank-0 K rows at sequence position 0 of the
+    first attention cache.  Position 0 is live for every active slot,
+    so the poison lands in the attention scores on the next decode
+    step; state leaves are device-major ``[dp, ms, (n_groups,) s_blk,
+    rows, hd]`` and only the ``[0, 0]`` shard is touched (a single-rank
+    corruption, the realistic HBM-flip case)."""
+    def poison(entry):
+        k = np.array(jax.device_get(entry.k))
+        B = entry.pos.shape[-1]
+        rows_per = k.shape[-2] // B
+        sl = slice(slot * rows_per, (slot + 1) * rows_per)
+        k[0, 0, ..., 0, sl, :] = value
+        return entry._replace(k=_put_back(k, entry.k))
+
+    new = dict(state)
+    layers = list(state["layers"])
+    for i, entry in enumerate(layers):
+        if hasattr(entry, "k"):
+            layers[i] = poison(entry)
+            new["layers"] = layers
+            return new
+    tail = list(state["tail"])
+    for i, entry in enumerate(tail):
+        if hasattr(entry, "k"):
+            tail[i] = poison(entry)
+            new["tail"] = tail
+            return new
+    raise ValueError("no attention cache in state to corrupt")
+
+
+def corrupt_cache_lens(state: Dict[str, Any], slot: int,
+                       value: int) -> Dict[str, Any]:
+    """Force ``cache_lens[slot]`` to ``value`` on every rank (the
+    uniform-corruption case: shards still agree, so only the bounds
+    probe can catch it — pick ``value`` outside ``[−1, max_seq]``)."""
+    lens = np.array(jax.device_get(state["cache_lens"]))
+    lens[..., slot] = value
+    new = dict(state)
+    new["cache_lens"] = _put_back(lens, state["cache_lens"])
+    return new
+
+
+def poison_embed(params: Dict[str, Any], seed: int) -> Dict[str, Any]:
+    """Return a COPY of the serve param tree whose embedding table has
+    one ``d_model`` column poisoned with NaN or Inf (seed-chosen), so
+    every token's embedding — and therefore the residual stream — goes
+    non-finite regardless of how the table is sharded."""
+    rng = np.random.default_rng(seed)
+    bad = float(rng.choice([np.nan, np.inf, -np.inf]))
+    emb = np.array(jax.device_get(params["embed"]), np.float32)
+    col = int(rng.integers(emb.shape[-1]))
+    emb[..., col] = bad
+    new = dict(params)
+    new["embed"] = _put_back(emb.astype(
+        np.asarray(jax.device_get(params["embed"])).dtype), params["embed"])
+    return new
+
+
+# ---------------------------------------------------------------------------
+# The injector: SchedulerHooks driven by FaultSpecs
+# ---------------------------------------------------------------------------
+class FaultInjector(SchedulerHooks):
+    """Applies each armed spec exactly once at (or, for faults that
+    need a carrier event, at the first opportunity after) its step.
+    ``fired`` records ``(spec, actual_tick)`` so tests and the bench
+    can measure injection-to-detection latency in ticks."""
+
+    def __init__(self, specs: Sequence[FaultSpec]):
+        self.specs: List[FaultSpec] = sorted(specs, key=lambda s: s.step)
+        self.fired: List[Tuple[FaultSpec, int]] = []
+        self._done: set = set()
+        self._poisoned_params = None
+        self._blackholed = False
+
+    def _due(self, sched: SlotScheduler,
+             kind: str) -> List[Tuple[int, FaultSpec]]:
+        out = []
+        for i, s in enumerate(self.specs):
+            if s.kind == kind and i not in self._done and \
+                    sched.tick >= s.step:
+                out.append((i, s))
+        return out
+
+    def _mark(self, i: int, spec: FaultSpec, tick: int) -> None:
+        self._done.add(i)
+        self.fired.append((spec, tick))
+
+    # -- hook protocol ----------------------------------------------------
+    def pre_step(self, sched: SlotScheduler) -> None:
+        for i, s in self._due(sched, "kill"):
+            self._mark(i, s, sched.tick)
+            raise ReplicaKilled(f"fault-injected kill at tick {sched.tick}")
+
+    def admit_args(self, sched: SlotScheduler, toks, lens):
+        for i, s in self._due(sched, "drop_admit"):
+            if lens[s.target] > 0:       # needs a carrier admit to drop
+                lens = np.array(lens)
+                lens[s.target] = 0
+                self._mark(i, s, sched.tick)
+        return toks, lens
+
+    def post_admit(self, sched: SlotScheduler) -> None:
+        for i, s in self._due(sched, "dup_admit"):
+            self._mark(i, s, sched.tick)
+            exp = int(sched.expected_cache_lens()[s.target])
+            # a prompt length ≠ the host's expected cache length, so the
+            # duplicate is the harmful (state-changing) kind; the token
+            # buffer stays prompt_cap wide like every real admit (the
+            # jitted program is shape-specialized — and cluster-sharded
+            # prefill requires the padded width)
+            want = exp + 1
+            plen = want if 1 <= want <= sched.prompt_cap \
+                else max(1, exp - 1)
+            rng = np.random.default_rng(s.seed)
+            toks = np.zeros((sched.n_slots, sched.prompt_cap), np.int32)
+            toks[s.target, :plen] = rng.integers(
+                sched.eng.cfg.vocab_size, size=(plen,))
+            lens = np.zeros((sched.n_slots,), np.int32)
+            lens[s.target] = plen
+            _, sched.state = sched.eng.admit_fn(
+                sched.eng.params["train"], sched.state, toks, lens)
+
+    def decode_args(self, sched: SlotScheduler, params, state, tokens):
+        for i, s in self._due(sched, "corrupt_kv"):
+            self._mark(i, s, sched.tick)
+            state = corrupt_kv_slot(state, s.target)
+        for i, s in self._due(sched, "corrupt_lens"):
+            self._mark(i, s, sched.tick)
+            state = corrupt_cache_lens(state, s.target,
+                                       sched.eng.scfg.max_seq + 7)
+        for i, s in self._due(sched, "poison_weight"):
+            self._mark(i, s, sched.tick)
+            self._poisoned_params = poison_embed(params, s.seed)
+        if self._poisoned_params is not None:   # weights STAY poisoned
+            params = self._poisoned_params
+        return params, state, tokens
+
+    def decode_blackholed(self, sched: SlotScheduler) -> bool:
+        if self._blackholed:
+            return True
+        for i, s in self._due(sched, "blackhole"):
+            self._mark(i, s, sched.tick)
+            self._blackholed = True     # the link stays dark
+        return self._blackholed

@@ -32,7 +32,7 @@ from repro.models.layers import (EmbedParams, embed_lookup, ffn_apply,
 from repro.models.moe import MoEParams, moe_apply
 from repro.models.transformer import apply_block, encode, unwrap_local
 from repro.serving.engine import (ServeConfig, _check_not_param_pair,
-                                  greedy_sample)
+                                  _finite_violations, greedy_sample_pair)
 
 PyTree = Any
 
@@ -264,11 +264,19 @@ def prefill(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
     logits = lm_head_logits(ctx, table, last)
     if cfg.logit_softcap:
         logits = softcap(logits, cfg.logit_softcap)
-    nxt = greedy_sample(ctx, logits)
+    nxt, head_val = greedy_sample_pair(ctx, logits)
     adm = lengths > 0
     new_state["cache_lens"] = jnp.where(adm, lengths,
                                         state["cache_lens"])
     if "work_blocks" in state:       # admitted slots start a fresh count
         new_state["work_blocks"] = jnp.where(
             adm, 0, state["work_blocks"]).astype(jnp.int32)
+    if scfg.check_finite and "nonfinite" in state:
+        # guard the ADMIT path too: a one-token request can admit and
+        # retire in the same tick with no decode step in between, so a
+        # poisoned first token must trip the sentinel here.  Admitted
+        # slots restart their violation count.
+        new_state["nonfinite"] = jnp.where(
+            adm, _finite_violations(cfg, last, head_val, nxt, adm),
+            state["nonfinite"]).astype(jnp.int32)
     return nxt, new_state

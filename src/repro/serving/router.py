@@ -1,0 +1,302 @@
+"""Fleet front-end: a multi-replica router with journaling, health
+probes, and zero-corruption reconstructive recovery.
+
+ClusterFusion keeps decode intermediates on-chip and the KV cache as
+the only per-request device state — there is no checkpointable serving
+state, so surviving a replica loss means *reconstructing* streams, not
+restoring them.  The router makes that safe with three mechanisms
+(DESIGN.md §9):
+
+1. **Journal**: every request's prompt and every COMMITTED token live
+   in the router (:class:`JournalEntry`).  Tokens a replica emits in
+   tick *t* are committed only after tick-*t*'s integrity probes pass;
+   a failed probe discards the whole tick's emissions, so the journal
+   never contains a byte produced by a corrupt replica.
+2. **Probes** (per replica, per tick, all O(B) host work):
+   the ``check_finite`` sentinel leaf (non-finite residual/head output
+   on an active slot), ``cache_lens`` bounds + cross-shard agreement,
+   and the journal cross-check (device lengths vs the scheduler's
+   host-side model — catches dropped/duplicated admits and blackholed
+   replicas), plus a heartbeat (the step raising).  Each firing is
+   recorded via :func:`repro.core.tracecount.record_signal`.
+3. **Recovery**: a failed replica is drained; its in-flight requests
+   re-queue onto survivors as ``Request(prompt, max_new,
+   replay=committed_tokens)`` — the survivor re-prefills the prompt,
+   then REPLAYS the journaled tokens through the same jitted decode
+   program before generating live.  Same weights (replicas share the
+   init seed — ``build_replicas``), same programs, same inputs in the
+   same order ⇒ the reconstructed device state and the continuation
+   are bit-identical to an uninterrupted run; greedy sampling today
+   means the journaled PRNG state is simply the (recorded) seed.
+   Replayed emissions are cross-checked against the journal and never
+   re-committed.
+
+Dispatch is queue-depth-aware: each pending request goes to the live
+replica with the fewest queued + active requests (ties to the lowest
+index, keeping the whole fleet deterministic for the chaos tests).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import tracecount
+from repro.launch.serve import EngineHandle
+from repro.serving.faults import ReplicaKilled
+from repro.serving.scheduler import Request, SchedulerHooks, SlotScheduler
+
+
+@dataclass
+class JournalEntry:
+    """The router's durable record of one request: everything needed to
+    reconstruct the stream on any replica, plus the committed tokens."""
+    rid: int
+    prompt: List[int]
+    max_new: int
+    seed: int = 0               # journaled sampling PRNG seed (greedy
+                                # ignores it; recorded so stochastic
+                                # sampling rides the same recovery path)
+    tokens: List[int] = field(default_factory=list)   # COMMITTED only
+    replicas: List[int] = field(default_factory=list)  # dispatch history
+    submit_tick: int = -1
+    finish_tick: int = -1
+    requeues: int = 0
+    # (requeue_tick, first_new_commit_tick) per recovery — the bench's
+    # recovery-latency column is the max delta over these
+    recoveries: List[Tuple[int, int]] = field(default_factory=list)
+    done: bool = False
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new - len(self.tokens)
+
+
+class _Replica:
+    """One engine replica as the router sees it: its scheduler (with
+    the replica's fault-injection hooks, if any), the local→router
+    request-id map, and per-request commit watermarks."""
+
+    def __init__(self, idx: int, eng: EngineHandle, prompt_cap: int,
+                 eos_id: Optional[int], hooks: Optional[SchedulerHooks]):
+        self.idx = idx
+        self.eng = eng
+        # integrity_latch: snapshot violations before a same-tick retire
+        # can reset the offending slot (the probe below would otherwise
+        # miss a fault whose victim finishes on the fault tick and
+        # commit its corrupt final token)
+        self.sched = SlotScheduler(eng, prompt_cap=prompt_cap,
+                                   eos_id=eos_id, hooks=hooks,
+                                   integrity_latch=True)
+        self.alive = True
+        self.owner: Dict[int, int] = {}       # local rid → router rid
+        self.committed: Dict[int, int] = {}   # local rid → commit mark
+
+    def load(self) -> int:
+        """Queue depth + active slots — the dispatch cost metric."""
+        return len(self.sched.queue) + sum(
+            not s.free for s in self.sched.slots)
+
+    def probe(self) -> List[str]:
+        """Post-step integrity probes; returns the fired signal labels
+        (empty = healthy).  All reads are host-side snapshots of [B]
+        vectors — no device compute."""
+        fired = list(self.sched.latched)   # pre-retire snapshots first
+        st = self.sched.state
+        n = self.sched.n_slots
+        if "nonfinite" in st:
+            nf = np.asarray(jax.device_get(st["nonfinite"])).reshape(-1, n)
+            if (nf > 0).any():
+                fired.append("detect_nonfinite")
+        lens = np.asarray(jax.device_get(st["cache_lens"])).reshape(-1, n)
+        if ((lens < -1).any() or
+                (lens > self.eng.scfg.max_seq).any() or
+                (lens != lens[0]).any()):      # shard disagreement
+            fired.append("detect_lens_bounds")
+        if (lens[0] != self.sched.expected_cache_lens()).any():
+            fired.append("detect_journal_stale")
+        if self.sched.replay_mismatches() > 0:
+            fired.append("detect_journal_mismatch")
+        return list(dict.fromkeys(fired))   # latch + probe may agree
+
+
+class Router:
+    """Load-balance a request stream over N replicas with journaled,
+    probe-gated commits and reconstructive recovery.
+
+    ``injectors`` maps replica index → :class:`SchedulerHooks` (chaos
+    tests pass a :class:`~repro.serving.faults.FaultInjector`); omitted
+    replicas run clean.  All replicas must share weights (same init
+    seed — :func:`repro.launch.serve.build_replicas`): recovery moves a
+    stream between replicas and is only exact if they agree.
+    """
+
+    def __init__(self, engines: Sequence[EngineHandle], *,
+                 prompt_cap: int, max_new_cap: int,
+                 eos_id: Optional[int] = None,
+                 injectors: Optional[Dict[int, SchedulerHooks]] = None):
+        if not engines:
+            raise ValueError("router needs at least one replica")
+        max_seq = engines[0].scfg.max_seq
+        # a full-length stream appends prompt + (max_new − 1) inputs
+        if prompt_cap + max_new_cap - 1 > max_seq:
+            raise ValueError(
+                f"prompt_cap={prompt_cap} + max_new_cap={max_new_cap} - 1 "
+                f"exceeds the engines' cache capacity max_seq={max_seq}")
+        injectors = injectors or {}
+        self.max_new_cap = max_new_cap
+        self.replicas = [
+            _Replica(i, eng, prompt_cap, eos_id, injectors.get(i))
+            for i, eng in enumerate(engines)]
+        self.journal: Dict[int, JournalEntry] = {}
+        self.pending: List[int] = []          # rids awaiting dispatch
+        self.tick = 0
+        self.events: List[Tuple[int, str, Any, Any]] = []
+        self.detections: List[Dict[str, Any]] = []
+        self.live_frac: List[float] = []      # per-tick availability
+        self._next_local = 0
+
+    # -- intake -----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if req.rid in self.journal:
+            raise ValueError(f"request {req.rid}: duplicate request id")
+        if req.max_new > self.max_new_cap:
+            raise ValueError(
+                f"request {req.rid}: max_new={req.max_new} exceeds the "
+                f"router's max_new_cap={self.max_new_cap}")
+        self.journal[req.rid] = JournalEntry(
+            rid=req.rid, prompt=list(req.prompt), max_new=req.max_new,
+            seed=getattr(req, "seed", 0), submit_tick=self.tick)
+        self.pending.append(req.rid)
+
+    # -- dispatch ---------------------------------------------------------
+    def _dispatch(self) -> None:
+        for rid in self.pending:
+            live = [r for r in self.replicas if r.alive]
+            if not live:
+                raise RuntimeError(
+                    "no live replicas left — the fleet cannot make "
+                    "progress (all replicas failed probes or died)")
+            r = min(live, key=lambda rr: (rr.load(), rr.idx))
+            e = self.journal[rid]
+            lr = self._next_local
+            self._next_local += 1
+            r.owner[lr] = rid
+            # already-committed tokens replay on the new replica and are
+            # never re-committed
+            r.committed[lr] = len(e.tokens)
+            r.sched.submit(Request(lr, list(e.prompt), e.max_new,
+                                   replay=list(e.tokens)))
+            e.replicas.append(r.idx)
+            self.events.append((self.tick, "dispatch", rid, r.idx))
+        self.pending.clear()
+
+    # -- commit / failure -------------------------------------------------
+    def _commit(self, r: _Replica) -> None:
+        for lr, rid in list(r.owner.items()):
+            res = r.sched.results.get(lr)
+            if res is None:
+                continue
+            e = self.journal[rid]
+            new = res.tokens[r.committed[lr]:]
+            if new:
+                e.tokens.extend(new)
+                r.committed[lr] = len(res.tokens)
+                if e.recoveries and e.recoveries[-1][1] < 0:
+                    rq_tick, _ = e.recoveries[-1]
+                    e.recoveries[-1] = (rq_tick, self.tick)
+            if res.finish_tick >= 0:
+                e.done = True
+                e.finish_tick = self.tick
+                del r.owner[lr], r.committed[lr]
+                self.events.append((self.tick, "finish", rid, r.idx))
+
+    def _fail(self, r: _Replica, signals: Sequence[str]) -> None:
+        """Drain a failed replica: nothing from its current tick is
+        committed; every in-flight request re-queues onto survivors
+        from its last committed state (zero-corruption invariant)."""
+        r.alive = False
+        for sig in signals:
+            tracecount.record_signal(sig)
+        tracecount.record_signal("replica_failed")
+        self.detections.append({"tick": self.tick, "replica": r.idx,
+                                "signals": list(signals)})
+        self.events.append((self.tick, "fail", r.idx, tuple(signals)))
+        for lr, rid in r.owner.items():
+            e = self.journal[rid]
+            if not e.done:
+                e.requeues += 1
+                e.recoveries.append((self.tick, -1))
+                self.pending.append(rid)
+                self.events.append((self.tick, "requeue", rid, r.idx))
+        r.owner.clear()
+        r.committed.clear()
+
+    # -- one fleet tick ---------------------------------------------------
+    def step(self, arrivals: Sequence[Request] = ()) -> None:
+        for req in arrivals:
+            self.submit(req)
+        self._dispatch()
+        for r in self.replicas:
+            if not r.alive:
+                continue
+            try:
+                r.sched.step()
+            except ReplicaKilled:
+                self._fail(r, ["detect_heartbeat"])
+                continue
+            signals = r.probe()
+            if signals:
+                self._fail(r, signals)
+            else:
+                self._commit(r)
+        self.live_frac.append(
+            sum(r.alive for r in self.replicas) / len(self.replicas))
+        self.tick += 1
+
+    def idle(self) -> bool:
+        return not self.pending and all(
+            e.done for e in self.journal.values())
+
+    def run(self, trace: Sequence[Tuple[int, Request]] = (),
+            max_ticks: int = 10_000) -> Dict[int, JournalEntry]:
+        """Drive the fleet from an arrival trace (``(arrival_tick,
+        Request)`` pairs, joining at the START of their tick) until
+        every journaled request completes."""
+        pending = sorted(trace, key=lambda ar: ar[0])
+        i = 0
+        while (i < len(pending) or not self.idle()) \
+                and self.tick < max_ticks:
+            arrivals = []
+            while i < len(pending) and pending[i][0] <= self.tick:
+                arrivals.append(pending[i][1])
+                i += 1
+            self.step(arrivals)
+        assert self.idle(), f"fleet did not drain in {max_ticks} ticks"
+        return self.journal
+
+    # -- metrics ----------------------------------------------------------
+    def availability(self) -> float:
+        """Mean fraction of live replicas over the run (1.0 = no
+        failures)."""
+        return float(np.mean(self.live_frac)) if self.live_frac else 1.0
+
+    def recovery_steps(self) -> int:
+        """Worst-case ticks from a requeue to the affected stream's
+        first NEW committed token (0 when no request was in flight
+        across a failure)."""
+        deltas = [ct - rt for e in self.journal.values()
+                  for rt, ct in e.recoveries if ct >= 0]
+        return max(deltas) if deltas else 0
+
+    def detection_latency(self, injector) -> List[int]:
+        """Ticks from each injected fault's firing to the first
+        detection at or after it (chaos tests assert these bounded)."""
+        out = []
+        for spec, fire_tick in injector.fired:
+            hits = [d["tick"] - fire_tick for d in self.detections
+                    if d["tick"] >= fire_tick]
+            out.append(min(hits) if hits else -1)
+        return out

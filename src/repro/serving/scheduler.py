@@ -43,10 +43,55 @@ from repro.launch.serve import EngineHandle
 class Request:
     """One generation request.  ``prompt``: token ids (≤ the scheduler's
     ``prompt_cap``); ``max_new``: tokens to generate (counting the one
-    sampled by the prefill insert)."""
+    sampled by the prefill insert).
+
+    ``replay``: journaled tokens to RECONSTRUCT before generating live
+    (fleet recovery — serving/router.py).  The slot admits ``prompt``
+    normally, then force-feeds the replay tokens as decode inputs in
+    order, re-building the exact device state of the original stream
+    (same jitted programs, same inputs, same order ⇒ same floats —
+    DESIGN.md §9).  The engine's re-emitted tokens are cross-checked
+    against the journal (``replay_mismatch``); the journaled value is
+    authoritative for both the result stream and the next decode input.
+    ``max_new`` counts the replayed tokens, so a resumed request keeps
+    its original budget."""
     rid: int
     prompt: Sequence[int]
     max_new: int
+    replay: Sequence[int] = ()
+
+
+class SchedulerHooks:
+    """Extension points for perturbing a live scheduler — the ONLY
+    sanctioned way the fault-injection harness (serving/faults.py)
+    touches a running engine: the hooks are threaded through the
+    admit/decode call sites, never monkeypatched, so every injected
+    fault is visible in the call graph.  The base class is a no-op;
+    a scheduler built with ``hooks=None`` behaves identically.
+    """
+
+    def pre_step(self, sched: "SlotScheduler") -> None:
+        """Start of every tick; may raise (e.g. faults.ReplicaKilled)."""
+
+    def admit_args(self, sched: "SlotScheduler", toks: np.ndarray,
+                   lens: np.ndarray):
+        """Rewrite the (tokens, lengths) the DEVICE admit call sees —
+        host bookkeeping keeps the original request (dropped admits)."""
+        return toks, lens
+
+    def post_admit(self, sched: "SlotScheduler") -> None:
+        """After the tick's admit call (duplicate-admit injection)."""
+
+    def decode_args(self, sched: "SlotScheduler", params, state, tokens):
+        """Rewrite what the device decode call consumes (KV/length
+        corruption, weight poisoning)."""
+        return params, state, tokens
+
+    def decode_blackholed(self, sched: "SlotScheduler") -> bool:
+        """True ⇒ the decode call never returns (network blackhole):
+        the scheduler's host loop sees a stale echo of its own inputs
+        while device state freezes."""
+        return False
 
 
 @dataclass
@@ -54,6 +99,10 @@ class _Slot:
     rid: Optional[int] = None
     remaining: int = 0          # tokens still to emit
     last_tok: int = 0
+    prompt_len: int = 0         # admitted prompt length (journal model)
+    emitted: int = 0            # tokens emitted so far (incl. replayed)
+    replay: List[int] = field(default_factory=list)
+    replay_mismatch: int = 0    # engine token ≠ journaled token count
 
     @property
     def free(self) -> bool:
@@ -80,7 +129,9 @@ class SlotScheduler:
     """
 
     def __init__(self, engine: EngineHandle, *, prompt_cap: int,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None,
+                 hooks: Optional[SchedulerHooks] = None,
+                 integrity_latch: bool = False):
         cfg = engine.cfg
         assert cfg.frontend is None and cfg.encoder is None, \
             "SlotScheduler supports decoder-only text models"
@@ -96,6 +147,7 @@ class SlotScheduler:
         self.eng = engine
         self.prompt_cap = int(prompt_cap)
         self.eos_id = eos_id
+        self.hooks = hooks
         self.n_slots = engine.batch_global
         self.slots = [_Slot() for _ in range(self.n_slots)]
         self.queue: List[Request] = []
@@ -104,6 +156,15 @@ class SlotScheduler:
         self.occupancy: List[float] = []                    #  rid, slot)
         self.tick = 0
         self.decode_calls = 0
+        # Pre-retire integrity latch (router probes, DESIGN.md §9).
+        # Retiring a slot resets its cache length and finite sentinel —
+        # which would DESTROY the evidence of a fault whose victim
+        # finishes on the fault tick, letting a corrupt final token
+        # commit.  With the latch on, violations are snapshotted to the
+        # host between the decode and the retire that would erase them.
+        self.integrity_latch = integrity_latch
+        self.latched: List[str] = []
+        self._replay_mismatch_retired = 0
         # all slots start FREE (cache_lens = −1)
         self.state = engine.retire_fn(engine.state,
                                       np.ones((self.n_slots,), np.int32))
@@ -123,13 +184,77 @@ class SlotScheduler:
         leaf = np.asarray(jax.device_get(self.state["work_blocks"]))
         return leaf.reshape(-1, self.n_slots).sum(axis=0)
 
+    # -- host model of the device cache lengths ---------------------------
+    def expected_cache_lens(self) -> np.ndarray:
+        """What ``cache_lens`` MUST read if the device executed exactly
+        the admits/decodes this host issued: an active slot's cache
+        holds its prompt plus one entry per decode input so far
+        (``prompt_len + emitted − 1`` — the admit insert itself emits
+        the first token without consuming a cache entry); free slots
+        sit at −1.  The router's journal cross-check compares this
+        against the device vector every tick: a dropped or duplicated
+        admit, a blackholed (frozen) replica, or a corrupted length all
+        surface as a mismatch (DESIGN.md §9)."""
+        out = np.full((self.n_slots,), -1, np.int64)
+        for b, s in enumerate(self.slots):
+            if not s.free:
+                out[b] = s.prompt_len + s.emitted - 1
+        return out
+
+    def replay_mismatches(self) -> int:
+        """Total journal/engine token disagreements across recovery
+        replays, live and retired (zero under the supported fault
+        model)."""
+        return self._replay_mismatch_retired + sum(
+            s.replay_mismatch for s in self.slots)
+
+    def _latch_integrity(self) -> None:
+        """Snapshot per-slot integrity violations BEFORE the post-decode
+        retire can reset them (see ``integrity_latch``).  All reads are
+        [shards, B] host pulls — the same cost as one router probe."""
+        st = self.state
+        if "nonfinite" in st:
+            nf = np.asarray(jax.device_get(st["nonfinite"]))
+            if (nf > 0).any():
+                self.latched.append("detect_nonfinite")
+        lens = np.asarray(jax.device_get(st["cache_lens"]))
+        lens = lens.reshape(-1, self.n_slots)
+        if ((lens < -1).any()
+                or (lens > self.eng.scfg.max_seq).any()
+                or (lens != lens[0]).any()):
+            self.latched.append("detect_lens_bounds")
+        if (lens[0] != self.expected_cache_lens()).any():
+            self.latched.append("detect_journal_stale")
+
     # -- request intake ---------------------------------------------------
     def submit(self, req: Request) -> None:
         # length 0 means "slot untouched" to the prefill insert, so an
         # empty prompt would desync host bookkeeping from device state
-        assert 1 <= len(req.prompt) <= self.prompt_cap, \
-            (len(req.prompt), self.prompt_cap)
-        assert req.max_new >= 1 and req.rid not in self.results
+        plen = len(req.prompt)
+        if plen == 0:
+            raise ValueError(
+                f"request {req.rid}: empty prompt — the targeted prefill "
+                "insert treats length 0 as 'leave this slot untouched', "
+                "so an admitted request needs at least 1 prompt token")
+        if plen > self.prompt_cap:
+            raise ValueError(
+                f"request {req.rid}: prompt length {plen} exceeds this "
+                f"scheduler's prompt_cap={self.prompt_cap}")
+        if plen > self.eng.scfg.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt length {plen} exceeds the "
+                f"engine's cache capacity max_seq={self.eng.scfg.max_seq}")
+        if req.max_new < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new must be ≥ 1 "
+                f"(got {req.max_new})")
+        if len(req.replay) >= req.max_new:
+            raise ValueError(
+                f"request {req.rid}: replay carries {len(req.replay)} "
+                f"tokens but max_new={req.max_new} — a resumed request "
+                "must have live tokens left to generate")
+        if req.rid in self.results:
+            raise ValueError(f"request {req.rid}: duplicate request id")
         self.queue.append(req)
         self.results[req.rid] = RequestResult(rid=req.rid)
 
@@ -146,20 +271,36 @@ class SlotScheduler:
         for b, req in admitted:
             toks[b, :len(req.prompt)] = np.asarray(req.prompt, np.int32)
             lens[b] = len(req.prompt)
+        if self.hooks is not None:
+            toks, lens = self.hooks.admit_args(self, toks, lens)
         first, self.state = self.eng.admit_fn(
             self.eng.params["train"], self.state, toks, lens)
         first = np.asarray(jax.device_get(first)).reshape(-1)
         for b, req in admitted:
-            self.slots[b] = _Slot(rid=req.rid, remaining=req.max_new)
+            self.slots[b] = _Slot(rid=req.rid, remaining=req.max_new,
+                                  prompt_len=len(req.prompt),
+                                  replay=list(req.replay))
             res = self.results[req.rid]
             res.slot, res.admit_tick = b, self.tick
             self.events.append((self.tick, "admit", req.rid, b))
             self._emit(b, int(first[b]))
+        if self.hooks is not None:
+            self.hooks.post_admit(self)
 
     def _emit(self, b: int, tok: int) -> None:
         s = self.slots[b]
+        if s.replay:
+            # recovery replay: the journal is authoritative — the
+            # engine's re-emitted token must MATCH it (same weights,
+            # same inputs); count any divergence as a detection signal
+            # rather than corrupting the stream
+            want = s.replay.pop(0)
+            if tok != want:
+                s.replay_mismatch += 1
+            tok = want
         s.last_tok = tok
         s.remaining -= 1
+        s.emitted += 1
         self.results[s.rid].tokens.append(tok)
 
     def _retire_finished(self) -> None:
@@ -175,22 +316,46 @@ class SlotScheduler:
             rid = self.slots[b].rid
             self.results[rid].finish_tick = self.tick
             self.events.append((self.tick, "finish", rid, b))
+            self._replay_mismatch_retired += self.slots[b].replay_mismatch
             self.slots[b] = _Slot()
         self.state = self.eng.retire_fn(self.state, mask)
 
     # -- one scheduler tick ----------------------------------------------
     def step(self) -> None:
+        if self.hooks is not None:
+            self.hooks.pre_step(self)
         self._admit()
+        if self.integrity_latch and any(
+                not s.free and (s.remaining <= 0
+                                or (self.eos_id is not None
+                                    and s.last_tok == self.eos_id))
+                for s in self.slots):
+            # a request admitted THIS tick finishes before the decode
+            # stage — latch now or the retire below erases the evidence
+            # of a dropped/corrupted admit
+            self._latch_integrity()
         self._retire_finished()          # one-token / instant-EOS admits
         active = [b for b, s in enumerate(self.slots) if not s.free]
         if active:
             tok_in = np.asarray([s.last_tok for s in self.slots], np.int32)
-            nxt, self.state = self.eng.decode_fn(
-                self.eng.params["serve"], self.state, tok_in)
-            self.decode_calls += 1
-            nxt = np.asarray(jax.device_get(nxt)).reshape(-1)
+            if self.hooks is not None and self.hooks.decode_blackholed(self):
+                # the decode call never returns: the host loop proceeds
+                # on a stale echo of its own inputs while device state
+                # freezes — the router's expected-lens cross-check trips
+                # at its next probe (DESIGN.md §9)
+                nxt = tok_in
+            else:
+                params, st, ti = self.eng.params["serve"], self.state, tok_in
+                if self.hooks is not None:
+                    params, st, ti = self.hooks.decode_args(
+                        self, params, st, ti)
+                nxt, self.state = self.eng.decode_fn(params, st, ti)
+                self.decode_calls += 1
+                nxt = np.asarray(jax.device_get(nxt)).reshape(-1)
             for b in active:
                 self._emit(b, int(nxt[b]))
+            if self.integrity_latch:
+                self._latch_integrity()
             self._retire_finished()
         self.occupancy.append(len(active) / self.n_slots)
         self.tick += 1

@@ -41,6 +41,21 @@ def _report(**overrides):
     return {"archs": {"llama2-7b": {"variants": {"pallas_prepack": cell}}}}
 
 
+def _chaos_report(**overrides):
+    cell = {
+        "detect_steps": 0,
+        "recovery_steps": 4,
+        "availability_pct": 62.5,
+        "oracle_exact_pct": 100.0,
+        "ticks": 11,                          # context, never gated
+    }
+    cell.update(overrides)
+    rep = _report()
+    rep["router_chaos"] = {"arch": "llama2-7b",
+                           "faults": {"corrupt_kv": cell}}
+    return rep
+
+
 def test_identical_reports_pass(cb):
     base = _report()
     ok, table = cb.check(copy.deepcopy(base), base)
@@ -122,6 +137,31 @@ def test_main_exit_codes_and_table(cb, tmp_path, capsys):
     assert "FAIL" in capsys.readouterr().out
 
 
+def test_router_chaos_cells_gate_exactly(cb):
+    """Every fleet-chaos column is a robustness invariant: slower
+    detection, longer recovery, lower availability, or a stream
+    diverging from the oracle all FAIL exactly — in both directions
+    (an unexplained improvement means the scenario changed)."""
+    base = _chaos_report()
+    ok, table = cb.check(copy.deepcopy(base), base)
+    assert ok
+    for col, bad in (("detect_steps", 2), ("recovery_steps", 9),
+                     ("availability_pct", 50.0),
+                     ("oracle_exact_pct", 83.3)):
+        ok, table = cb.check(_chaos_report(**{col: bad}), base)
+        assert not ok, col
+        assert col in table and "router_chaos/corrupt_kv" in table
+    # wall-free context columns (tick counts) are never gated
+    ok, _ = cb.check(_chaos_report(ticks=99), base)
+    assert ok
+    # a fault kind vanishing from the sweep is a regression
+    cur = copy.deepcopy(base)
+    del cur["router_chaos"]["faults"]["corrupt_kv"]
+    ok, table = cb.check(cur, base)
+    assert not ok
+    assert "vanished" in table
+
+
 def test_committed_baseline_gates_itself(cb):
     """The committed baseline must pass against itself and carry every
     gated column for every cell — guards against committing a stale or
@@ -136,3 +176,11 @@ def test_committed_baseline_gates_itself(cb):
         for v, d in e["variants"].items():
             for col in cb.GATED_COLUMNS:
                 assert col in d, (arch, v, col)
+    # the chaos sweep must be in the baseline with every gated column
+    # for every fault kind the harness defines
+    from repro.serving.faults import FAULT_KINDS
+    faults = base["router_chaos"]["faults"]
+    assert set(faults) == set(FAULT_KINDS)
+    for kind, d in faults.items():
+        for col in cb.ROUTER_GATED_COLUMNS:
+            assert col in d, (kind, col)

@@ -1,4 +1,5 @@
-"""Checkpoint manager: atomic commit, keep-k, async, resume, elastic."""
+"""Checkpoint manager: atomic commit, keep-k, async, resume, elastic,
+and loud restore-time validation (shape/dtype per leaf, truncation)."""
 import os
 
 import jax
@@ -6,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import CheckpointManager, CheckpointMismatch
 
 
 def _tree(seed):
@@ -55,6 +56,54 @@ def test_elastic_restore_dp_change(tmp_path):
     restored, _ = mgr.restore_elastic(small)
     np.testing.assert_allclose(np.asarray(restored["w"]),
                                np.arange(16.0).reshape(4, 4))
+
+
+def test_restore_shape_mismatch_names_leaf(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, _tree(3))
+    bad = _tree(0)
+    bad["b"]["c"] = jnp.arange(9.0)           # 6 → 9 elements
+    with pytest.raises(CheckpointMismatch) as ei:
+        mgr.restore(bad)
+    # names the PATH of the first mismatched leaf, not just an index
+    assert "'c'" in str(ei.value) and "shape" in str(ei.value)
+
+
+def test_restore_dtype_mismatch_names_leaf(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, _tree(3))
+    bad = _tree(0)
+    bad["a"] = bad["a"].astype(jnp.bfloat16)
+    with pytest.raises(CheckpointMismatch) as ei:
+        mgr.restore(bad)
+    assert "'a'" in str(ei.value) and "dtype" in str(ei.value)
+    assert "bfloat16" in str(ei.value)
+
+
+def test_restore_leaf_count_drift_fails(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, _tree(3))
+    bad = _tree(0)
+    bad["extra_leaf"] = jnp.zeros((2,))
+    with pytest.raises(CheckpointMismatch, match="structure drift"):
+        mgr.restore(bad)
+
+
+def test_truncated_checkpoint_fails_loudly(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, _tree(3))
+    os.remove(tmp_path / "step_00000001" / "leaf_00002.npy")
+    with pytest.raises(CheckpointMismatch, match="missing"):
+        mgr.restore(_tree(0))
+
+
+def test_corrupted_leaf_fails_loudly(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, _tree(3))
+    with open(tmp_path / "step_00000001" / "leaf_00000.npy", "wb") as f:
+        f.write(b"\x93NUMPY garbage that is not a valid npy payload")
+    with pytest.raises(CheckpointMismatch, match="unreadable"):
+        mgr.restore(_tree(0))
 
 
 @pytest.mark.multidevice

@@ -133,7 +133,7 @@ def test_fused_tail_matches_unfused_single_device(cap):
     from repro.models.ctx import single_device_ctx
     from repro.models.layers import lm_head_logits, rms_norm, softcap
     from repro.serving.engine import (ServeConfig, _fused_head_tail,
-                                      greedy_sample)
+                                      greedy_sample_pair)
     cfg = reduced(get_config("gemma2-27b" if cap else "llama2-7b"))
     ctx = single_device_ctx()
     scfg = ServeConfig(max_seq=16, batch_local=3, backend="pallas",
@@ -144,12 +144,17 @@ def test_fused_tail_matches_unfused_single_device(cap):
     tab = _mk(rng, (V, D), jnp.bfloat16, 0.05)
     ln = _mk(rng, (D,), jnp.float32, 0.1)
     w = df.PackedHeadWeights(table=tab, ln=ln)
-    got = _fused_head_tail(ctx, cfg, scfg, w, x)
+    got_tok, got_val = _fused_head_tail(ctx, cfg, scfg, w, x)
     logits = lm_head_logits(ctx, tab, rms_norm(x, ln, cfg.norm_eps))
     if cap:
         logits = softcap(logits, cap)
-    want = greedy_sample(ctx, logits)
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # both halves of the (token, max-logit) pair must match: the token
+    # is the sampled output, the max logit feeds the check_finite
+    # per-slot sentinel (serving/engine._finite_violations)
+    want_tok, want_val = greedy_sample_pair(ctx, logits)
+    np.testing.assert_array_equal(np.asarray(got_tok), np.asarray(want_tok))
+    np.testing.assert_allclose(np.asarray(got_val), np.asarray(want_val),
+                               rtol=1e-6)
 
 
 # ---------------------------------------------------------------------------
@@ -318,12 +323,12 @@ def test_fused_head_tail_cluster_sweep_token_exact():
                     tab_l = jax.lax.dynamic_slice_in_dim(
                         tab, r * v_loc, v_loc, axis=0)
                     w = df.PackedHeadWeights(table=tab_l, ln=ln)
-                    fused = _fused_head_tail(ctx, cfg, scfg, w, x)
+                    fused_tok, _ = _fused_head_tail(ctx, cfg, scfg, w, x)
                     lg = lm_head_logits(ctx, tab_l,
                                         rms_norm(x, ln, cfg.norm_eps))
                     if cap:
                         lg = softcap(lg, cap)
-                    return fused[None], greedy_sample(ctx, lg)[None]
+                    return fused_tok[None], greedy_sample(ctx, lg)[None]
 
                 got, want = jax.jit(shard_map(
                     body, mesh=mesh, in_specs=(P(),) * 3,

@@ -199,6 +199,84 @@ def test_params_pair_guard():
         prefill(None, None, None, pair, None, None)
 
 
+# ---------------------------------------------------------------------------
+# Admission hardening
+# ---------------------------------------------------------------------------
+def test_submit_rejects_malformed_requests():
+    """Zero-length and oversized prompts (and degenerate budgets) are
+    rejected AT SUBMIT with a ValueError naming the violated limit —
+    they must never reach the device admit path."""
+    cfg, eng = _build(n_slots=2, max_seq=16)
+    sched = SlotScheduler(eng, prompt_cap=8)
+    with pytest.raises(ValueError, match="empty prompt"):
+        sched.submit(Request(0, [], 3))
+    with pytest.raises(ValueError, match="prompt_cap=8"):
+        sched.submit(Request(1, [1] * 9, 3))
+    with pytest.raises(ValueError, match="max_seq=16"):
+        SlotScheduler(eng, prompt_cap=32).submit(Request(2, [1] * 20, 3))
+    with pytest.raises(ValueError, match="max_new"):
+        sched.submit(Request(3, [1, 2], 0))
+    with pytest.raises(ValueError, match="replay"):
+        sched.submit(Request(4, [1, 2], 2, replay=[5, 6]))
+    sched.submit(Request(5, [1, 2], 3))
+    with pytest.raises(ValueError, match="duplicate"):
+        sched.submit(Request(5, [1, 2], 3))
+    # rejected requests left no trace: the accepted one runs clean
+    res = sched.run()
+    assert set(res) == {5} and len(res[5].tokens) == 3
+
+
+def test_same_slot_retire_readmit_no_kv_leak():
+    """Regression for the recovery path: retire a request and re-admit a
+    DIFFERENT one into the same slot — the successor's tokens must equal
+    its dense single-request reference (no stale KV rows, lengths, or
+    finite-sentinel state leaking across the slot's lifetimes)."""
+    cfg, eng = _build(n_slots=1, check_finite=True)
+    rng = np.random.default_rng(21)
+    vocab = cfg.vocab_size
+    first = Request(0, [int(t) for t in rng.integers(1, vocab, 7)], 6)
+    second = Request(1, [int(t) for t in rng.integers(1, vocab, 3)], 8)
+    sched = SlotScheduler(eng, prompt_cap=8)
+    sched.submit(first)
+    sched.submit(second)
+    res = sched.run()
+    # both rode slot 0, sequentially
+    admits = [(r, s) for t, k, r, s in sched.events if k == "admit"]
+    assert admits == [(0, 0), (1, 0)]
+    for req in (first, second):
+        want = _reference_tokens(eng, 8, req)
+        assert res[req.rid].tokens == want, (req.rid, res[req.rid].tokens,
+                                             want)
+    assert (sched.cache_lens() == -1).all()
+    assert sched.replay_mismatches() == 0
+
+
+def test_replay_reconstruction_matches_uninterrupted_run():
+    """The recovery primitive in isolation: run a request to completion,
+    then resubmit it with the first k tokens as ``replay`` — the replayed
+    stream must be byte-identical and report zero mismatches."""
+    cfg, eng = _build(n_slots=2)
+    rng = np.random.default_rng(5)
+    req = Request(0, [int(t) for t in rng.integers(1, cfg.vocab_size, 5)], 7)
+    full = SlotScheduler(eng, prompt_cap=8)
+    full.submit(req)
+    want = full.run()[0].tokens
+    for k in (1, 3, len(want) - 1):
+        sched = SlotScheduler(eng, prompt_cap=8)
+        sched.submit(Request(0, list(req.prompt), req.max_new,
+                             replay=want[:k]))
+        got = sched.run()[0].tokens
+        assert got == want, (k, got, want)
+        assert sched.replay_mismatches() == 0
+    # a WRONG journal is flagged, and the journal value stays authoritative
+    sched = SlotScheduler(eng, prompt_cap=8)
+    bad = [want[0] + 1] + want[1:3]
+    sched.submit(Request(0, list(req.prompt), req.max_new, replay=bad))
+    got = sched.run()[0].tokens
+    assert sched.replay_mismatches() >= 1
+    assert got[:3] == bad                      # journal wins the stream
+
+
 @pytest.mark.multidevice
 def test_scheduler_backend_parity_pallas_prepack():
     """The same trace through the scheduler on backend=xla and on the
