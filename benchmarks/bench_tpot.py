@@ -22,7 +22,11 @@ Measurements per arch:
   multi-replica router (serving/router.py) driven through every fault
   kind (serving/faults.py), emitting deterministic detection-latency /
   recovery-steps / availability / oracle-exactness columns that
-  scripts/check_bench.py gates exactly (DESIGN.md §9).
+  scripts/check_bench.py gates exactly (DESIGN.md §9) — plus an
+  ``sdc_sweep`` section: the single-bit silent-data-corruption
+  coverage matrix (serving/sweep.py — detection coverage, latency,
+  oracle exactness per (fault kind × bit), and the fault-free
+  false-positive / probe-overhead control row).
 
 Besides the CSV rows, the run emits a machine-readable ``BENCH_tpot.json``
 (``--out``) carrying TPOT per (arch × variant × cache_len bucket) plus
@@ -376,6 +380,67 @@ def _bench_router_chaos(arch, *, n_replicas=2, prompt_cap=8, max_new_cap=8,
     }
 
 
+def _bench_sdc_sweep(arch, *, n_replicas=2, prompt_cap=8, max_new=6,
+                     n_requests=3, bits=(0, 7, 14), fault_step=2,
+                     rows=None, seed=0):
+    """Silent-data-corruption coverage sweep: single-bit KV and weight
+    flips at representative bf16 positions (mantissa 0, exponent 7/14)
+    through the systematic FaultSweep grid, plus the fault-free control
+    row (zero false positives, streams byte-equal to the probes-off
+    oracle, per-tick probe bytes).  Every coverage/latency column is
+    deterministic tick arithmetic; the probe-bytes column is exact shape
+    arithmetic — all gated by check_bench.py (SDC_GATED_COLUMNS).  The
+    full 16-bit grid runs in the nightly sweep (tests + CI); the bench
+    keeps the representative sub-grid so --trace stays fast."""
+    from repro.launch.mesh import make_test_mesh as _mk
+    from repro.launch.serve import build_replicas
+    from repro.serving.faults import FaultSweep
+    from repro.serving.integrity import IntegrityConfig
+    from repro.serving.sweep import run_sdc_sweep
+
+    cfg = reduced(get_config(arch))
+    if cfg.moe is not None:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, moe=None)
+    mesh = _mk(data=1, model=1)
+    engines = build_replicas(cfg, mesh, n_replicas=n_replicas,
+                             max_seq=prompt_cap + max_new + 8,
+                             batch_global=2, backend="xla")
+    rng = np.random.default_rng(seed)
+    prompts = [[int(t) for t in rng.integers(1, cfg.vocab_size,
+                                             int(rng.integers(2, 6)))]
+               for _ in range(n_requests)]
+    cells = run_sdc_sweep(
+        engines, prompts=prompts, max_new=max_new, prompt_cap=prompt_cap,
+        sweep=FaultSweep(bits=tuple(bits), steps=(fault_step,),
+                         targets=(0,), seed=seed),
+        icfg=IntegrityConfig(weight_leaves_per_tick=4))
+    if rows is not None:
+        ff = cells["fault_free"]
+        rows.append(row(
+            f"sdc_sweep_fault_free_{arch}", ff["probe_bytes_per_tick"],
+            f"false_positives={ff['false_positive_signals']:.0f},"
+            f"streams_match={ff['streams_match']:.0f}"))
+        for key in sorted(k for k in cells if k != "fault_free"):
+            c = cells[key]
+            rows.append(row(
+                f"sdc_sweep_{key}_{arch}", float(c["detect_steps"]),
+                f"detected={c['detected_pct']:.0f}%,"
+                f"oracle_exact={c['oracle_exact_pct']:.0f}%"))
+    return {
+        "arch": arch,
+        "n_replicas": n_replicas,
+        "n_requests": n_requests,
+        "fault_step": fault_step,
+        "bits": list(bits),
+        "cells": cells,
+        "note": "coverage/latency columns are deterministic tick "
+                "arithmetic; probe_bytes_per_tick is exact shape "
+                "arithmetic — gated by scripts/check_bench.py "
+                "(SDC_GATED_COLUMNS)",
+    }
+
+
 def main(archs=("llama2-7b", "deepseek-v2-lite"), *, max_seq=256, batch=4,
          prompt_len=64, cache_lens=(16, 64, 192), iters=15,
          out_path="BENCH_tpot.json", fusion_baseline=True,
@@ -440,6 +505,10 @@ def main(archs=("llama2-7b", "deepseek-v2-lite"), *, max_seq=256, batch=4,
         # columns per fault kind, gated by scripts/check_bench.py
         # (ROUTER_GATED_COLUMNS) against the committed baseline
         report["router_chaos"] = _bench_router_chaos(trace_arch, rows=rows)
+        # SDC coverage sweep: single-bit flip detection/latency/false-
+        # positive matrix (serving/sweep.py), gated by check_bench.py
+        # (SDC_GATED_COLUMNS) against the committed baseline
+        report["sdc_sweep"] = _bench_sdc_sweep(trace_arch, rows=rows)
     if out_path:
         with open(out_path, "w") as f:
             json.dump(report, f, indent=1, sort_keys=True)

@@ -18,6 +18,17 @@ fault-free oracle run (DESIGN.md §9):
 
     PYTHONPATH=src python examples/serve_requests.py \\
         --replicas 2 --fault corrupt_kv
+
+Single-bit SDC faults take ``--bit`` (``--fault flip_kv_bit --bit 7``
+flips one exponent bit below the non-finite floor — only the integrity
+fingerprints can see it).  ``--sweep`` runs the systematic single-bit
+fault sweep (serving/sweep.py) over the fleet and prints the detection
+coverage matrix (detected% / latency / oracle-exact% per fault kind ×
+bit position, plus the fault-free false-positive control row):
+
+    PYTHONPATH=src python examples/serve_requests.py --sweep
+    PYTHONPATH=src python examples/serve_requests.py --sweep \\
+        --sweep-bits all          # every bf16 bit position (nightly CI)
 """
 import argparse
 import os
@@ -60,8 +71,18 @@ def main():
                          "mode with ≥2 replicas)")
     ap.add_argument("--fault-step", type=int, default=2,
                     help="fleet tick at which the fault arms")
+    ap.add_argument("--bit", type=int, default=7,
+                    help="bit position for the flip_* fault kinds "
+                         "(bf16: 0-6 mantissa, 7-14 exponent, 15 sign)")
+    ap.add_argument("--sweep", action="store_true",
+                    help="run the systematic single-bit SDC fault sweep "
+                         "and print the coverage matrix (implies fleet "
+                         "mode)")
+    ap.add_argument("--sweep-bits", default="0,7,14",
+                    help="comma-separated bit positions for --sweep, or "
+                         "'all' for the full 16-bit grid")
     args = ap.parse_args()
-    if args.fault is not None:
+    if args.fault is not None or args.sweep:
         args.replicas = max(args.replicas, 2)
     if args.replicas > 1:
         return fleet_main(args)
@@ -118,7 +139,8 @@ def main():
 
 def fleet_main(args):
     from repro.launch.serve import build_replicas
-    from repro.serving.faults import FAULT_KINDS, FaultInjector, FaultSpec
+    from repro.serving.faults import (ALL_FAULT_KINDS, BIT_FAULT_KINDS,
+                                      FaultInjector, FaultSpec)
     from repro.serving.router import Router
 
     cfg = reduced(get_config(args.arch))
@@ -139,14 +161,33 @@ def fleet_main(args):
             rid, [int(t) for t in rng.integers(1, cfg.vocab_size, plen)],
             int(rng.integers(2, max_new_cap + 1)))))
 
-    def run(injectors=None):
+    def run(injectors=None, integrity=None):
         r = Router(engines, prompt_cap=args.prompt_cap,
-                   max_new_cap=max_new_cap, injectors=injectors)
+                   max_new_cap=max_new_cap, injectors=injectors,
+                   integrity=integrity)
         journal = r.run([(t, Request(q.rid, q.prompt, q.max_new))
                          for t, q in trace])
         return r, journal
 
     print(f"fleet: {args.replicas} replicas, {args.requests} requests")
+    if args.sweep:
+        from repro.serving.faults import FaultSweep
+        from repro.serving.integrity import IntegrityConfig
+        from repro.serving.sweep import format_coverage, run_sdc_sweep
+        bits = (tuple(range(16)) if args.sweep_bits == "all"
+                else tuple(int(b) for b in args.sweep_bits.split(",")))
+        print(f"systematic single-bit SDC sweep: kinds {BIT_FAULT_KINDS} "
+              f"x bits {bits} x step {args.fault_step}")
+        t0 = time.time()
+        cells = run_sdc_sweep(
+            engines, prompts=[q.prompt for _, q in trace],
+            max_new=6, prompt_cap=args.prompt_cap,
+            sweep=FaultSweep(bits=bits, steps=(args.fault_step,),
+                             seed=args.seed),
+            icfg=IntegrityConfig(weight_leaves_per_tick=4))
+        print(format_coverage(cells))
+        print(f"sweep drained in {time.time() - t0:.2f}s")
+        return
     t0 = time.time()
     _, oracle = run()
     print(f"fault-free oracle drained in {time.time() - t0:.2f}s")
@@ -155,11 +196,19 @@ def fleet_main(args):
             print(f"req {rid}: replicas {e.replicas} ticks "
                   f"[{e.submit_tick}, {e.finish_tick}] tokens {e.tokens}")
         return
-    if args.fault not in FAULT_KINDS:
-        raise SystemExit(f"--fault must be one of {FAULT_KINDS}")
+    if args.fault not in ALL_FAULT_KINDS:
+        raise SystemExit(f"--fault must be one of {ALL_FAULT_KINDS}")
+    bit = args.bit if args.fault in BIT_FAULT_KINDS else -1
     inj = FaultInjector([FaultSpec(args.fault, step=args.fault_step,
-                                   target=0, seed=args.seed, replica=0)])
-    router, journal = run({0: inj})
+                                   target=0, seed=args.seed, replica=0,
+                                   bit=bit)])
+    # single-bit faults are invisible to the PR-6 probes — they need the
+    # integrity fingerprints (and the deferred-commit window they imply)
+    icfg = None
+    if args.fault in BIT_FAULT_KINDS:
+        from repro.serving.integrity import IntegrityConfig
+        icfg = IntegrityConfig(weight_leaves_per_tick=4)
+    router, journal = run({0: inj}, integrity=icfg)
     print(f"\ninjected {args.fault} at tick {args.fault_step} "
           f"into replica 0")
     for d in router.detections:

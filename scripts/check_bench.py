@@ -61,7 +61,25 @@ ROUTER_GATED_COLUMNS: Dict[str, Tuple[str, float]] = {
     "oracle_exact_pct": ("count", 0.0),
 }
 
-_ALL_COLUMNS = {**GATED_COLUMNS, **ROUTER_GATED_COLUMNS}
+# SDC-sweep columns (``report["sdc_sweep"]["cells"][<cell>]``, emitted
+# under ``--trace``): single-bit fault detection coverage / latency /
+# oracle exactness per (fault kind × bit position), plus the fault-free
+# control row (false-positive signal count, stream byte-equality, and
+# per-tick probe bytes).  Coverage and latency are deterministic tick
+# arithmetic and gate exactly; probe bytes are exact shape arithmetic
+# but carry the bytes policy (a DROP in probe coverage should show up
+# as the coverage columns changing, not sneak through the byte gate).
+SDC_GATED_COLUMNS: Dict[str, Tuple[str, float]] = {
+    "detected_pct": ("count", 0.0),
+    "detect_steps": ("count", 0.0),
+    "oracle_exact_pct": ("count", 0.0),
+    "false_positive_signals": ("count", 0.0),
+    "streams_match": ("count", 0.0),
+    "probe_bytes_per_tick": ("bytes", 0.05),
+}
+
+_ALL_COLUMNS = {**GATED_COLUMNS, **ROUTER_GATED_COLUMNS,
+                **SDC_GATED_COLUMNS}
 
 _ABS_EPS = 1e-9      # float-repr jitter floor for the bytes columns
 
@@ -78,6 +96,11 @@ def _cells(report: dict):
         for col in ROUTER_GATED_COLUMNS:
             if col in d:
                 yield ("router_chaos", kind), col, float(d[col])
+    sdc = report.get("sdc_sweep", {})
+    for cell, d in sorted(sdc.get("cells", {}).items()):
+        for col in SDC_GATED_COLUMNS:
+            if col in d:
+                yield ("sdc_sweep", cell), col, float(d[col])
 
 
 def diff_reports(current: dict, baseline: dict) -> List[dict]:

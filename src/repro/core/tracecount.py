@@ -53,6 +53,10 @@ zero per-layer activation psums); the fused-head step adds exactly ONE
   (``serving/engine._finite_violations``): one bump per guarded program,
   proof the guard is IN the compiled step (and absent when the flag is
   off — the bench path must trace zero of these).
+* ``kv_fp_update`` — the incremental KV-cache checksum update traced
+  into the decode/admit steps when ``ServeConfig.kv_fingerprint`` is on
+  (serving/integrity.py): one bump per fingerprinting program, proof
+  the SDC accumulator is IN the compiled step (and absent when off).
 
 Besides the trace-time counters, this module hosts the RUNTIME work
 counters for ragged decode (:func:`live_attend_blocks`): a pure-jnp
@@ -80,9 +84,29 @@ one count per integrity probe that fires — labels:
   out of the fault model, asserted zero in tests; DESIGN.md §9).
 * ``detect_heartbeat`` — the replica raised (killed) inside its step.
 * ``replica_failed`` — one per replica the router drained.
+* ``detect_kv_fingerprint`` — a KV-cache bit-pattern checksum diverged
+  from the device fingerprint leaf (serving/integrity.py): silent data
+  corruption in cached K/V, below the non-finite floor.
+* ``detect_weight_fingerprint`` — a serve-tree leaf's checksum diverged
+  from its prepack-time reference (rotating spot-check).
+* ``detect_shadow_recompute`` — the host shadow recompute of a slot's
+  winning logit disagreed with the device's ``head_val`` beyond
+  tolerance (head-path SDC the checksums cannot see).
+* ``replica_healed`` — a weight-SDC replica re-materialized its serve
+  layout from the train view, re-verified every fingerprint, and
+  rejoined the fleet (serving/router.py).
+* ``request_failed`` — a request hit the router's ``max_requeues`` cap
+  and was terminally FAILED instead of re-queued (requeue-storm guard).
 
 These are plain host counters (no trace interaction) so chaos tests can
 assert detection latency in *scheduler ticks* without parsing events.
+
+A fourth family, the PROBE-OVERHEAD counters (:func:`record_probe`),
+accounts what the SDC probes themselves cost: ``probe_ticks`` (one per
+monitor probe call) and ``probe_bytes_kv`` / ``probe_bytes_weights`` /
+``probe_bytes_shadow`` (host bytes pulled per probe family) — the
+bench's ``sdc_sweep.fault_free.probe_bytes_per_tick`` column divides
+these out, so per-tick probe overhead is a gated, tracked number.
 """
 from __future__ import annotations
 
@@ -145,6 +169,25 @@ def signal_totals() -> Counter:
 def reset_signals() -> None:
     """Zero the detection-signal counters (test isolation)."""
     _SIGNALS.clear()
+
+
+_PROBES: Counter = Counter()
+
+
+def record_probe(name: str, n: int = 1) -> None:
+    """Account SDC-probe overhead (always on, host-side — see the
+    probe-counter label list in the module docstring)."""
+    _PROBES[name] += n
+
+
+def probe_totals() -> Counter:
+    """Snapshot of the probe-overhead counters."""
+    return Counter(_PROBES)
+
+
+def reset_probes() -> None:
+    """Zero the probe-overhead counters (test / bench isolation)."""
+    _PROBES.clear()
 
 
 @contextmanager

@@ -58,6 +58,10 @@ class EngineHandle(NamedTuple):
     cfg: Any
     mesh: Any
     batch_global: int
+    # re-materialize the serve layout from the train view — the
+    # weight-SDC healing path (serving/integrity.py) calls this after a
+    # fingerprint mismatch, then re-verifies before the replica rejoins
+    repack_fn: Optional[Callable] = None
 
 
 def build_engine(cfg, mesh, *, max_seq: int, batch_global: int,
@@ -86,6 +90,8 @@ def build_engine_full(cfg, mesh, *, max_seq: int, batch_global: int,
                       autotune_table: Optional[str] = None,
                       track_work: bool = False, fuse_head: bool = True,
                       check_finite: bool = False,
+                      kv_fingerprint: bool = False,
+                      shadow_head: bool = False,
                       plan_seq_len: Optional[int] = None) -> EngineHandle:
     """Build every jitted serving step for (cfg × mesh).
 
@@ -106,7 +112,11 @@ def build_engine_full(cfg, mesh, *, max_seq: int, batch_global: int,
     read.  ``check_finite`` adds the per-slot integrity sentinel
     (``state["nonfinite"]``) the fleet router's health probes poll
     (serving/router.py, DESIGN.md §9); off by default so the bench path
-    traces an identical step.  ``fuse_head=False`` skips the LM-head/sampling tail bundle on
+    traces an identical step.  ``kv_fingerprint`` adds the incremental
+    per-slot/per-layer KV checksum leaves and ``shadow_head`` the
+    committed-token (residual, head_val, token) stash the SDC monitor
+    verifies on probe (serving/integrity.py) — both off by default for
+    the same reason.  ``fuse_head=False`` skips the LM-head/sampling tail bundle on
     the prepacked path (ablation/parity knob: same fused layers, loose
     XLA head tail — tests prove the two sample token-identically).  ``plan_seq_len`` keys the autotune bucket on the EXPECTED MAX
     LIVE length rather than the allocated ``max_seq`` — ragged serving
@@ -136,7 +146,9 @@ def build_engine_full(cfg, mesh, *, max_seq: int, batch_global: int,
                        block_f=block_f or plan.block_f,
                        block_v=block_v or plan.block_v,
                        prepack=plan.prepack, track_work=track_work,
-                       check_finite=check_finite)
+                       check_finite=check_finite,
+                       kv_fingerprint=kv_fingerprint,
+                       shadow_head=shadow_head)
     params_abs = jax.eval_shape(
         lambda: init_device_major(cfg, lay, jax.random.PRNGKey(0)))
     p_specs = param_specs(cfg, params_abs)
@@ -160,8 +172,8 @@ def build_engine_full(cfg, mesh, *, max_seq: int, batch_global: int,
         sub_abs = jax.eval_shape(pp_fn, attn_subtree(params_abs))
         sub_specs = param_specs(cfg, sub_abs)
         sub_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), sub_specs)
-        packed_attn = jax.jit(pp_fn, out_shardings=sub_sh)(
-            attn_subtree(params))
+        jit_pack = jax.jit(pp_fn, out_shardings=sub_sh)
+        packed_attn = jit_pack(attn_subtree(params))
         # dense-FFN and LM-head bundles are pure aliasing (no jit, no
         # copy): the Megatron layout already IS the fused-FFN serve
         # layout, and the head bundle binds the tied-embed/lm_head table
@@ -173,8 +185,18 @@ def build_engine_full(cfg, mesh, *, max_seq: int, batch_global: int,
             return tree
         params_serve = _bundles(merge_packed(params, packed_attn))
         sv_specs = _bundles(merge_packed(p_specs, sub_specs))
+
+        def repack_fn(train_tree):
+            # the healing re-materialization runs the SAME jitted pack +
+            # alias bundles the load path ran, so a healed serve tree is
+            # bit-identical to the original (fingerprints re-verify)
+            return _bundles(merge_packed(
+                train_tree, jit_pack(attn_subtree(train_tree))))
     else:
         params_serve, sv_specs = params, p_specs
+
+        def repack_fn(train_tree):
+            return train_tree     # prepack off: serve tree IS train tree
     params = {"train": params, "serve": params_serve}
 
     from repro.launch.specs import state_spec_tree
@@ -228,11 +250,12 @@ def build_engine_full(cfg, mesh, *, max_seq: int, batch_global: int,
                                in_specs=(s_specs, tok1),
                                out_specs=s_specs, check_vma=False))
     return EngineHandle(params, pf, dec, admit, retire, state, lay, scfg,
-                        cfg, mesh, batch_global)
+                        cfg, mesh, batch_global, repack_fn)
 
 
 def build_replicas(cfg, mesh, *, n_replicas: int, max_seq: int,
                    batch_global: int, check_finite: bool = True,
+                   kv_fingerprint: bool = True, shadow_head: bool = True,
                    track_work: bool = False, **kw):
     """N engine replicas for the fleet router (serving/router.py).
 
@@ -244,12 +267,16 @@ def build_replicas(cfg, mesh, *, n_replicas: int, max_seq: int,
     re-queued onto a survivor continues token-for-token where the dead
     replica's journal left off (DESIGN.md §9).
 
-    ``check_finite`` defaults ON here (unlike ``build_engine_full``):
-    the router's health probes read the per-slot non-finite sentinel.
+    ``check_finite``/``kv_fingerprint``/``shadow_head`` default ON here
+    (unlike ``build_engine_full``): the router's health probes read the
+    per-slot non-finite sentinel and the SDC monitor's fingerprint /
+    shadow leaves (serving/integrity.py).
     """
     return [build_engine_full(cfg, mesh, max_seq=max_seq,
                               batch_global=batch_global,
                               check_finite=check_finite,
+                              kv_fingerprint=kv_fingerprint,
+                              shadow_head=shadow_head,
                               track_work=track_work, **kw)
             for _ in range(n_replicas)]
 

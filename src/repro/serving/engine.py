@@ -81,6 +81,19 @@ class ServeConfig:
     # on its own schedule.  Off by default so the bench path traces an
     # identical program.
     check_finite: bool = False
+    # SDC detection (serving/integrity.py, DESIGN.md §9): per-entry
+    # per-slot int32 bit-pattern checksums of the KV caches
+    # (state["kv_fp"] / state["kv_fp_tail"]), updated incrementally on
+    # append/ring-wrap inside the fused step and recomputed for
+    # admitted slots by the prefill insert; the router's probes
+    # host-verify them.  Off by default (bench path unchanged).
+    kv_fingerprint: bool = False
+    # shadow-recompute stash (serving/integrity.py): each step writes
+    # the per-slot pre-head residual + winning logit + sampled token
+    # (state["head_resid"/"head_val"/"head_tok"]) so a host probe can
+    # re-derive the committed token's logit against a pristine head
+    # copy.  Off by default.
+    shadow_head: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -162,6 +175,18 @@ def init_decode_state(cfg: ModelConfig, scfg: ServeConfig, ctx: ParallelCtx
                 B, (cfg.d_model // cfg.rwkv_head_dim) // hs,
                 cfg.rwkv_head_dim, cfg.d_model))
         for t in range(n_tail)]
+    if scfg.kv_fingerprint:
+        # one int32 [B] checksum vector per cache entry (zeros for the
+        # attention-free kinds — they ride through untouched); the lists
+        # stay parallel to state["layers"] / state["tail"]
+        state["kv_fp"] = [jnp.zeros((max(n_groups, 1), B), jnp.int32)
+                          for _ in cfg.block_pattern]
+        state["kv_fp_tail"] = [jnp.zeros((B,), jnp.int32)
+                               for _ in range(n_tail)]
+    if scfg.shadow_head:
+        state["head_resid"] = jnp.zeros((B, cfg.d_model), jnp.bfloat16)
+        state["head_val"] = jnp.zeros((B,), jnp.float32)
+        state["head_tok"] = jnp.zeros((B,), jnp.int32)
     if cfg.encoder is not None:
         kv_loc = max(1, cfg.n_kv_heads // hs)
         hd = cfg.resolved_head_dim
@@ -641,6 +666,29 @@ def decode_step(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
     if scfg.check_finite:
         new_state["nonfinite"] = state["nonfinite"] + _finite_violations(
             cfg, x, head_val, nxt, cache_len >= 0)
+    if scfg.kv_fingerprint:
+        # incremental SDC checksums (serving/integrity.py): positions
+        # whose per-row ``pos`` moved this step (append / ring wrap)
+        # contribute their old→new bit-sum delta — the accumulator
+        # tracks exactly what THIS program wrote, so a later host
+        # mismatch is corruption, never drift
+        from repro.serving.integrity import kv_fp_delta
+        tracecount.bump("kv_fp_update")
+        new_state["kv_fp"] = [
+            kv_fp_delta(old, new, fp) if hasattr(old, "k") else fp
+            for old, new, fp in zip(state["layers"], new_state["layers"],
+                                    state["kv_fp"])]
+        new_state["kv_fp_tail"] = [
+            kv_fp_delta(old, new, fp) if hasattr(old, "k") else fp
+            for old, new, fp in zip(state["tail"], new_state["tail"],
+                                    state["kv_fp_tail"])]
+    if scfg.shadow_head:
+        # atomic (residual, winning logit, token) triple per slot — the
+        # host shadow probe re-derives the logit from the residual with
+        # a pristine head copy (serving/integrity.py)
+        new_state["head_resid"] = x.astype(jnp.bfloat16)
+        new_state["head_val"] = jnp.asarray(head_val, jnp.float32)
+        new_state["head_tok"] = nxt.astype(jnp.int32)
     # only ACTIVE slots advance; free slots (−1) stay frozen until the
     # scheduler re-admits them via a prefill insert
     new_state["cache_lens"] = jnp.where(cache_len >= 0, cache_len + 1,

@@ -32,6 +32,23 @@ Fault taxonomy (DESIGN.md §9) and the probe each one trips:
   same prefix writes the same cache — so the harmful variant is the
   one with different state, and that is what the harness injects.)
 
+Bit-addressed SDC faults (BELOW the non-finite floor — a single XORed
+bit, never a NaN/Inf; serving/integrity.py is the detection layer):
+
+* ``flip_kv_bit`` — XOR bit ``spec.bit`` of one seed-chosen live K
+  element in the target slot's rank-0 cache rows → KV fingerprint.
+* ``flip_weight_bit`` — XOR bit ``spec.bit`` of one seed-chosen
+  element of serve-tree leaf ``spec.target`` (indexing
+  :func:`repro.serving.integrity.weight_leaves` order).  Unlike
+  ``poison_weight`` this mutates the replica's REAL serve tree — a
+  persistent HBM flip — so recovery must re-materialize the layout
+  from the train view (the router's heal path) → rotating weight
+  fingerprint (or the shadow recompute, for head-path leaves).
+
+:class:`FaultSweep` enumerates systematic (kind × target × bit × step
+× replica) grids of these specs for the DAVOS-style coverage sweeps
+(serving/sweep.py, ROADMAP fleet phase 2).
+
 All corruption is host-side ``device_get → mutate → device_put`` with
 the leaf's own sharding, so the injected state round-trips through the
 same jitted programs as real state.  Everything is seeded and
@@ -50,6 +67,8 @@ from repro.serving.scheduler import SchedulerHooks, SlotScheduler
 
 FAULT_KINDS = ("kill", "blackhole", "corrupt_kv", "corrupt_lens",
                "poison_weight", "drop_admit", "dup_admit")
+BIT_FAULT_KINDS = ("flip_kv_bit", "flip_weight_bit")
+ALL_FAULT_KINDS = FAULT_KINDS + BIT_FAULT_KINDS
 
 
 class ReplicaKilled(RuntimeError):
@@ -61,18 +80,42 @@ class ReplicaKilled(RuntimeError):
 class FaultSpec:
     """One declarative fault: ``kind`` fires at scheduler tick ``step``
     on ``replica``; ``target`` addresses a batch slot where relevant
-    (``corrupt_kv`` / ``corrupt_lens`` / ``drop_admit`` / ``dup_admit``);
-    ``seed`` drives any generated corruption bytes."""
+    (``corrupt_kv`` / ``corrupt_lens`` / ``drop_admit`` / ``dup_admit``
+    / ``flip_kv_bit``) or a serve-tree leaf index (``flip_weight_bit``);
+    ``seed`` drives any generated corruption bytes; ``bit`` is the XORed
+    bit position for the ``flip_*`` kinds (0–6 bf16 mantissa, 7–14
+    exponent, 15 sign) and must stay −1 for every other kind."""
     kind: str
     step: int
     target: int = 0
     seed: int = 0
     replica: int = 0
+    bit: int = -1
 
     def __post_init__(self):
-        if self.kind not in FAULT_KINDS:
+        if self.kind not in ALL_FAULT_KINDS:
             raise ValueError(f"unknown fault kind {self.kind!r}; "
-                             f"one of {FAULT_KINDS}")
+                             f"one of {ALL_FAULT_KINDS}")
+        if self.step < 0:
+            raise ValueError(
+                f"FaultSpec.step must be ≥ 0, got step={self.step}")
+        if self.replica < 0:
+            raise ValueError(f"FaultSpec.replica must be ≥ 0, got "
+                             f"replica={self.replica} (the router also "
+                             f"rejects replica ≥ its fleet size)")
+        if self.target < 0:
+            raise ValueError(
+                f"FaultSpec.target must be ≥ 0, got target={self.target}")
+        if self.kind in BIT_FAULT_KINDS:
+            if not 0 <= self.bit < 16:
+                raise ValueError(
+                    f"FaultSpec.bit must be in [0, 16) for "
+                    f"{self.kind!r} (bf16 bit address), got "
+                    f"bit={self.bit}")
+        elif self.bit != -1:
+            raise ValueError(f"FaultSpec.bit only applies to "
+                             f"{BIT_FAULT_KINDS}, got bit={self.bit} "
+                             f"for {self.kind!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -142,6 +185,68 @@ def poison_embed(params: Dict[str, Any], seed: int) -> Dict[str, Any]:
     return new
 
 
+def _uint_view(a: np.ndarray) -> np.ndarray:
+    """Same-buffer unsigned view for single-bit XOR (bf16 → uint16,
+    f32/int32 → uint32): mutating the view mutates ``a``."""
+    return a.view(np.dtype(f"uint{a.dtype.itemsize * 8}"))
+
+
+def flip_kv_bit(state: Dict[str, Any], slot: int, bit: int,
+                seed: int = 0) -> Dict[str, Any]:
+    """XOR bit ``bit`` of ONE seed-chosen K element in ``slot``'s rank-0
+    rows at sequence position 0 of the first attention cache (live for
+    any active slot, like :func:`corrupt_kv_slot` — but a single flipped
+    bit instead of a NaN, so the non-finite sentinel stays silent and
+    only the KV fingerprint can see it)."""
+    def flip(entry):
+        k = np.array(jax.device_get(entry.k))
+        B = entry.pos.shape[-1]
+        rows_per = k.shape[-2] // B
+        rng = np.random.default_rng(seed)
+        r = slot * rows_per + int(rng.integers(rows_per))
+        c = int(rng.integers(k.shape[-1]))
+        idx = (0, 0) + (0,) * (k.ndim - 5) + (0, r, c)
+        u = _uint_view(k)
+        u[idx] ^= np.asarray(1 << bit, u.dtype)
+        return entry._replace(k=_put_back(k, entry.k))
+
+    new = dict(state)
+    for field in ("layers", "tail"):
+        entries = list(state[field])
+        for i, entry in enumerate(entries):
+            if hasattr(entry, "k"):
+                entries[i] = flip(entry)
+                new[field] = entries
+                return new
+    raise ValueError("no attention cache in state to corrupt")
+
+
+def flip_weight_bit(params: Dict[str, Any], target: int, bit: int,
+                    seed: int = 0) -> Tuple[Dict[str, Any], str]:
+    """XOR bit ``bit`` of one seed-chosen element of serve-tree array
+    leaf ``target`` (modular index into
+    :func:`repro.serving.integrity.weight_leaves` order — the SAME
+    enumeration the monitor fingerprints, so sweeps and probes address
+    leaves identically).  Returns ``(corrupted tree, leaf name)``; the
+    caller installs the tree as the replica's live serve params (a
+    persistent flip, unlike ``poison_weight``'s shadow copy)."""
+    from repro.serving.integrity import weight_leaves
+    names = [n for n, _ in weight_leaves(params)]
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    arr_pos = [j for j, l in enumerate(flat)
+               if hasattr(l, "dtype") and hasattr(l, "shape")]
+    sel = target % len(arr_pos)
+    pos, name = arr_pos[sel], names[sel]
+    leaf = flat[pos]
+    a = np.array(jax.device_get(leaf))
+    rng = np.random.default_rng(seed)
+    u = _uint_view(a.reshape(-1))
+    i = int(rng.integers(a.size))
+    u[i] ^= np.asarray(1 << bit, u.dtype)
+    flat[pos] = _put_back(a, leaf)
+    return jax.tree_util.tree_unflatten(treedef, flat), name
+
+
 # ---------------------------------------------------------------------------
 # The injector: SchedulerHooks driven by FaultSpecs
 # ---------------------------------------------------------------------------
@@ -152,8 +257,18 @@ class FaultInjector(SchedulerHooks):
     can measure injection-to-detection latency in ticks."""
 
     def __init__(self, specs: Sequence[FaultSpec]):
+        seen: set = set()
+        for s in specs:
+            key = (s.kind, s.target, s.step, s.replica)
+            if key in seen:
+                raise ValueError(
+                    f"duplicate FaultSpec (kind, target, step, replica)="
+                    f"{key}: each fault fires exactly once, so two specs "
+                    f"at the same address are a harness bug")
+            seen.add(key)
         self.specs: List[FaultSpec] = sorted(specs, key=lambda s: s.step)
         self.fired: List[Tuple[FaultSpec, int]] = []
+        self.flipped_weight: List[str] = []
         self._done: set = set()
         self._poisoned_params = None
         self._blackholed = False
@@ -217,6 +332,19 @@ class FaultInjector(SchedulerHooks):
         for i, s in self._due(sched, "poison_weight"):
             self._mark(i, s, sched.tick)
             self._poisoned_params = poison_embed(params, s.seed)
+        for i, s in self._due(sched, "flip_kv_bit"):
+            self._mark(i, s, sched.tick)
+            state = flip_kv_bit(state, s.target, s.bit, s.seed)
+        for i, s in self._due(sched, "flip_weight_bit"):
+            self._mark(i, s, sched.tick)
+            # a PERSISTENT flip: the replica's real serve tree is
+            # replaced, so every subsequent decode uses the corrupted
+            # leaf until the router's heal path repacks from train
+            new_serve, name = flip_weight_bit(
+                sched.eng.params["serve"], s.target, s.bit, s.seed)
+            sched.eng.params["serve"] = new_serve
+            self.flipped_weight.append(name)
+            params = new_serve
         if self._poisoned_params is not None:   # weights STAY poisoned
             params = self._poisoned_params
         return params, state, tokens
@@ -228,3 +356,35 @@ class FaultInjector(SchedulerHooks):
             self._mark(i, s, sched.tick)
             self._blackholed = True     # the link stays dark
         return self._blackholed
+
+
+# ---------------------------------------------------------------------------
+# Systematic sweep grids (DAVOS-style fault loads)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class FaultSweep:
+    """Systematic (kind × target × bit × step × replica) grid of
+    single-bit fault specs.  ``targets`` are batch slots for
+    ``flip_kv_bit`` and serve-leaf indices for ``flip_weight_bit``;
+    ``bits`` are bf16 bit addresses (0–6 mantissa, 7–14 exponent, 15
+    sign).  The sweep harness (serving/sweep.py) runs ONE spec per
+    router run, so the grid measures per-fault detection coverage and
+    latency, not fault interactions."""
+    kinds: Tuple[str, ...] = BIT_FAULT_KINDS
+    targets: Tuple[int, ...] = (0,)
+    bits: Tuple[int, ...] = tuple(range(16))
+    steps: Tuple[int, ...] = (2,)
+    replicas: Tuple[int, ...] = (0,)
+    seed: int = 0
+
+    def specs(self) -> List[FaultSpec]:
+        """The grid, in deterministic (kind, target, bit, step,
+        replica) lexicographic order.  Every spec validates through
+        :class:`FaultSpec` construction."""
+        return [FaultSpec(kind, step, target=t, seed=self.seed,
+                          replica=r, bit=b)
+                for kind in self.kinds
+                for t in self.targets
+                for b in self.bits
+                for step in self.steps
+                for r in self.replicas]

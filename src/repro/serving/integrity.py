@@ -1,0 +1,326 @@
+"""Silent-data-corruption (SDC) detection for the fused decode path.
+
+Full-block fusion deletes the intermediate HBM writes where operator-
+boundary sanity checks would otherwise live (DESIGN.md §7), and the
+router's PR-6 probes only see fail-stop and non-finite faults — a bit
+flip below the non-finite floor (any mantissa bit, most exponent bits)
+changes committed tokens silently.  This module closes that gap with
+three probes, all host-side and wired into the router's per-tick probe
+loop (serving/router.py, DESIGN.md §9):
+
+1. **KV-cache fingerprints** — every attention cache entry carries a
+   per-slot int32 checksum leaf (``state["kv_fp"]`` /
+   ``state["kv_fp_tail"]``, one [B] vector per entry) over the BIT
+   PATTERNS of its K/V rows.  The decode step updates it incrementally
+   on append/ring-wrap (:func:`kv_fp_delta` — masked by the per-row
+   ``pos`` change, inside the fused program where the cache is already
+   resident); the admit insert recomputes admitted slots from scratch
+   (:func:`kv_entry_fp` — a re-admit can rewrite rows without moving
+   ``pos``).  The probe re-derives every slot's checksum on the host
+   and compares EXACTLY: integer bit-pattern sums are associative and
+   commutative, so accumulation order cannot manufacture a mismatch
+   (an f32 checksum would false-positive on reassociation — the
+   refinement over the naive scheme, DESIGN.md §9), and ANY single-bit
+   flip in a cached row is caught on the next probe (≤ 1 tick).
+2. **Weight fingerprints** — per-leaf checksums of the serve tree taken
+   at monitor construction (prepack time), spot-checked on a rotating
+   schedule of ``weight_leaves_per_tick`` leaves so the per-tick probe
+   cost is bounded.  Full coverage takes ``ceil(n_leaves / per_tick)``
+   ticks — the monitor's :meth:`IntegrityMonitor.commit_lag` — and the
+   router defers journal commits by exactly that window, so a flip
+   detected at the END of a rotation still fails the probe before any
+   token it influenced commits.
+3. **Shadow recompute** — the decode step stashes each slot's pre-head
+   residual, winning logit and sampled token
+   (``ServeConfig.shadow_head``); the probe re-derives the winning
+   logit on the host (final RMSNorm → bf16 round → f32 dot against a
+   PRISTINE copy of the head table cached at monitor init → softcap)
+   for one rotating slot per tick.  Catches head-path corruption the
+   checksums cannot see (a flipped head-table or final-norm bit flows
+   into tokens without touching any fingerprinted state).
+
+Probe overhead is accounted in :mod:`repro.core.tracecount`'s probe
+counters (``probe_bytes_kv`` / ``probe_bytes_weights`` /
+``probe_bytes_shadow`` / ``probe_ticks``) so the bench can report
+bytes-per-tick and CI can gate it.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import tracecount
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Bit-pattern checksums (device side: jnp, int32 wraparound arithmetic)
+# ---------------------------------------------------------------------------
+def _bits_i32(x: jax.Array) -> jax.Array:
+    """Reinterpret any fixed-width leaf as int32 bit patterns (bf16 →
+    int16 → sign-extended int32; f32 → int32).  Pure bit movement — two
+    tensors agree here iff they agree byte-for-byte."""
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        return x.astype(jnp.int32)
+    nbits = x.dtype.itemsize * 8
+    return lax.bitcast_convert_type(
+        x, jnp.dtype(f"int{nbits}")).astype(jnp.int32)
+
+
+def _rowsum(x: jax.Array, B: int) -> jax.Array:
+    """Per-(seq-slot, batch-slot) bit sums: ``[..., s_blk, rows, hd]``
+    → int32 ``[..., s_blk, B]``.  Cache rows are batch-slot-major
+    (``rows = B * kv_loc``), so the reshape groups each slot's rows."""
+    *lead, s_blk, rows, hd = x.shape
+    b = _bits_i32(x).reshape(tuple(lead) + (s_blk, B, (rows // B) * hd))
+    return jnp.sum(b, axis=-1, dtype=jnp.int32)
+
+
+def kv_entry_fp(cache, B: int) -> jax.Array:
+    """Full per-slot checksum of one KV cache entry: int32 ``[..., B]``
+    (leading dims = the stacked ``n_groups`` axis when present).  Sums
+    are mod 2^32 — associative, commutative, exact."""
+    return jnp.sum(_rowsum(cache.k, B) + _rowsum(cache.v, B),
+                   axis=-2, dtype=jnp.int32)
+
+
+def kv_fp_delta(old, new, fp: jax.Array) -> jax.Array:
+    """Incremental checksum update for one decode step: only (seq-slot,
+    batch-slot) positions whose ``pos`` entry moved (append or ring
+    wrap) contribute their old→new bit-sum delta.  Equivalent to a full
+    recompute whenever the engine's invariant holds (rows change only
+    where ``pos`` changes — the admit path recomputes from scratch
+    precisely because a same-length re-admit violates it)."""
+    B = old.pos.shape[-1]
+    changed = new.pos != old.pos                       # [..., s_blk, B]
+    d = (_rowsum(new.k, B) - _rowsum(old.k, B)
+         + _rowsum(new.v, B) - _rowsum(old.v, B))
+    return fp + jnp.sum(jnp.where(changed, d, 0), axis=-2,
+                        dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Host-side mirrors (numpy, same mod-2^32 arithmetic)
+# ---------------------------------------------------------------------------
+def _np_bits(a: np.ndarray) -> np.ndarray:
+    if a.dtype.kind in "iu":
+        return a.astype(np.int64)
+    nbits = a.dtype.itemsize * 8
+    return a.view(np.dtype(f"int{nbits}")).astype(np.int64)
+
+
+def _np_u32(x: np.ndarray) -> np.ndarray:
+    return np.asarray(x, np.int64) & 0xFFFFFFFF
+
+
+def np_kv_entry_fp(k: np.ndarray, v: np.ndarray, B: int) -> np.ndarray:
+    """Host recompute of :func:`kv_entry_fp` on device-major leaves
+    ``[dp, ms, (n_groups,) s_blk, rows, hd]`` → uint32-valued int64
+    ``[dp, ms, (n_groups,) B]``."""
+    def rs(x):
+        *lead, s_blk, rows, hd = x.shape
+        b = _np_bits(x).reshape(tuple(lead) + (s_blk, B, (rows // B) * hd))
+        return b.sum(axis=(-1, -3))
+    return _np_u32(rs(k) + rs(v))
+
+
+def leaf_checksum(leaf) -> int:
+    """Mod-2^32 bit-pattern checksum of one (device or host) array."""
+    a = np.asarray(jax.device_get(leaf))
+    return int(_np_bits(a).sum() & 0xFFFFFFFF)
+
+
+def weight_leaves(tree: PyTree) -> List[Tuple[str, Any]]:
+    """Canonical ``(path, leaf)`` enumeration of a param tree's array
+    leaves, in tree-flatten order.  Shared between the monitor's
+    fingerprint table and the fault injector's ``flip_weight_bit``
+    targeting, so ``FaultSpec.target`` indexes the same leaf both
+    corrupt and verify."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat
+            if hasattr(leaf, "dtype") and hasattr(leaf, "shape")]
+
+
+def weight_fingerprints(tree: PyTree) -> Dict[str, int]:
+    """Checksum per array leaf of the serve tree (prepack-time
+    reference)."""
+    return {name: leaf_checksum(leaf) for name, leaf in weight_leaves(tree)}
+
+
+# ---------------------------------------------------------------------------
+# The monitor
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class IntegrityConfig:
+    """Which SDC probes the router runs, and how hard.
+
+    ``weight_leaves_per_tick`` bounds the rotating weight spot-check's
+    per-tick cost; full coverage — and therefore the router's deferred-
+    commit window — takes ``ceil(n_leaves / per_tick)`` ticks.  The
+    shadow tolerances absorb dot-product reassociation between the
+    host recompute and the device matmul (the operands are identical
+    bf16 bit patterns; only the f32 accumulation order differs)."""
+    kv: bool = True
+    weights: bool = True
+    weight_leaves_per_tick: int = 1
+    shadow: bool = True
+    shadow_rtol: float = 1e-3
+    shadow_atol: float = 1e-4
+
+
+class IntegrityMonitor:
+    """Per-replica SDC probe state: the weight fingerprint table, the
+    pristine host copy of the sampling head, and the rotation/shadow
+    cursors.  ``probe(sched)`` is the router's per-tick entry point —
+    it returns the fired signal labels (empty = clean)."""
+
+    def __init__(self, eng, icfg: IntegrityConfig):
+        self.eng = eng
+        self.icfg = icfg
+        self.tick = 0
+        self.last_details: List[str] = []
+        if icfg.kv and not getattr(eng.scfg, "kv_fingerprint", False):
+            raise ValueError(
+                "IntegrityConfig.kv needs engines built with "
+                "kv_fingerprint=True (build_engine_full / build_replicas)")
+        if icfg.shadow and not getattr(eng.scfg, "shadow_head", False):
+            raise ValueError(
+                "IntegrityConfig.shadow needs engines built with "
+                "shadow_head=True (build_engine_full / build_replicas)")
+        if icfg.weights and icfg.weight_leaves_per_tick < 1:
+            raise ValueError("weight_leaves_per_tick must be ≥ 1")
+        self.weight_ref: Dict[str, int] = (
+            weight_fingerprints(eng.params["serve"]) if icfg.weights else {})
+        self._leaf_names = list(self.weight_ref)
+        if icfg.shadow:
+            from repro.serving.prepack import head_view
+            cfg = eng.cfg
+            hv = head_view(cfg, eng.params["serve"])
+            # pristine host copies, taken while the tree is known-clean
+            # (construction time = prepack time): the shadow recompute
+            # must NOT consult the possibly-corrupted device table, or
+            # it would agree with the corruption it exists to catch
+            self._table = np.asarray(
+                jax.device_get(hv.table), np.float32).reshape(-1, cfg.d_model)
+            ln = np.asarray(jax.device_get(hv.ln), np.float32).reshape(-1)
+            self._ln = ln[:cfg.d_model]          # device-major replicas agree
+
+    # -- commit-lag contract ---------------------------------------------
+    def commit_lag(self) -> int:
+        """Ticks the router must defer commits so every weight flip is
+        probed before any token it influenced commits: the rotation's
+        full-coverage period (0 when weight checking is off — KV and
+        shadow probes both fire on the tick of the corruption)."""
+        if not self.icfg.weights or not self._leaf_names:
+            return 0
+        return math.ceil(len(self._leaf_names)
+                         / self.icfg.weight_leaves_per_tick)
+
+    # -- probes -----------------------------------------------------------
+    def probe(self, sched) -> List[str]:
+        """Run the configured probes against ``sched``'s live state;
+        returns fired signal labels.  One call = one router tick."""
+        fired: List[str] = []
+        self.last_details = []
+        tracecount.record_probe("probe_ticks")
+        if self.icfg.kv and not self.verify_kv(sched.state):
+            fired.append("detect_kv_fingerprint")
+        if self.icfg.weights:
+            bad = self.verify_weights(self._rotation(self.tick))
+            if bad:
+                fired.append("detect_weight_fingerprint")
+                self.last_details += [f"weight:{n}" for n in bad]
+        if self.icfg.shadow:
+            slot = self.tick % sched.n_slots
+            if not self.verify_shadow(sched.state, slot):
+                fired.append("detect_shadow_recompute")
+                self.last_details.append(f"shadow:slot{slot}")
+        self.tick += 1
+        return fired
+
+    def verify_kv(self, state: Dict[str, Any]) -> bool:
+        """Host-recompute every attention entry's per-slot checksum and
+        compare EXACTLY against the device fingerprint leaves."""
+        pairs = [(c, f) for c, f in zip(state["layers"], state["kv_fp"])
+                 if hasattr(c, "k")]
+        pairs += [(c, f) for c, f in zip(state["tail"], state["kv_fp_tail"])
+                  if hasattr(c, "k")]
+        ok, nbytes = True, 0
+        for cache, fp in pairs:
+            k = np.asarray(jax.device_get(cache.k))
+            v = np.asarray(jax.device_get(cache.v))
+            have = np.asarray(jax.device_get(fp))
+            nbytes += k.nbytes + v.nbytes + have.nbytes
+            want = np_kv_entry_fp(k, v, B=have.shape[-1])
+            if (want != _np_u32(have)).any():
+                ok = False
+                self.last_details.append("kv:" + ",".join(
+                    map(str, np.argwhere(want != _np_u32(have))[:4])))
+        tracecount.record_probe("probe_bytes_kv", nbytes)
+        return ok
+
+    def _rotation(self, tick: int) -> List[int]:
+        n = len(self._leaf_names)
+        if n == 0:
+            return []
+        k = self.icfg.weight_leaves_per_tick
+        return [(tick * k + j) % n for j in range(min(k, n))]
+
+    def verify_weights(self, idxs) -> List[str]:
+        """Re-checksum the given leaves of the replica's LIVE serve
+        tree; returns the names that diverged from the prepack-time
+        reference."""
+        leaves = weight_leaves(self.eng.params["serve"])
+        bad, nbytes = [], 0
+        for i in idxs:
+            name, leaf = leaves[i]
+            nbytes += leaf.dtype.itemsize * int(np.prod(leaf.shape))
+            if leaf_checksum(leaf) != self.weight_ref[name]:
+                bad.append(name)
+        tracecount.record_probe("probe_bytes_weights", nbytes)
+        return bad
+
+    def verify_weights_full(self) -> List[str]:
+        """Every leaf (heal-time re-verification before a replica
+        rejoins — serving/router.py)."""
+        return self.verify_weights(range(len(self._leaf_names)))
+
+    def verify_shadow(self, state: Dict[str, Any], slot: int) -> bool:
+        """Re-derive ``slot``'s winning logit from its stashed pre-head
+        residual with the PRISTINE head copy and compare against the
+        device's ``head_val``.  The (residual, value, token) triple is
+        written atomically by one step, so any stashed triple is
+        internally consistent — stale slots cannot false-positive."""
+        import ml_dtypes
+        cfg = self.eng.cfg
+        n = state["head_val"].shape[-1] if hasattr(
+            state["head_val"], "shape") else 0
+        resid = np.asarray(
+            jax.device_get(state["head_resid"])).reshape(-1, n, cfg.d_model)
+        val = np.asarray(jax.device_get(state["head_val"])).reshape(-1, n)
+        tok = np.asarray(jax.device_get(state["head_tok"])).reshape(-1, n)
+        tracecount.record_probe(
+            "probe_bytes_shadow",
+            resid[0, slot].nbytes + val[:1, :1].nbytes + tok[:1, :1].nbytes)
+        t = int(tok[0, slot])
+        if not (0 <= t < cfg.vocab_size):
+            return False
+        # mirror the device tail: f32 RMSNorm → round to bf16 → f32 dot
+        # against the bf16-exact table row → softcap (models/layers.py)
+        xf = resid[0, slot].astype(np.float32)
+        y = xf / np.sqrt(np.mean(xf * xf) + cfg.norm_eps) * (1.0 + self._ln)
+        y = y.astype(ml_dtypes.bfloat16).astype(np.float32)
+        logit = float(y @ self._table[t])
+        if cfg.logit_softcap:
+            logit = float(np.tanh(logit / cfg.logit_softcap)
+                          * cfg.logit_softcap)
+        have = float(val[0, slot])
+        return abs(logit - have) <= (self.icfg.shadow_atol
+                                     + self.icfg.shadow_rtol * abs(logit))

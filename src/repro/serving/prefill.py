@@ -24,6 +24,7 @@ from jax import lax
 from repro.configs.base import (ATTN_LOCAL, RECURRENT, RWKV6,
                                 ModelConfig)
 from repro.core import dataflow as df
+from repro.core import tracecount
 from repro.models import rglru as rglru_mod
 from repro.models import rwkv6 as rwkv_mod
 from repro.models.ctx import ParallelCtx
@@ -257,9 +258,12 @@ def prefill(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
         new_tail.append(nc)
     new_state["tail"] = new_tail
 
-    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    # each slot samples from its own last REAL position (length − 1)
-    last = x[jnp.arange(B), jnp.clip(lengths, 1, S) - 1]
+    # each slot samples from its own last REAL position (length − 1);
+    # the raw (pre-norm) residual row is kept for the shadow-recompute
+    # stash — RMSNorm is rowwise, so select-then-norm is bit-identical
+    # to norm-then-select
+    last_raw = x[jnp.arange(B), jnp.clip(lengths, 1, S) - 1]
+    last = rms_norm(last_raw, params["final_norm"], cfg.norm_eps)
     table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
     logits = lm_head_logits(ctx, table, last)
     if cfg.logit_softcap:
@@ -279,4 +283,33 @@ def prefill(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
         new_state["nonfinite"] = jnp.where(
             adm, _finite_violations(cfg, last, head_val, nxt, adm),
             state["nonfinite"]).astype(jnp.int32)
+    if scfg.kv_fingerprint and "kv_fp" in state:
+        # admitted slots' checksums recompute FROM SCRATCH: a re-admit
+        # into a previously-used slot can rewrite rows without moving
+        # their ``pos`` entries (same positions, different prompt), so
+        # the decode path's pos-masked delta cannot see it — the full
+        # per-slot sum here re-anchors the accumulator exactly
+        from repro.serving.integrity import kv_entry_fp
+        tracecount.bump("kv_fp_update")
+
+        def _refp(cache, fp):
+            if not hasattr(cache, "k"):
+                return fp
+            return jnp.where(adm, kv_entry_fp(cache, B),
+                             fp).astype(jnp.int32)
+
+        new_state["kv_fp"] = [
+            _refp(c, f) for c, f in zip(new_state["layers"],
+                                        state["kv_fp"])]
+        new_state["kv_fp_tail"] = [
+            _refp(c, f) for c, f in zip(new_state["tail"],
+                                        state["kv_fp_tail"])]
+    if scfg.shadow_head and "head_resid" in state:
+        new_state["head_resid"] = jnp.where(
+            adm[:, None], last_raw.astype(jnp.bfloat16),
+            state["head_resid"])
+        new_state["head_val"] = jnp.where(
+            adm, jnp.asarray(head_val, jnp.float32), state["head_val"])
+        new_state["head_tok"] = jnp.where(adm, nxt.astype(jnp.int32),
+                                          state["head_tok"])
     return nxt, new_state

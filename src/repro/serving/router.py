@@ -17,8 +17,12 @@ restoring them.  The router makes that safe with three mechanisms
    on an active slot), ``cache_lens`` bounds + cross-shard agreement,
    and the journal cross-check (device lengths vs the scheduler's
    host-side model — catches dropped/duplicated admits and blackholed
-   replicas), plus a heartbeat (the step raising).  Each firing is
-   recorded via :func:`repro.core.tracecount.record_signal`.
+   replicas), plus a heartbeat (the step raising).  With
+   ``integrity=IntegrityConfig(...)`` the SDC probes join the loop
+   (serving/integrity.py): KV-cache fingerprints, rotating weight
+   spot-checks, and the shadow logit recompute — silent single-bit
+   flips below the non-finite floor.  Each firing is recorded via
+   :func:`repro.core.tracecount.record_signal`.
 3. **Recovery**: a failed replica is drained; its in-flight requests
    re-queue onto survivors as ``Request(prompt, max_new,
    replay=committed_tokens)`` — the survivor re-prefills the prompt,
@@ -29,7 +33,26 @@ restoring them.  The router makes that safe with three mechanisms
    are bit-identical to an uninterrupted run; greedy sampling today
    means the journaled PRNG state is simply the (recorded) seed.
    Replayed emissions are cross-checked against the journal and never
-   re-committed.
+   re-committed.  A replica failed by the WEIGHT fingerprint probe
+   additionally HEALS: the serve layout re-materializes from the train
+   view (``EngineHandle.repack_fn``), every leaf fingerprint re-verifies,
+   and the replica rejoins with a fresh scheduler at the start of the
+   next tick (``replica_healed``).
+
+The rotating weight probe only covers every leaf once per
+``IntegrityMonitor.commit_lag()`` ticks, so commits are DEFERRED by
+exactly that window: tick-*t* emissions sit in a per-replica staging
+buffer and reach the journal only once every probe through tick
+``t + lag`` has passed — a flip detected at the end of a rotation still
+discards every token it could have influenced (the buffer is dropped on
+failure).  With integrity off the lag is zero and commits are
+immediate, byte-identical to the PR-6 router.
+
+``max_requeues`` caps per-request recovery attempts (the requeue-storm
+guard): a request whose requeue count exceeds the cap is terminally
+FAILED in the journal (``JournalEntry.failed``, ``request_failed``
+signal) instead of bouncing between replicas forever when faults repeat
+across survivors.
 
 Dispatch is queue-depth-aware: each pending request goes to the live
 replica with the fewest queued + active requests (ties to the lowest
@@ -46,6 +69,7 @@ import numpy as np
 from repro.core import tracecount
 from repro.launch.serve import EngineHandle
 from repro.serving.faults import ReplicaKilled
+from repro.serving.integrity import IntegrityConfig, IntegrityMonitor
 from repro.serving.scheduler import Request, SchedulerHooks, SlotScheduler
 
 
@@ -68,6 +92,7 @@ class JournalEntry:
     # recovery-latency column is the max delta over these
     recoveries: List[Tuple[int, int]] = field(default_factory=list)
     done: bool = False
+    failed: bool = False        # terminal: hit the max_requeues cap
 
     @property
     def remaining(self) -> int:
@@ -80,9 +105,14 @@ class _Replica:
     request-id map, and per-request commit watermarks."""
 
     def __init__(self, idx: int, eng: EngineHandle, prompt_cap: int,
-                 eos_id: Optional[int], hooks: Optional[SchedulerHooks]):
+                 eos_id: Optional[int], hooks: Optional[SchedulerHooks],
+                 monitor: Optional[IntegrityMonitor] = None):
         self.idx = idx
         self.eng = eng
+        self.prompt_cap = prompt_cap
+        self.eos_id = eos_id
+        self.hooks = hooks
+        self.monitor = monitor
         # integrity_latch: snapshot violations before a same-tick retire
         # can reset the offending slot (the probe below would otherwise
         # miss a fault whose victim finishes on the fault tick and
@@ -93,16 +123,30 @@ class _Replica:
         self.alive = True
         self.owner: Dict[int, int] = {}       # local rid → router rid
         self.committed: Dict[int, int] = {}   # local rid → commit mark
+        self.staged_mark: Dict[int, int] = {}  # local rid → staged mark
+        # deferred-commit staging: (emit_tick, local rid, tokens) —
+        # flushed to the journal once every probe through emit_tick +
+        # commit_lag has passed; dropped wholesale on failure
+        self.staged: List[Tuple[int, int, List[int]]] = []
 
     def load(self) -> int:
         """Queue depth + active slots — the dispatch cost metric."""
         return len(self.sched.queue) + sum(
             not s.free for s in self.sched.slots)
 
+    def reset_sched(self) -> None:
+        """Fresh scheduler over the (healed) engine — construction
+        retires every slot, so the replica rejoins with clean device
+        state and zero in-flight bookkeeping."""
+        self.sched = SlotScheduler(self.eng, prompt_cap=self.prompt_cap,
+                                   eos_id=self.eos_id, hooks=self.hooks,
+                                   integrity_latch=True)
+
     def probe(self) -> List[str]:
         """Post-step integrity probes; returns the fired signal labels
         (empty = healthy).  All reads are host-side snapshots of [B]
-        vectors — no device compute."""
+        vectors — no device compute (the SDC monitor adds the
+        fingerprint / shadow pulls it accounts in the probe counters)."""
         fired = list(self.sched.latched)   # pre-retire snapshots first
         st = self.sched.state
         n = self.sched.n_slots
@@ -119,6 +163,8 @@ class _Replica:
             fired.append("detect_journal_stale")
         if self.sched.replay_mismatches() > 0:
             fired.append("detect_journal_mismatch")
+        if self.monitor is not None:
+            fired += self.monitor.probe(self.sched)
         return list(dict.fromkeys(fired))   # latch + probe may agree
 
 
@@ -131,12 +177,20 @@ class Router:
     replicas run clean.  All replicas must share weights (same init
     seed — :func:`repro.launch.serve.build_replicas`): recovery moves a
     stream between replicas and is only exact if they agree.
+
+    ``integrity`` enables the SDC probes (one
+    :class:`~repro.serving.integrity.IntegrityMonitor` per replica) and
+    turns on the deferred-commit window (see the module docstring).
+    ``max_requeues`` is the requeue-storm guard (``None`` = unbounded,
+    the PR-6 behavior).
     """
 
     def __init__(self, engines: Sequence[EngineHandle], *,
                  prompt_cap: int, max_new_cap: int,
                  eos_id: Optional[int] = None,
-                 injectors: Optional[Dict[int, SchedulerHooks]] = None):
+                 injectors: Optional[Dict[int, SchedulerHooks]] = None,
+                 integrity: Optional[IntegrityConfig] = None,
+                 max_requeues: Optional[int] = None):
         if not engines:
             raise ValueError("router needs at least one replica")
         max_seq = engines[0].scfg.max_seq
@@ -145,11 +199,33 @@ class Router:
             raise ValueError(
                 f"prompt_cap={prompt_cap} + max_new_cap={max_new_cap} - 1 "
                 f"exceeds the engines' cache capacity max_seq={max_seq}")
+        if max_requeues is not None and max_requeues < 0:
+            raise ValueError(
+                f"max_requeues must be ≥ 0 or None, got {max_requeues}")
         injectors = injectors or {}
+        for idx, hooks in injectors.items():
+            if not 0 <= idx < len(engines):
+                raise ValueError(
+                    f"injector replica={idx} out of range for a "
+                    f"{len(engines)}-replica fleet")
+            for s in getattr(hooks, "specs", ()):
+                if getattr(s, "replica", 0) >= len(engines):
+                    raise ValueError(
+                        f"FaultSpec.replica={s.replica} out of range "
+                        f"for a {len(engines)}-replica fleet")
         self.max_new_cap = max_new_cap
+        self.max_requeues = max_requeues
         self.replicas = [
-            _Replica(i, eng, prompt_cap, eos_id, injectors.get(i))
+            _Replica(i, eng, prompt_cap, eos_id, injectors.get(i),
+                     IntegrityMonitor(eng, integrity)
+                     if integrity is not None else None)
             for i, eng in enumerate(engines)]
+        # the weight rotation's full-coverage period: the window commits
+        # defer by, so no committed token predates the probe that could
+        # have vetoed it (0 without integrity — immediate commits)
+        self.commit_lag = max(
+            (r.monitor.commit_lag() for r in self.replicas
+             if r.monitor is not None), default=0)
         self.journal: Dict[int, JournalEntry] = {}
         self.pending: List[int] = []          # rids awaiting dispatch
         self.tick = 0
@@ -157,6 +233,7 @@ class Router:
         self.detections: List[Dict[str, Any]] = []
         self.live_frac: List[float] = []      # per-tick availability
         self._next_local = 0
+        self._to_heal: List[_Replica] = []
 
     # -- intake -----------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -187,6 +264,7 @@ class Router:
             # already-committed tokens replay on the new replica and are
             # never re-committed
             r.committed[lr] = len(e.tokens)
+            r.staged_mark[lr] = len(e.tokens)
             r.sched.submit(Request(lr, list(e.prompt), e.max_new,
                                    replay=list(e.tokens)))
             e.replicas.append(r.idx)
@@ -194,50 +272,114 @@ class Router:
         self.pending.clear()
 
     # -- commit / failure -------------------------------------------------
-    def _commit(self, r: _Replica) -> None:
-        for lr, rid in list(r.owner.items()):
+    def _stage(self, r: _Replica) -> None:
+        """Pull this tick's emissions into the replica's staging buffer;
+        they reach the journal only after every probe through the
+        deferred-commit window has passed (:meth:`_commit`)."""
+        for lr in list(r.owner):
             res = r.sched.results.get(lr)
             if res is None:
                 continue
-            e = self.journal[rid]
-            new = res.tokens[r.committed[lr]:]
+            new = res.tokens[r.staged_mark[lr]:]
             if new:
-                e.tokens.extend(new)
-                r.committed[lr] = len(res.tokens)
-                if e.recoveries and e.recoveries[-1][1] < 0:
-                    rq_tick, _ = e.recoveries[-1]
-                    e.recoveries[-1] = (rq_tick, self.tick)
-            if res.finish_tick >= 0:
-                e.done = True
-                e.finish_tick = self.tick
-                del r.owner[lr], r.committed[lr]
-                self.events.append((self.tick, "finish", rid, r.idx))
+                r.staged.append((self.tick, lr, list(new)))
+                r.staged_mark[lr] = len(res.tokens)
+
+    def _commit(self, r: _Replica) -> None:
+        """Flush staged emissions whose deferred-commit window has
+        closed (emit_tick ≤ now − commit_lag; with integrity off the
+        lag is 0 and this commits the tick's tokens immediately)."""
+        cutoff = self.tick - self.commit_lag
+        keep: List[Tuple[int, int, List[int]]] = []
+        for emit_tick, lr, toks in r.staged:
+            rid = r.owner.get(lr)
+            if rid is None:
+                continue                  # request left this replica
+            if emit_tick > cutoff:
+                keep.append((emit_tick, lr, toks))
+                continue
+            e = self.journal[rid]
+            e.tokens.extend(toks)
+            r.committed[lr] += len(toks)
+            if e.recoveries and e.recoveries[-1][1] < 0:
+                rq_tick, _ = e.recoveries[-1]
+                e.recoveries[-1] = (rq_tick, self.tick)
+        r.staged = keep
+        pending_lrs = {lr for _, lr, _ in r.staged}
+        for lr, rid in list(r.owner.items()):
+            res = r.sched.results.get(lr)
+            if res is None or res.finish_tick < 0 or lr in pending_lrs:
+                continue                  # still emitting or still staged
+            e = self.journal[rid]
+            e.done = True
+            e.finish_tick = self.tick
+            del r.owner[lr], r.committed[lr], r.staged_mark[lr]
+            self.events.append((self.tick, "finish", rid, r.idx))
 
     def _fail(self, r: _Replica, signals: Sequence[str]) -> None:
-        """Drain a failed replica: nothing from its current tick is
-        committed; every in-flight request re-queues onto survivors
-        from its last committed state (zero-corruption invariant)."""
+        """Drain a failed replica: nothing uncommitted survives — the
+        staging buffer is dropped wholesale — and every in-flight
+        request re-queues onto survivors from its last committed state
+        (zero-corruption invariant).  Requests past the requeue cap are
+        terminally FAILED instead (requeue-storm guard); a weight-SDC
+        failure schedules the heal for the start of the next tick."""
         r.alive = False
         for sig in signals:
             tracecount.record_signal(sig)
         tracecount.record_signal("replica_failed")
+        details = list(r.monitor.last_details) if r.monitor else []
         self.detections.append({"tick": self.tick, "replica": r.idx,
-                                "signals": list(signals)})
+                                "signals": list(signals),
+                                "details": details})
         self.events.append((self.tick, "fail", r.idx, tuple(signals)))
         for lr, rid in r.owner.items():
             e = self.journal[rid]
-            if not e.done:
-                e.requeues += 1
-                e.recoveries.append((self.tick, -1))
-                self.pending.append(rid)
-                self.events.append((self.tick, "requeue", rid, r.idx))
+            if e.done:
+                continue
+            e.requeues += 1
+            if self.max_requeues is not None \
+                    and e.requeues > self.max_requeues:
+                e.failed = True
+                tracecount.record_signal("request_failed")
+                self.events.append(
+                    (self.tick, "request_failed", rid, r.idx))
+                continue
+            e.recoveries.append((self.tick, -1))
+            self.pending.append(rid)
+            self.events.append((self.tick, "requeue", rid, r.idx))
         r.owner.clear()
         r.committed.clear()
+        r.staged_mark.clear()
+        r.staged.clear()
+        if "detect_weight_fingerprint" in signals and r.monitor is not None:
+            self._to_heal.append(r)
+
+    def _heal_pending(self) -> None:
+        """Heal weight-SDC replicas quarantined last tick: re-materialize
+        the serve layout from the (uncorrupted) train view, re-verify
+        EVERY leaf fingerprint, and rejoin with a fresh scheduler.  A
+        replica whose heal fails re-verification (train view also
+        corrupt — outside the fault model) stays quarantined."""
+        heals, self._to_heal = self._to_heal, []
+        for r in heals:
+            if r.eng.repack_fn is not None:
+                r.eng.params["serve"] = r.eng.repack_fn(
+                    r.eng.params["train"])
+            bad = r.monitor.verify_weights_full()
+            if bad:
+                self.events.append(
+                    (self.tick, "heal_failed", r.idx, tuple(bad)))
+                continue
+            r.reset_sched()
+            r.alive = True
+            tracecount.record_signal("replica_healed")
+            self.events.append((self.tick, "heal", r.idx, None))
 
     # -- one fleet tick ---------------------------------------------------
     def step(self, arrivals: Sequence[Request] = ()) -> None:
         for req in arrivals:
             self.submit(req)
+        self._heal_pending()     # last tick's quarantines rejoin first
         self._dispatch()
         for r in self.replicas:
             if not r.alive:
@@ -251,14 +393,17 @@ class Router:
             if signals:
                 self._fail(r, signals)
             else:
+                self._stage(r)
                 self._commit(r)
         self.live_frac.append(
             sum(r.alive for r in self.replicas) / len(self.replicas))
         self.tick += 1
 
     def idle(self) -> bool:
-        return not self.pending and all(
-            e.done for e in self.journal.values())
+        return (not self.pending and not self._to_heal
+                and all(not r.staged for r in self.replicas)
+                and all(e.done or e.failed
+                        for e in self.journal.values()))
 
     def run(self, trace: Sequence[Tuple[int, Request]] = (),
             max_ticks: int = 10_000) -> Dict[int, JournalEntry]:

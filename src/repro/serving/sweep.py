@@ -1,0 +1,135 @@
+"""Systematic SDC fault-load sweeps (DAVOS-style) over the fleet router.
+
+One :class:`~repro.serving.faults.FaultSweep` grid enumerates
+single-bit (kind × target × bit × step × replica) fault specs; this
+harness runs each spec in its OWN router run against the same engine
+fleet and reduces the outcomes into a coverage matrix:
+
+* ``fault_free`` — the control row: every probe enabled, zero faults.
+  Gated to ZERO detection signals (no false positives), token streams
+  byte-equal to the probes-off oracle, and the per-tick probe overhead
+  in bytes (the tracecount probe counters divided by probe ticks).
+* ``{kind}_bit{b}`` — one row per (fault kind, bit position):
+  ``detected_pct`` (did any probe fire), ``detect_steps`` (worst
+  injection→detection latency in router ticks over the row's grid
+  points) and ``oracle_exact_pct`` (after recovery, are ALL journaled
+  streams byte-equal to the fault-free oracle — the zero-corruption
+  invariant under SDC).
+
+Engines are restored between runs: a fresh :class:`Router` rebuilds
+every scheduler (which resets device state from ``eng.state``), and the
+persistent ``flip_weight_bit`` corruption is undone by re-materializing
+the serve layout from the train view (``EngineHandle.repack_fn`` — the
+same path the router's heal uses).
+
+The matrix feeds ``bench_tpot.py --trace`` (the ``sdc_sweep`` cell
+namespace, gated by scripts/check_bench.py) and
+``examples/serve_requests.py --sweep`` (:func:`format_coverage`).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core import tracecount
+from repro.serving.faults import FaultInjector, FaultSweep
+from repro.serving.integrity import IntegrityConfig
+from repro.serving.router import Router
+from repro.serving.scheduler import Request
+
+
+def _streams(journal) -> Dict[int, Tuple[int, ...]]:
+    return {rid: tuple(e.tokens) for rid, e in journal.items()}
+
+
+def run_sdc_sweep(engines, *, prompts: Sequence[Sequence[int]],
+                  max_new: int, prompt_cap: int,
+                  sweep: Optional[FaultSweep] = None,
+                  icfg: Optional[IntegrityConfig] = None,
+                  max_requeues: Optional[int] = None,
+                  max_ticks: int = 10_000) -> Dict[str, Dict[str, float]]:
+    """Run the grid; returns the coverage matrix as ``{row: {column:
+    value}}`` (see the module docstring for the rows/columns).
+
+    ``prompts`` seeds one request per prompt, all arriving at tick 0 —
+    the SAME trace for the oracle, the control and every fault run, so
+    stream comparisons are byte-for-byte meaningful.
+    """
+    sweep = sweep if sweep is not None else FaultSweep()
+    icfg = icfg if icfg is not None else IntegrityConfig()
+
+    def trace() -> List[Tuple[int, Request]]:
+        return [(0, Request(i, list(p), max_new))
+                for i, p in enumerate(prompts)]
+
+    def restore() -> None:
+        for eng in engines:
+            if eng.repack_fn is not None:
+                eng.params["serve"] = eng.repack_fn(eng.params["train"])
+
+    # 1. the oracle: no probes, no faults — ground-truth streams
+    oracle = _streams(Router(engines, prompt_cap=prompt_cap,
+                             max_new_cap=max_new).run(trace(),
+                                                      max_ticks=max_ticks))
+
+    # 2. the control: every probe on, no faults — the false-positive
+    #    and probe-overhead row
+    tracecount.reset_signals()
+    tracecount.reset_probes()
+    ctl = _streams(Router(engines, prompt_cap=prompt_cap,
+                          max_new_cap=max_new, integrity=icfg)
+                   .run(trace(), max_ticks=max_ticks))
+    sig = sum(tracecount.signal_totals().values())
+    pt = tracecount.probe_totals()
+    per_tick = (pt["probe_bytes_kv"] + pt["probe_bytes_weights"]
+                + pt["probe_bytes_shadow"]) / max(pt["probe_ticks"], 1)
+    cells: Dict[str, Dict[str, float]] = {"fault_free": {
+        "false_positive_signals": float(sig),
+        "streams_match": float(ctl == oracle),
+        "probe_bytes_per_tick": float(per_tick),
+    }}
+
+    # 3. the grid: one spec per run, engines restored in between
+    agg: Dict[str, List[Tuple[bool, int, bool]]] = {}
+    for spec in sweep.specs():
+        inj = FaultInjector([spec])
+        tracecount.reset_signals()
+        router = Router(engines, prompt_cap=prompt_cap,
+                        max_new_cap=max_new, integrity=icfg,
+                        max_requeues=max_requeues,
+                        injectors={spec.replica: inj})
+        journal = router.run(trace(), max_ticks=max_ticks)
+        lat = router.detection_latency(inj)
+        detected = bool(lat) and lat[0] >= 0
+        exact = _streams(journal) == oracle
+        agg.setdefault(f"{spec.kind}_bit{spec.bit}", []).append(
+            (detected, lat[0] if detected else -1, exact))
+        restore()
+
+    for key, rows in agg.items():
+        lats = [l for d, l, _ in rows if d]
+        cells[key] = {
+            "detected_pct": 100.0 * sum(d for d, _, _ in rows) / len(rows),
+            "detect_steps": float(max(lats)) if lats else -1.0,
+            "oracle_exact_pct":
+                100.0 * sum(e for _, _, e in rows) / len(rows),
+        }
+    return cells
+
+
+def format_coverage(cells: Dict[str, Dict[str, float]]) -> str:
+    """Human-readable coverage table (examples/serve_requests.py
+    --sweep and the nightly CI artifact)."""
+    lines = [f"{'cell':<28} {'detected%':>9} {'latency(ticks)':>14} "
+             f"{'oracle-exact%':>13}"]
+    for key in sorted(k for k in cells if k != "fault_free"):
+        c = cells[key]
+        lines.append(f"{key:<28} {c['detected_pct']:>9.1f} "
+                     f"{c['detect_steps']:>14.0f} "
+                     f"{c['oracle_exact_pct']:>13.1f}")
+    ff = cells.get("fault_free")
+    if ff is not None:
+        lines.append(
+            f"{'fault_free':<28} signals={ff['false_positive_signals']:.0f} "
+            f"streams_match={ff['streams_match']:.0f} "
+            f"probe_bytes/tick={ff['probe_bytes_per_tick']:.0f}")
+    return "\n".join(lines)

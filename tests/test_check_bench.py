@@ -137,6 +137,20 @@ def test_main_exit_codes_and_table(cb, tmp_path, capsys):
     assert "FAIL" in capsys.readouterr().out
 
 
+def _sdc_report(cell="flip_kv_bit_bit7", **overrides):
+    cells = {
+        "fault_free": {"false_positive_signals": 0.0,
+                       "streams_match": 1.0,
+                       "probe_bytes_per_tick": 431128.0},
+        "flip_kv_bit_bit7": {"detected_pct": 100.0, "detect_steps": 0.0,
+                             "oracle_exact_pct": 100.0},
+    }
+    cells[cell] = {**cells[cell], **overrides}
+    rep = _report()
+    rep["sdc_sweep"] = {"arch": "llama2-7b", "cells": cells}
+    return rep
+
+
 def test_router_chaos_cells_gate_exactly(cb):
     """Every fleet-chaos column is a robustness invariant: slower
     detection, longer recovery, lower availability, or a stream
@@ -157,6 +171,48 @@ def test_router_chaos_cells_gate_exactly(cb):
     # a fault kind vanishing from the sweep is a regression
     cur = copy.deepcopy(base)
     del cur["router_chaos"]["faults"]["corrupt_kv"]
+    ok, table = cb.check(cur, base)
+    assert not ok
+    assert "vanished" in table
+
+
+def test_sdc_sweep_cells_gate(cb):
+    """The SDC coverage matrix is a robustness invariant: coverage,
+    latency, exactness, false-positive count and stream equality gate
+    EXACTLY in both directions; the probe-overhead bytes column is
+    one-sided with tolerance (more probing is not a regression signal
+    by itself — less coverage shows up in the count columns)."""
+    base = _sdc_report()
+    ok, _ = cb.check(copy.deepcopy(base), base)
+    assert ok
+    for col, bad in (("detected_pct", 50.0), ("detect_steps", 3.0),
+                     ("oracle_exact_pct", 66.7)):
+        ok, table = cb.check(_sdc_report(**{col: bad}), base)
+        assert not ok, col
+        assert col in table and "sdc_sweep/flip_kv_bit_bit7" in table
+    for col, bad in (("false_positive_signals", 1.0),
+                     ("streams_match", 0.0)):
+        ok, table = cb.check(_sdc_report("fault_free", **{col: bad}),
+                             base)
+        assert not ok, col
+        assert "sdc_sweep/fault_free" in table
+    # probe bytes: one-sided with 5% tolerance
+    ok, _ = cb.check(_sdc_report("fault_free",
+                                 probe_bytes_per_tick=431128.0 * 1.04),
+                     base)
+    assert ok
+    ok, table = cb.check(_sdc_report("fault_free",
+                                     probe_bytes_per_tick=431128.0 * 1.2),
+                         base)
+    assert not ok
+    assert "bytes up" in table
+    ok, table = cb.check(_sdc_report("fault_free",
+                                     probe_bytes_per_tick=100.0), base)
+    assert ok
+    assert "improved" in table
+    # a coverage cell vanishing from the sweep is a regression
+    cur = copy.deepcopy(base)
+    del cur["sdc_sweep"]["cells"]["flip_kv_bit_bit7"]
     ok, table = cb.check(cur, base)
     assert not ok
     assert "vanished" in table
@@ -184,3 +240,28 @@ def test_committed_baseline_gates_itself(cb):
     for kind, d in faults.items():
         for col in cb.ROUTER_GATED_COLUMNS:
             assert col in d, (kind, col)
+    # the SDC sweep must be in the baseline: the fault-free control row
+    # plus one row per (bit fault kind x smoke bit position)
+    from repro.serving.faults import BIT_FAULT_KINDS
+    cells = base["sdc_sweep"]["cells"]
+    assert "fault_free" in cells
+    for col in ("false_positive_signals", "streams_match",
+                "probe_bytes_per_tick"):
+        assert col in cells["fault_free"], col
+    smoke_bits = base["sdc_sweep"]["bits"]
+    assert smoke_bits, "baseline sdc_sweep ran with no bit positions"
+    for kind in BIT_FAULT_KINDS:
+        for b in smoke_bits:
+            d = cells[f"{kind}_bit{b}"]
+            for col in ("detected_pct", "detect_steps",
+                        "oracle_exact_pct"):
+                assert col in d, (kind, b, col)
+    # the detection floor the baseline locks in: full coverage,
+    # byte-exact recovery, zero false positives (DESIGN.md §9)
+    for key, d in cells.items():
+        if key == "fault_free":
+            assert d["false_positive_signals"] == 0.0
+            assert d["streams_match"] == 1.0
+        else:
+            assert d["detected_pct"] == 100.0, key
+            assert d["oracle_exact_pct"] == 100.0, key
