@@ -14,6 +14,13 @@ Measurements per arch:
   speedup — same FLOPs, different dispatch granularity.
 * ``tpot_cachelen_<variant>_<arch>_<L>`` — cache-length sweep: decode
   step time after prefilling L tokens (cost ∝ live prefix, DESIGN.md §3).
+* ``tpot_sampling_<s>_<variant>_<arch>`` — sampling-variant sweep
+  (``greedy`` / ``topk8`` / ``topp0.9``): the SAME jitted decode step
+  timed under different per-slot sampling-param state leaves
+  (serving/sampling.py) — evidence temperature/top-k/top-p stay in the
+  fused tail (no retrace, no extra dispatch).  The report also carries
+  ``head_sample_k`` (the fused tail's candidate width, gated exactly)
+  and the k-wide ``head_ici_bytes_per_step`` model.
 * ``--trace`` — ragged-arrival trace mode: a random request trace runs
   through the continuous-batching scheduler (serving/scheduler.py) and
   the report gains a ``ragged_trace`` section with per-request TPOT,
@@ -57,6 +64,7 @@ from repro.models import layout_for, single_device_ctx, unwrap_local
 from repro.models.transformer import init_device_major
 from repro.serving.engine import (ServeConfig, decode_block,
                                   init_decode_state)
+from repro.serving.sampling import CAND_K
 
 
 def _unfused_decode_us(cfg, max_seq: int, batch: int, iters: int = 15):
@@ -154,6 +162,19 @@ def _unfused_decode_us(cfg, max_seq: int, batch: int, iters: int = 15):
     return t_unfused, t_fused
 
 
+# Per-slot sampling-param overrides for the sampling-variant TPOT
+# sweep: the decode step's signature is sampling-independent (the
+# params are state leaves — serving/sampling.py), so each variant is
+# the SAME jitted program timed under different leaf values.  The
+# greedy row must cost the same as the other two: any spread beyond
+# noise means sampling left the fused tail.
+_SAMPLING_VARIANTS = (
+    ("greedy", {}),                                   # default leaves
+    ("topk8", {"temp": 0.7, "topk": 8}),
+    ("topp0.9", {"temp": 0.7, "topp": 0.9}),
+)
+
+
 _VARIANTS = (
     # (label, build_engine kwargs)
     ("xla", dict(backend="xla")),
@@ -190,6 +211,19 @@ def _bench_variant(cfg, arch, label, kw, *, max_seq, batch, prompt_len,
     psums = int(c.get("psum_model", 0))
     nxt, st = pf(params["train"], state, prompts, fe)
     t = time_fn(lambda: dec(p_serve, st, nxt), iters=iters)
+    samp_us = {}
+    for s_label, over in _SAMPLING_VARIANTS:
+        st_s = dict(st)
+        st_s["sampling"] = {
+            name: (jnp.full_like(leaf, over[name]) if name in over
+                   else leaf)
+            for name, leaf in st["sampling"].items()}
+        t_s = time_fn(lambda: dec(p_serve, st_s, nxt), iters=iters)
+        samp_us[s_label] = t_s
+        rows.append(row(f"tpot_sampling_{s_label}_{label}_{arch}", t_s,
+                        f"k={CAND_K}," + (",".join(
+                            f"{n}={v}" for n, v in over.items()) or
+                            "greedy_defaults")))
     byte_kw = dict(model_axis=mesh.shape["model"], batch=scfg.batch_local,
                    backend=scfg.backend, prepack=scfg.prepack)
     gather_bytes = weight_gather_bytes_per_step(
@@ -231,6 +265,14 @@ def _bench_variant(cfg, arch, label, kw, *, max_seq, batch, prompt_len,
         # index) pair tree-reduce ICI traffic both tails pay
         "head_hbm_logits_bytes_per_step": head_hbm,
         "head_ici_bytes_per_step": head_ici,
+        # candidate width of the fused tail's streaming top-k — gated
+        # exactly (a width change moves the ICI model AND the sampling
+        # exactness envelope, so it must never drift silently)
+        "head_sample_k": CAND_K,
+        # same jitted step under the three sampling-param settings:
+        # wall-noise on CPU, but the spread is the evidence sampling
+        # stays in-state (no per-variant retrace)
+        "sampling_tpot_us": samp_us,
         "pallas_launches_per_step": launches,
         "psum_model_per_step": psums,
     }
@@ -246,16 +288,17 @@ def _bench_ragged_trace(arch, *, n_slots=3, prompt_cap=12, max_new_cap=10,
     import time as _time
 
     from repro.launch.mesh import make_test_mesh as _mk
-    from repro.launch.serve import build_engine_full
+    from repro.launch.serve import EngineOptions, build_engine_full
     from repro.serving.scheduler import Request, SlotScheduler
 
     cfg = reduced(get_config(arch))
     mesh = _mk(data=1, model=8)          # scheduler batch rides unsharded
     eng = build_engine_full(
         cfg, mesh, max_seq=prompt_cap + max_new_cap + 8,
-        batch_global=n_slots, backend=backend, interpret=interpret,
-        track_work=True,
-        plan_seq_len=prompt_cap + max_new_cap)   # bucket on max LIVE len
+        batch_global=n_slots,
+        options=EngineOptions(
+            backend=backend, interpret=interpret, track_work=True,
+            plan_seq_len=prompt_cap + max_new_cap))  # bucket on max LIVE len
     sched = SlotScheduler(eng, prompt_cap=prompt_cap)
     rng = np.random.default_rng(seed)
     trace = []
@@ -318,7 +361,7 @@ def _bench_router_chaos(arch, *, n_replicas=2, prompt_cap=8, max_new_cap=8,
     machine, so check_bench.py gates them exactly like the launch/psum
     counters."""
     from repro.launch.mesh import make_test_mesh as _mk
-    from repro.launch.serve import build_replicas
+    from repro.launch.serve import EngineOptions, build_replicas
     from repro.serving.faults import FAULT_KINDS, FaultInjector, FaultSpec
     from repro.serving.router import Router
     from repro.serving.scheduler import Request
@@ -330,7 +373,10 @@ def _bench_router_chaos(arch, *, n_replicas=2, prompt_cap=8, max_new_cap=8,
     mesh = _mk(data=1, model=1)
     engines = build_replicas(cfg, mesh, n_replicas=n_replicas,
                              max_seq=prompt_cap + max_new_cap + 8,
-                             batch_global=2, backend="xla")
+                             batch_global=2,
+                             options=EngineOptions(
+                                 backend="xla", check_finite=True,
+                                 kv_fingerprint=True, shadow_head=True))
     rng = np.random.default_rng(seed)
     trace = []
     for rid in range(n_requests):
@@ -393,7 +439,7 @@ def _bench_sdc_sweep(arch, *, n_replicas=2, prompt_cap=8, max_new=6,
     full 16-bit grid runs in the nightly sweep (tests + CI); the bench
     keeps the representative sub-grid so --trace stays fast."""
     from repro.launch.mesh import make_test_mesh as _mk
-    from repro.launch.serve import build_replicas
+    from repro.launch.serve import EngineOptions, build_replicas
     from repro.serving.faults import FaultSweep
     from repro.serving.integrity import IntegrityConfig
     from repro.serving.sweep import run_sdc_sweep
@@ -405,7 +451,10 @@ def _bench_sdc_sweep(arch, *, n_replicas=2, prompt_cap=8, max_new=6,
     mesh = _mk(data=1, model=1)
     engines = build_replicas(cfg, mesh, n_replicas=n_replicas,
                              max_seq=prompt_cap + max_new + 8,
-                             batch_global=2, backend="xla")
+                             batch_global=2,
+                             options=EngineOptions(
+                                 backend="xla", check_finite=True,
+                                 kv_fingerprint=True, shadow_head=True))
     rng = np.random.default_rng(seed)
     prompts = [[int(t) for t in rng.integers(1, cfg.vocab_size,
                                              int(rng.integers(2, 6)))]

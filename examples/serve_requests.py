@@ -43,7 +43,7 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.launch.mesh import make_test_mesh
-from repro.launch.serve import build_engine_full
+from repro.launch.serve import EngineOptions, build_engine_full
 from repro.serving.scheduler import Request, SlotScheduler, replay_trace
 
 
@@ -93,13 +93,14 @@ def main():
     max_new_cap = 12
     eng = build_engine_full(
         cfg, mesh, max_seq=args.prompt_cap + max_new_cap + 8,
-        batch_global=args.slots, backend=args.backend,
-        prepack=args.prepack,
-        interpret=(args.backend != "xla"
-                   and jax.default_backend() == "cpu"),
-        track_work=True,
-        # autotune keys on the max LIVE length, not the allocation
-        plan_seq_len=args.prompt_cap + max_new_cap)
+        batch_global=args.slots,
+        options=EngineOptions(
+            backend=args.backend, prepack=args.prepack,
+            interpret=(args.backend != "xla"
+                       and jax.default_backend() == "cpu"),
+            track_work=True,
+            # autotune keys on the max LIVE length, not the allocation
+            plan_seq_len=args.prompt_cap + max_new_cap))
     sched = SlotScheduler(eng, prompt_cap=args.prompt_cap)
 
     trace = []
@@ -153,7 +154,9 @@ def fleet_main(args):
     engines = build_replicas(
         cfg, mesh, n_replicas=args.replicas,
         max_seq=args.prompt_cap + max_new_cap + 8,
-        batch_global=args.slots, backend=args.backend)
+        batch_global=args.slots,
+        options=EngineOptions(backend=args.backend, check_finite=True,
+                              kv_fingerprint=True, shadow_head=True))
     trace = []
     for rid in range(args.requests):
         plen = int(rng.integers(2, args.prompt_cap + 1))

@@ -44,6 +44,11 @@ GATED_COLUMNS: Dict[str, Tuple[str, float]] = {
     "ffn_fused_reduce_ici_bytes_per_step": ("bytes", 0.01),
     "head_ici_bytes_per_step": ("bytes", 0.01),
     "head_hbm_logits_bytes_per_step": ("bytes", 0.01),
+    # the fused tail's candidate width (sampling.CAND_K): the k in the
+    # k-wide streaming top-k and its cross-shard merge.  Exact both
+    # ways — a silent widening inflates the head ICI bytes, a silent
+    # narrowing breaks the top-k/top-p exactness envelope.
+    "head_sample_k": ("count", 0.0),
 }
 
 # Fleet-chaos columns (``report["router_chaos"]["faults"][<kind>]``,

@@ -226,25 +226,29 @@ def pick_block_f(cfg: ModelConfig) -> int:
 _BLOCK_V_CANDIDATES = (512, 1024, 2048, 4096)
 
 
-def pick_block_v(cfg: ModelConfig) -> int:
+def pick_block_v(cfg: ModelConfig, *, batch: int = 1, k: int = 8) -> int:
     """Vocab tile for the fused LM-head/sampling kernel (kernels/fused_head).
 
     Each grid step streams one ``[bv, D]`` tile of the (possibly tied)
     embedding table in the model dtype; prefer the largest tile whose
     double-buffered weight stream fits the VMEM budget (fewer grid
-    steps ⇒ less fixed per-step overhead; the ``[B, D]`` normed-input
-    scratch and the ``[B, 1]`` running (max, argmax) partials are
-    batch-small and deliberately outside the model).  The call site
-    fits the pick down to a divisor of the local vocab shard
+    steps ⇒ less fixed per-step overhead).  The residency model also
+    charges the ``[B, D]`` normed-input scratch (f32) and the
+    ``[B, k]`` running top-k partials (f32 value + int32 index — the
+    k-wide streaming selection the sampled tail folds per tile); both
+    are batch-small but no longer negligible at large B × k, so they
+    join the budget instead of living outside it.  The call site fits
+    the pick down to a divisor of the local vocab shard
     (``_fit_block_s``)."""
     d = cfg.d_model
     bpe = 2
+    fixed = batch * d * 4 + batch * k * 8    # h scratch + (val, idx) topk
     best = _BLOCK_V_CANDIDATES[0]
     for b in _BLOCK_V_CANDIDATES:
-        if b * d * bpe * 2 > VMEM_BUDGET:           # ×2: double-buffered
+        if b * d * bpe * 2 + fixed > VMEM_BUDGET:   # ×2: double-buffered
             break
         best = b
-    while best > 8 and best * d * bpe * 2 > VMEM_BUDGET:
+    while best > 8 and best * d * bpe * 2 + fixed > VMEM_BUDGET:
         best //= 2
     return best
 
@@ -397,17 +401,19 @@ def head_hbm_logits_bytes_per_step(cfg: ModelConfig, *, model_axis: int,
 
 def head_ici_bytes_per_step(cfg: ModelConfig, *, model_axis: int,
                             batch: int, backend: str, prepack: bool,
-                            bytes_per_el: int = 4) -> float:
-    """Modeled per-step ICI bytes of the greedy (value, index) pair tree
-    reduce over the vocab shards (paper tree schedule; f32 value +
-    int32 index per slot).  Identical on the fused and unfused tails by
-    construction — the fused head changes WHERE the partials come from
-    (streaming VMEM tiles vs an HBM logits tensor), not the collective
-    — so a regression in this column means the reduce schedule itself
-    changed."""
+                            bytes_per_el: int = 4, k: int = 8) -> float:
+    """Modeled per-step ICI bytes of the k-wide (value, index) candidate
+    tree reduce over the vocab shards (paper tree schedule; k f32
+    values + k int32 indices per slot — ``k`` is the fused tail's
+    candidate width ``sampling.CAND_K``; k=1 recovers the PR-5 greedy
+    pair).  Identical on the fused and unfused tails by construction —
+    the fused head changes WHERE the partials come from (streaming VMEM
+    tiles vs an HBM logits tensor), not the collective — so a
+    regression in this column means the reduce schedule or the
+    candidate width itself changed."""
     if model_axis <= 1:
         return 0.0
-    pair = batch * bytes_per_el * 2          # f32 value + int32 index
+    pair = batch * k * bytes_per_el * 2      # k × (f32 value, int32 index)
     return prim.traffic_reduce(float(pair), model_axis)
 
 
@@ -447,7 +453,7 @@ def tune_serving(cfg: ModelConfig, *, seq_len: int, batch: int,
         block_s=pick_block_s(cfg, bucket, best.cluster_size, batch),
         prepack=pp,
         block_f=pick_block_f(cfg),
-        block_v=pick_block_v(cfg),
+        block_v=pick_block_v(cfg, batch=batch),
         est_seconds=best.est_seconds,
     )
     table[key] = asdict(plan)

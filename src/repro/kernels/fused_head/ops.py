@@ -9,13 +9,13 @@ from repro.kernels.fused_head.fused_head import fused_head_block
 from repro.kernels.fused_head.ref import fused_head_ref
 
 
-@partial(jax.jit, static_argnames=("eps", "logit_softcap", "block_v",
+@partial(jax.jit, static_argnames=("eps", "logit_softcap", "block_v", "k",
                                    "interpret", "use_ref"))
 def fused_head(x, table, ln, *, eps=1e-6, logit_softcap=0.0, block_v=1024,
-               interpret=False, use_ref=False):
+               k=1, interpret=False, use_ref=False):
     if use_ref:
         return fused_head_ref(x, table, ln, eps=eps,
-                              logit_softcap=logit_softcap)
+                              logit_softcap=logit_softcap, k=k)
     return fused_head_block(x, table, ln, eps=eps,
                             logit_softcap=logit_softcap, block_v=block_v,
-                            interpret=interpret)
+                            k=k, interpret=interpret)

@@ -2,9 +2,11 @@
 
 This IS the unfused engine composition per vocab shard —
 ``rms_norm`` → ``lm_head_logits`` (f32 logits) → ``softcap`` → the
-local half of ``greedy_sample`` — so kernel-vs-ref equality is exactly
-the fused ≡ unfused token-exactness claim.  The full ``[B, V_loc]``
-logits the kernel never materializes exist only here.
+local half of the streaming top-k selection — so kernel-vs-ref equality
+is exactly the fused ≡ unfused token-exactness claim.  The full
+``[B, V_loc]`` logits the kernel never materializes exist only here,
+and the selection is the SAME ``select_topk`` the kernel folds tiles
+with (one definition on purpose — DESIGN.md §8 pt 0).
 """
 from __future__ import annotations
 
@@ -13,21 +15,24 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.fused_head.topk import select_topk
 from repro.models.layers import rms_norm, softcap
 
 
 def fused_head_ref(
     x: jax.Array, table: jax.Array, ln: jax.Array, *,
-    eps: float = 1e-6, logit_softcap: float = 0.0, **_,
+    eps: float = 1e-6, logit_softcap: float = 0.0, k: int = 1, **_,
 ) -> Tuple[jax.Array, jax.Array]:
-    """``(max_value [B] f32, argmax_local_index [B] int32)`` over this
-    shard.  Mirrors ``lm_head_logits``'s pinned staging: the model-dtype
-    rounded ``rms_norm`` output against the f32-upcast table, softcap
-    in f32."""
+    """``(values [B, k] f32, local_indices [B, k] int32)`` over this
+    shard, sorted value-descending with ties to the lowest index.
+    Mirrors ``lm_head_logits``'s pinned staging: the model-dtype rounded
+    ``rms_norm`` output against the f32-upcast table, softcap in f32.
+    ``k = 1`` is the greedy ``(max, argmax)`` pair."""
     h = rms_norm(x, ln, eps)
     logits = jnp.matmul(h, table.T.astype(h.dtype),
                         preferred_element_type=jnp.float32)
     if logit_softcap and logit_softcap > 0:
         logits = softcap(logits, logit_softcap)
-    return (jnp.max(logits, axis=-1),
-            jnp.argmax(logits, axis=-1).astype(jnp.int32))
+    ids = jnp.broadcast_to(jnp.arange(logits.shape[-1], dtype=jnp.int32),
+                           logits.shape)
+    return select_topk(logits, ids, k)

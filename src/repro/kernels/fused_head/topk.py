@@ -1,0 +1,70 @@
+"""Shared streaming top-k selection for the fused LM-head/sampling tail.
+
+ONE definition on purpose (the ``_greedy_pair_merge`` lesson, DESIGN.md
+§8 pt 0): the Pallas kernel's per-tile fold, the pure-jnp oracle
+(``ref.py``), the unfused engine tail and the cross-shard ClusterReduce
+operator all select candidates through the SAME total order —
+value-descending, tie-break to the LOWEST global index — so fused and
+unfused paths agree bit-for-bit on every candidate, and the cross-shard
+merge is commutative as well as associative (every rank's tree
+association order yields the same k winners).
+
+``select_topk`` is deliberately sort-free: k unrolled passes of
+(max, min-index-among-maxima, mask) — pure elementwise ops + lane
+reductions, so the identical code runs inside a Pallas TPU kernel body
+and in plain jnp.  k = 1 degenerates exactly to the PR-5 greedy
+(max, lowest-index argmax) pair.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+_INT32_MAX = 2 ** 31 - 1
+
+
+def select_topk(vals: jnp.ndarray, ids: jnp.ndarray, k: int
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k of ``(vals [..., M], ids [..., M])`` under the total order
+    (value desc, index asc) → ``(vals [..., k], ids [..., k])``, sorted.
+
+    Indices must be unique along the last axis (they are global vocab
+    positions).  When ``M < k`` the tail pads with ``(-inf, ...)``
+    entries — strictly smaller than any real logit, so padding never
+    survives a merge against real candidates and carries softmax
+    probability 0 in the sampling finalize.
+    """
+    v = vals.astype(jnp.float32)
+    i = ids.astype(jnp.int32)
+    out_v, out_i = [], []
+    for _ in range(k):
+        mv = jnp.max(v, axis=-1, keepdims=True)
+        mi = jnp.min(jnp.where(v == mv, i, _INT32_MAX),
+                     axis=-1, keepdims=True)
+        out_v.append(mv)
+        out_i.append(mi)
+        v = jnp.where((v == mv) & (i == mi), -jnp.inf, v)
+    return (jnp.concatenate(out_v, axis=-1),
+            jnp.concatenate(out_i, axis=-1))
+
+
+def topk_pair_merge(a: Tuple[jnp.ndarray, jnp.ndarray],
+                    b: Tuple[jnp.ndarray, jnp.ndarray]
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """THE commutative k-merge ClusterReduce operator: fold two sorted
+    ``(vals [..., k], ids [..., k])`` candidate sets into their joint
+    top-k under the same (value desc, index asc) order.
+
+    Index sets from different vocab shards are disjoint, so the merged
+    multiset has a unique top-k and the operator is commutative AND
+    associative — every rank's tree association order agrees, the k-wide
+    generalization of ``_greedy_pair_merge``'s tie-break fix (equal-max
+    logits on different shards must resolve to the same global index on
+    every rank).
+    """
+    av, ai = a
+    bv, bi = b
+    return select_topk(jnp.concatenate([av, bv], axis=-1),
+                       jnp.concatenate([ai, bi], axis=-1),
+                       av.shape[-1])

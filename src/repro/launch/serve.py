@@ -14,7 +14,9 @@ Two serving modes share the engine:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
+import warnings
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -29,8 +31,11 @@ from repro.launch.mesh import dp_axes_of, dp_size_of, make_test_mesh
 from repro.launch.specs import _unwrap2, _wrap2, ctx_for, serving_layout
 from repro.configs.base import ShapeConfig
 from repro.models.transformer import init_device_major, param_specs
-from repro.serving.engine import ServeConfig, decode_step, init_decode_state
+from repro.serving.engine import (EngineOptions, ServeConfig, decode_step,
+                                  init_decode_state)
 from repro.serving.prefill import prefill
+from repro.serving.sampling import (SAMPLING_LEAVES, host_sampling_rows,
+                                    reset_sampling_state)
 
 
 class EngineHandle(NamedTuple):
@@ -40,12 +45,16 @@ class EngineHandle(NamedTuple):
     continuous batching (serving/scheduler.py):
 
     * ``admit_fn(params["train"], state, tokens [B, S_cap],
-      lengths [B])`` — targeted prefill-insert: slots with
+      lengths [B], samp=None)`` — targeted prefill-insert: slots with
       ``lengths[b] > 0`` get the padded prompt row ``b`` prefilled into
-      their cache at offset 0 and sample their first token; every other
-      slot's state rides through untouched.
+      their cache at offset 0, take their per-request sampling rows
+      (``samp``: the ``state["sampling"]`` leaf layout,
+      serving/sampling.py; ``None`` = greedy defaults — the legacy
+      4-argument call keeps working) and sample their first token;
+      every other slot's state rides through untouched.
     * ``retire_fn(state, mask [B])`` — frees the masked slots
-      (``cache_lens ← −1``: no KV writes, zero attend work).
+      (``cache_lens ← −1``: no KV writes, zero attend work, sampling
+      params back to the greedy defaults).
     """
     params: Any
     prefill_fn: Callable
@@ -74,40 +83,70 @@ def build_engine(cfg, mesh, *, max_seq: int, batch_global: int,
     scheduler-ready handle with the admit/retire steps."""
     h = build_engine_full(
         cfg, mesh, max_seq=max_seq, batch_global=batch_global,
-        fused_combine=fused_combine, cluster=cluster, backend=backend,
-        interpret=interpret, block_s=block_s, prepack=prepack,
-        autotune_table=autotune_table)
+        options=EngineOptions(
+            fused_combine=fused_combine, cluster=cluster, backend=backend,
+            interpret=interpret, block_s=block_s, prepack=prepack,
+            autotune_table=autotune_table))
     return h.params, h.prefill_fn, h.decode_fn, h.state, h.lay, h.scfg
 
 
+_LEGACY_KWARGS_WARNED = False
+
+
+def _resolve_options(options: Optional[EngineOptions],
+                     legacy: dict) -> EngineOptions:
+    """Deprecation shim: fold ``build_engine_full``'s pre-options keyword
+    arguments into an :class:`EngineOptions`, warning ONCE per process.
+    Unknown names raise immediately (same contract as a real keyword
+    mismatch) instead of silently building a differently-shaped engine."""
+    if not legacy:
+        return options or EngineOptions()
+    unknown = set(legacy) - set(EngineOptions.__dataclass_fields__)
+    if unknown:
+        raise TypeError(
+            f"build_engine_full() got unexpected keyword arguments "
+            f"{sorted(unknown)}")
+    global _LEGACY_KWARGS_WARNED
+    if not _LEGACY_KWARGS_WARNED:
+        _LEGACY_KWARGS_WARNED = True
+        warnings.warn(
+            "passing engine construction knobs as individual keyword "
+            "arguments to build_engine_full is deprecated — pass "
+            "options=EngineOptions(...) instead (the legacy kwargs keep "
+            "working through this shim)",
+            DeprecationWarning, stacklevel=3)
+    return dataclasses.replace(options or EngineOptions(), **legacy)
+
+
 def build_engine_full(cfg, mesh, *, max_seq: int, batch_global: int,
-                      fused_combine: bool = False,
-                      cluster: Optional[int] = None,
-                      backend: str = "xla", interpret: bool = False,
-                      block_s: Optional[int] = None,
-                      block_f: Optional[int] = None,
-                      block_v: Optional[int] = None, prepack="auto",
-                      autotune_table: Optional[str] = None,
-                      track_work: bool = False, fuse_head: bool = True,
-                      check_finite: bool = False,
-                      kv_fingerprint: bool = False,
-                      shadow_head: bool = False,
-                      plan_seq_len: Optional[int] = None) -> EngineHandle:
+                      options: Optional[EngineOptions] = None,
+                      **legacy_kwargs) -> EngineHandle:
     """Build every jitted serving step for (cfg × mesh).
 
-    ``backend``: "xla" | "pallas" | "auto" — local-stage compute for the
-    decode dataflow (DESIGN.md §2).  ``interpret`` runs the Pallas kernels
-    in interpret mode (CPU tests).  ``block_s`` overrides the autotuned KV
-    block granularity; ``autotune_table`` persists plans across launches.
+    All construction knobs live on ONE object:
+    ``options=EngineOptions(...)`` (serving/engine.py) — backend /
+    interpret / block sizes / prepack / the state-leaf flags
+    (track_work, check_finite, kv_fingerprint, shadow_head) /
+    fused_combine / cluster / autotune_table / fuse_head /
+    plan_seq_len.  The pre-options surface (the same names as
+    individual keyword arguments) still works through a deprecation
+    shim that warns once per process and folds them into ``options``.
 
-    ``prepack``: "auto" | "on" | "off" — serve-layout weight prepack
-    (serving/prepack.py); auto enables it whenever the Pallas backend is
-    selected.  ``params`` is returned as ``{"train": …, "serve": …}``:
-    the training-layout tree (prefill / checkpoints) and the decode-plan
-    tree, materialized ONCE at load with ``out_shardings`` (identical to
-    "train" when prepack is off).  ``generate`` routes each to its step.
+    ``options.backend``: "xla" | "pallas" | "auto" — local-stage compute
+    for the decode dataflow (DESIGN.md §2); ``interpret`` runs the
+    Pallas kernels in interpret mode (CPU tests); ``block_s/f/v``
+    override the autotuned tiles; ``autotune_table`` persists plans
+    across launches.
 
-    ``track_work`` adds the per-slot attend-step counters
+    ``options.prepack``: "auto" | "on" | "off" — serve-layout weight
+    prepack (serving/prepack.py); auto enables it whenever the Pallas
+    backend is selected.  ``params`` is returned as
+    ``{"train": …, "serve": …}``: the training-layout tree (prefill /
+    checkpoints) and the decode-plan tree, materialized ONCE at load
+    with ``out_shardings`` (identical to "train" when prepack is off).
+    ``generate`` routes each to its step.
+
+    ``options.track_work`` adds the per-slot attend-step counters
     (``state["work_blocks"]``, core/tracecount.py) the scheduler tests
     read.  ``check_finite`` adds the per-slot integrity sentinel
     (``state["nonfinite"]``) the fleet router's health probes poll
@@ -116,14 +155,24 @@ def build_engine_full(cfg, mesh, *, max_seq: int, batch_global: int,
     per-slot/per-layer KV checksum leaves and ``shadow_head`` the
     committed-token (residual, head_val, token) stash the SDC monitor
     verifies on probe (serving/integrity.py) — both off by default for
-    the same reason.  ``fuse_head=False`` skips the LM-head/sampling tail bundle on
-    the prepacked path (ablation/parity knob: same fused layers, loose
-    XLA head tail — tests prove the two sample token-identically).  ``plan_seq_len`` keys the autotune bucket on the EXPECTED MAX
-    LIVE length rather than the allocated ``max_seq`` — ragged serving
-    allocates slack capacity that no slot's live span ever reaches, and
-    the plan (block_s, cluster) should follow the live spans
-    (DESIGN.md §6).
+    the same reason.  ``fuse_head=False`` skips the LM-head/sampling
+    tail bundle on the prepacked path (ablation/parity knob: same fused
+    layers, loose XLA head tail — tests prove the two sample
+    token-identically).  ``plan_seq_len`` keys the autotune bucket on
+    the EXPECTED MAX LIVE length rather than the allocated ``max_seq``
+    — ragged serving allocates slack capacity that no slot's live span
+    ever reaches, and the plan (block_s, cluster) should follow the
+    live spans (DESIGN.md §6).
     """
+    opt = _resolve_options(options, legacy_kwargs)
+    fused_combine, cluster = opt.fused_combine, opt.cluster
+    backend, interpret = opt.backend, opt.interpret
+    block_s, block_f, block_v = opt.block_s, opt.block_f, opt.block_v
+    prepack, autotune_table = opt.prepack, opt.autotune_table
+    track_work, fuse_head = opt.track_work, opt.fuse_head
+    check_finite = opt.check_finite
+    kv_fingerprint, shadow_head = opt.kv_fingerprint, opt.shadow_head
+    plan_seq_len = opt.plan_seq_len
     ms = mesh.shape["model"]
     dp_axes = dp_axes_of(mesh)
     dp = dp_size_of(mesh)
@@ -214,10 +263,10 @@ def build_engine_full(cfg, mesh, *, max_seq: int, batch_global: int,
 
     tok1 = P(dp_axes) if b_shard else P()
 
-    def pf_body(params, state, tokens, fe, lengths):
+    def pf_body(params, state, tokens, fe, lengths, sampling=None):
         st = _unwrap2(state)
         nxt, new = prefill(ctx, cfg, scfg, params, st, tokens, fe,
-                           lengths=lengths)
+                           lengths=lengths, sampling=sampling)
         return nxt, _wrap2(new)
 
     def dec_body(params, state, tokens):
@@ -229,6 +278,7 @@ def build_engine_full(cfg, mesh, *, max_seq: int, batch_global: int,
         st = dict(_unwrap2(state))
         st["cache_lens"] = jnp.where(mask > 0, jnp.int32(-1),
                                      st["cache_lens"])
+        st["sampling"] = reset_sampling_state(st["sampling"], mask > 0)
         if "nonfinite" in st:        # retired slot: clear its sentinel
             st["nonfinite"] = jnp.where(mask > 0, jnp.int32(0),
                                         st["nonfinite"])
@@ -239,10 +289,20 @@ def build_engine_full(cfg, mesh, *, max_seq: int, batch_global: int,
         lambda p, s, t, fe: pf_body(p, s, t, fe, None), mesh=mesh,
         in_specs=(p_specs, s_specs, P(*tok1, None), fe_spec),
         out_specs=(tok1, s_specs), check_vma=False))
-    admit = jax.jit(shard_map(
-        lambda p, s, t, ln: pf_body(p, s, t, None, ln), mesh=mesh,
-        in_specs=(p_specs, s_specs, P(*tok1, None), tok1),
+    samp_specs = {name: tok1 for name in SAMPLING_LEAVES}
+    admit_jit = jax.jit(shard_map(
+        lambda p, s, t, ln, sp: pf_body(p, s, t, None, ln, sp), mesh=mesh,
+        in_specs=(p_specs, s_specs, P(*tok1, None), tok1, samp_specs),
         out_specs=(tok1, s_specs), check_vma=False))
+
+    def admit(params, state, tokens, lengths, samp=None):
+        # host wrapper: the legacy 4-argument admit keeps working — a
+        # missing ``samp`` fills every row with the greedy defaults, so
+        # admitted slots land exactly where the pre-sampling engine put
+        # them (bit-identical first token)
+        if samp is None:
+            samp = host_sampling_rows(batch_global)
+        return admit_jit(params, state, tokens, lengths, samp)
     dec = jax.jit(shard_map(dec_body, mesh=mesh,
                             in_specs=(sv_specs, s_specs, tok1),
                             out_specs=(tok1, s_specs), check_vma=False))
@@ -254,30 +314,33 @@ def build_engine_full(cfg, mesh, *, max_seq: int, batch_global: int,
 
 
 def build_replicas(cfg, mesh, *, n_replicas: int, max_seq: int,
-                   batch_global: int, check_finite: bool = True,
-                   kv_fingerprint: bool = True, shadow_head: bool = True,
-                   track_work: bool = False, **kw):
+                   batch_global: int,
+                   options: Optional[EngineOptions] = None, **kw):
     """N engine replicas for the fleet router (serving/router.py).
 
     Each replica is an independent :class:`EngineHandle` on ``mesh``
     (in production each would own its own mesh slice; tests run N
     single-mesh engines), initialized from the SAME PRNG seed — so any
-    replica produces the identical greedy stream for a given prefix,
-    which is the invariant reconstructive recovery relies on: a request
-    re-queued onto a survivor continues token-for-token where the dead
-    replica's journal left off (DESIGN.md §9).
+    replica produces the identical stream for a given (prefix, sampling
+    params, emit offset), which is the invariant reconstructive recovery
+    relies on: a request re-queued onto a survivor continues
+    token-for-token where the dead replica's journal left off — sampled
+    requests included, via the journaled seed + emit offset
+    (DESIGN.md §9).
 
     ``check_finite``/``kv_fingerprint``/``shadow_head`` default ON here
     (unlike ``build_engine_full``): the router's health probes read the
     per-slot non-finite sentinel and the SDC monitor's fingerprint /
-    shadow leaves (serving/integrity.py).
+    shadow leaves (serving/integrity.py).  Pass
+    ``options=EngineOptions(...)`` to override; bare keyword arguments
+    still route through ``build_engine_full``'s deprecation shim.
     """
+    if options is None:
+        options = EngineOptions(check_finite=True, kv_fingerprint=True,
+                                shadow_head=True)
     return [build_engine_full(cfg, mesh, max_seq=max_seq,
                               batch_global=batch_global,
-                              check_finite=check_finite,
-                              kv_fingerprint=kv_fingerprint,
-                              shadow_head=shadow_head,
-                              track_work=track_work, **kw)
+                              options=options, **kw)
             for _ in range(n_replicas)]
 
 

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +41,16 @@ from repro.models.layers import (EmbedParams, embed_lookup, ffn_apply,
                                  lm_head_logits, rms_norm, softcap)
 from repro.models.moe import MoEParams, moe_apply
 from repro.models.transformer import unwrap_local
+from repro.serving.sampling import (CAND_K, _greedy_pair_merge,
+                                    advance_sampling_step,
+                                    finalize_candidates, greedy_sample,
+                                    greedy_sample_pair, head_candidates,
+                                    init_sampling_state, topk_pair_merge)
+
+__all_reexports__ = (_greedy_pair_merge, greedy_sample, greedy_sample_pair)
+# ^ the greedy helpers live in serving/sampling.py now (the stochastic
+#   finalize shares their merge discipline); re-exported here because
+#   PR-5-era call sites import them from the engine.
 
 PyTree = Any
 
@@ -96,6 +106,38 @@ class ServeConfig:
     shadow_head: bool = False
 
 
+@dataclass(frozen=True)
+class EngineOptions:
+    """Construction-time options for ``build_engine_full`` — the single
+    object that replaced its 14 mirrored keyword arguments (the legacy
+    kwargs still work through a once-warning deprecation shim).
+
+    Everything here is either resolved into the :class:`ServeConfig`
+    the jitted steps close over (``backend`` / ``interpret`` /
+    ``block_*`` / ``prepack`` / ``track_work`` / ``check_finite`` /
+    ``kv_fingerprint`` / ``shadow_head``) or consumed by the build
+    itself (``fused_combine`` / ``cluster`` / ``autotune_table`` /
+    ``fuse_head`` / ``plan_seq_len``).  ``None`` block sizes defer to
+    the autotuned plan; ``plan_seq_len`` keys the autotune bucket on
+    the expected max LIVE length rather than the allocated capacity
+    (DESIGN.md §6)."""
+    fused_combine: bool = False
+    cluster: Optional[int] = None
+    backend: str = "xla"
+    interpret: bool = False
+    block_s: Optional[int] = None
+    block_f: Optional[int] = None
+    block_v: Optional[int] = None
+    prepack: Any = "auto"
+    autotune_table: Optional[str] = None
+    track_work: bool = False
+    fuse_head: bool = True
+    check_finite: bool = False
+    kv_fingerprint: bool = False
+    shadow_head: bool = False
+    plan_seq_len: Optional[int] = None
+
+
 # ---------------------------------------------------------------------------
 # Cache init (per device)
 # ---------------------------------------------------------------------------
@@ -141,7 +183,11 @@ def init_decode_state(cfg: ModelConfig, scfg: ServeConfig, ctx: ParallelCtx
         items = [fn() for _ in range(n)]
         return jax.tree.map(lambda *xs: jnp.stack(xs), *items)
 
-    state: Dict[str, Any] = {"cache_lens": jnp.zeros((B,), jnp.int32)}
+    state: Dict[str, Any] = {"cache_lens": jnp.zeros((B,), jnp.int32),
+                             # per-slot sampling params + emit offset
+                             # (greedy defaults), riding the state like
+                             # cache_lens does — serving/sampling.py
+                             "sampling": init_sampling_state(B)}
     if scfg.track_work:
         state["work_blocks"] = jnp.zeros((B,), jnp.int32)
     if scfg.check_finite:
@@ -434,54 +480,6 @@ def _cross_decode(ctx, cross_blk, x, enc_kv, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 # Full decode step
 # ---------------------------------------------------------------------------
-def _greedy_pair_merge(a, b):
-    """THE (value, index) reduce operator for greedy sampling: maximum
-    value, LOWEST global index among equal maxima.
-
-    The index tie-break makes the operator commutative as well as
-    associative, so every rank's tree association order yields the same
-    winner — without it, equal-max logits on different vocab shards
-    made ranks DISAGREE on the sampled token (each rank's tree folds
-    the shards in a different order, and a first-argument-wins tie kept
-    a different shard per rank).  One definition on purpose: the fused
-    head tail (``_fused_head_tail``) must reproduce ``greedy_sample``
-    exactly, and a divergent copy would be a silent cross-path token
-    mismatch on ties.
-    """
-    mv, mi = a
-    nv, ni = b
-    take_b = (nv > mv) | ((nv == mv) & (ni < mi))
-    return jnp.where(take_b, nv, mv), jnp.where(take_b, ni, mi)
-
-
-def greedy_sample_pair(ctx: ParallelCtx, logits_loc: jax.Array
-                       ) -> Tuple[jax.Array, jax.Array]:
-    """Greedy over vocab-sharded logits, returning BOTH halves of the
-    reduced (max_value, argmax_global_index) pair: the index is the
-    sampled token, the max logit is the cheapest per-slot health value
-    the ``check_finite`` sentinel can test (a NaN anywhere in a slot's
-    logits surfaces in its max under IEEE max-with-NaN or upstream in
-    the residual check).  Ties pick the lowest global index on every
-    rank (:func:`_greedy_pair_merge`)."""
-    v_loc = logits_loc.shape[-1]
-    shard = ctx.model_index()
-    lf = logits_loc.astype(jnp.float32)
-    loc_max = jnp.max(lf, axis=-1)
-    loc_idx = jnp.argmax(lf, axis=-1).astype(jnp.int32) + shard * v_loc
-    if ctx.model is None:
-        return loc_idx, loc_max
-    mx, idx = prim.cluster_reduce_pairs((loc_max, loc_idx), ctx.model,
-                                        _greedy_pair_merge)
-    return idx, mx
-
-
-def greedy_sample(ctx: ParallelCtx, logits_loc: jax.Array) -> jax.Array:
-    """Greedy over vocab-sharded logits: pair-wise tree reduce on
-    (max_value, argmax_global_index); ties pick the lowest global index
-    on every rank (:func:`_greedy_pair_merge`)."""
-    return greedy_sample_pair(ctx, logits_loc)[0]
-
-
 def _finite_violations(cfg: ModelConfig, resid: jax.Array, head_val,
                        nxt: jax.Array, active: jax.Array) -> jax.Array:
     """Per-slot integrity sentinel (``ServeConfig.check_finite``): int32
@@ -500,18 +498,22 @@ def _fused_head_tail(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
                      w: df.PackedHeadWeights, x: jax.Array
                      ) -> Tuple[jax.Array, jax.Array]:
     """Fused LM-head/sampling tail (DESIGN.md §7): final RMSNorm + vocab-
-    tiled logits + softcap + streaming greedy partials in ONE Pallas
-    kernel per vocab shard, then ONE tree ClusterReduce on (value,
-    global index) pairs — ``[B, V]`` logits never touch HBM, and the
-    merge is :func:`_greedy_pair_merge`, so the result is token-exact
-    against the unfused ``lm_head_logits`` + ``greedy_sample`` tail.
+    tiled logits + softcap + streaming top-k partials in ONE Pallas
+    kernel per vocab shard, then ONE tree ClusterReduce on the sorted
+    ``[B, CAND_K]`` (value, global index) candidate sets — ``[B, V]``
+    logits never touch HBM, and the merge is the commutative
+    :func:`~repro.kernels.fused_head.topk.topk_pair_merge` (the
+    ``_greedy_pair_merge`` discipline at width k), so the candidates
+    are bit-exact against the unfused full-logits selection
+    (:func:`~repro.serving.sampling.head_candidates`).
 
     Ragged decode needs no gating: the head is slot-local, so free
     slots flow through (their token is ignored by the scheduler),
     exactly as on the XLA path.
 
-    Returns the sampled token AND the reduced max logit — the pair the
-    ``check_finite`` sentinel tests, mirroring :func:`greedy_sample_pair`.
+    Returns the merged ``(values [B, K], global_indices [B, K])``; the
+    caller finalizes per-slot sampling on them
+    (:func:`~repro.serving.sampling.finalize_candidates`).
     """
     from repro.kernels.fused_head.fused_head import fused_head_block
     v_loc = w.table.shape[0]
@@ -527,14 +529,14 @@ def _fused_head_tail(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
     mx, ix = fused_head_block(
         x, w.table, w.ln, eps=cfg.norm_eps,
         logit_softcap=float(cfg.logit_softcap or 0.0), block_v=bv,
-        interpret=scfg.interpret)
+        k=CAND_K, interpret=scfg.interpret)
     idx = ix + ctx.model_index().astype(jnp.int32) * v_loc
     if ctx.model is None:
-        return idx, mx
+        return mx, idx
     tracecount.bump("head_cluster_reduce")
     mx, idx = prim.cluster_reduce_pairs((mx, idx), ctx.model,
-                                        _greedy_pair_merge)
-    return idx, mx
+                                        topk_pair_merge)
+    return mx, idx
 
 
 def _check_not_param_pair(params_dm: PyTree, want: str) -> None:
@@ -650,19 +652,26 @@ def decode_step(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
         new_state["work_blocks"] = state["work_blocks"] + work
     # LM-head/sampling tail: the prepacked Pallas path carries the
     # aliasing PackedHeadWeights bundle and runs the fused head kernel
-    # (final norm + vocab-tiled logits + softcap + streaming greedy
-    # partials, one tree (value, index) reduce — no [B, V] logits in
-    # HBM); otherwise the loose XLA tail (DESIGN.md §7).
+    # (final norm + vocab-tiled logits + softcap + streaming top-k
+    # partials, one tree k-merge reduce — no [B, V] logits in HBM);
+    # otherwise the loose XLA tail builds the SAME sorted candidate set
+    # from full logits (DESIGN.md §7).  Per-slot temperature / top-k /
+    # top-p / PRNG finalize on the merged candidates, params riding
+    # state["sampling"] (serving/sampling.py; greedy default = bit-
+    # identical to the PR-5 (max, argmax) pair).
+    samp = state["sampling"]
     head = params.get("head")
     if isinstance(head, df.PackedHeadWeights):
-        nxt, head_val = _fused_head_tail(ctx, cfg, scfg, head, x)
+        cand_v, cand_i = _fused_head_tail(ctx, cfg, scfg, head, x)
     else:
         xh = rms_norm(x, params["final_norm"], cfg.norm_eps)
         table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
         logits = lm_head_logits(ctx, table, xh)
         if cfg.logit_softcap:
             logits = softcap(logits, cfg.logit_softcap)
-        nxt, head_val = greedy_sample_pair(ctx, logits)
+        cand_v, cand_i = head_candidates(ctx, logits)
+    nxt, head_val = finalize_candidates(cand_v, cand_i, samp)
+    new_state["sampling"] = advance_sampling_step(samp, cache_len >= 0)
     if scfg.check_finite:
         new_state["nonfinite"] = state["nonfinite"] + _finite_violations(
             cfg, x, head_val, nxt, cache_len >= 0)

@@ -33,7 +33,9 @@ from repro.models.layers import (EmbedParams, embed_lookup, ffn_apply,
 from repro.models.moe import MoEParams, moe_apply
 from repro.models.transformer import apply_block, encode, unwrap_local
 from repro.serving.engine import (ServeConfig, _check_not_param_pair,
-                                  _finite_violations, greedy_sample_pair)
+                                  _finite_violations)
+from repro.serving.sampling import (admit_sampling_state,
+                                    finalize_candidates, head_candidates)
 
 PyTree = Any
 
@@ -162,7 +164,8 @@ def _prefill_block(ctx: ParallelCtx, cfg: ModelConfig, kind: str,
 def prefill(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
             params_dm: PyTree, state: Dict[str, Any], tokens: jax.Array,
             frontend_embeds: Optional[jax.Array] = None, fsdp=None,
-            lengths: Optional[jax.Array] = None
+            lengths: Optional[jax.Array] = None,
+            sampling: Optional[Dict[str, jax.Array]] = None
             ) -> Tuple[jax.Array, Dict[str, Any]]:
     """tokens [B_loc, S_prompt] → (first generated token [B_loc], state).
 
@@ -176,6 +179,14 @@ def prefill(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
     Default (None) = every slot uses the full ``S_prompt``.  Partial
     admission is attention-only: recurrent (RG-LRU / RWKV-6) scans and
     encoder K/V would fold the padded tail into their final state.
+
+    ``sampling``: per-slot [B] sampling-param rows (the
+    ``state["sampling"]`` leaf layout — serving/sampling.py), written
+    adm-masked into the state BEFORE the first token samples, so a
+    request's very first emission already uses its own temperature /
+    top-k / top-p / seed at emit offset 0.  Default (None) keeps the
+    state's current leaves (greedy defaults ⇒ bit-identical to the
+    PR-5 greedy prefill).
     """
     _check_not_param_pair(params_dm, "train")
     params = unwrap_local(params_dm)
@@ -268,8 +279,19 @@ def prefill(ctx: ParallelCtx, cfg: ModelConfig, scfg: ServeConfig,
     logits = lm_head_logits(ctx, table, last)
     if cfg.logit_softcap:
         logits = softcap(logits, cfg.logit_softcap)
-    nxt, head_val = greedy_sample_pair(ctx, logits)
     adm = lengths > 0
+    # per-slot sampling params land BEFORE the first emission: the admit
+    # rows arrive with emit offset 0, so the first token's PRNG key is
+    # fold_in(PRNGKey(seed), 0) — the offset journal replay re-derives
+    samp = state["sampling"]
+    if sampling is not None:
+        samp = admit_sampling_state(samp, sampling, adm)
+    cand_v, cand_i = head_candidates(ctx, logits)
+    nxt, head_val = finalize_candidates(cand_v, cand_i, samp)
+    # admitted slots advance to emit offset 1; untouched slots keep
+    # their offset (they did not emit this call)
+    new_state["sampling"] = dict(samp, step=jnp.where(
+        adm, jnp.int32(1), samp["step"]))
     new_state["cache_lens"] = jnp.where(adm, lengths,
                                         state["cache_lens"])
     if "work_blocks" in state:       # admitted slots start a fresh count

@@ -30,8 +30,12 @@ restoring them.  The router makes that safe with three mechanisms
    program before generating live.  Same weights (replicas share the
    init seed — ``build_replicas``), same programs, same inputs in the
    same order ⇒ the reconstructed device state and the continuation
-   are bit-identical to an uninterrupted run; greedy sampling today
-   means the journaled PRNG state is simply the (recorded) seed.
+   are bit-identical to an uninterrupted run.  Sampled streams recover
+   the same way: the PRNG stream is POSITIONAL (per-request seed ×
+   emit offset — serving/sampling.py), so the journaled
+   :class:`SamplingParams` plus the committed-token count fully
+   determine every future key; no mid-stream PRNG state is ever
+   checkpointed.
    Replayed emissions are cross-checked against the journal and never
    re-committed.  A replica failed by the WEIGHT fingerprint probe
    additionally HEALS: the serve layout re-materializes from the train
@@ -70,6 +74,8 @@ from repro.core import tracecount
 from repro.launch.serve import EngineHandle
 from repro.serving.faults import ReplicaKilled
 from repro.serving.integrity import IntegrityConfig, IntegrityMonitor
+from repro.serving.sampling import (GREEDY, SamplingParams,
+                                    validate_sampling)
 from repro.serving.scheduler import Request, SchedulerHooks, SlotScheduler
 
 
@@ -80,9 +86,16 @@ class JournalEntry:
     rid: int
     prompt: List[int]
     max_new: int
-    seed: int = 0               # journaled sampling PRNG seed (greedy
-                                # ignores it; recorded so stochastic
-                                # sampling rides the same recovery path)
+    sampling: SamplingParams = GREEDY   # journaled per-request params —
+                                # with the positional PRNG stream
+                                # (seed × emit offset) these plus the
+                                # committed tokens are ALL the state a
+                                # survivor needs to resume a sampled
+                                # stream bit-exactly
+    seed: int = 0               # journaled sampling PRNG seed (kept in
+                                # sync with ``sampling.seed``; retained
+                                # as its own column for the PR-6 journal
+                                # readers)
     tokens: List[int] = field(default_factory=list)   # COMMITTED only
     replicas: List[int] = field(default_factory=list)  # dispatch history
     submit_tick: int = -1
@@ -243,9 +256,11 @@ class Router:
             raise ValueError(
                 f"request {req.rid}: max_new={req.max_new} exceeds the "
                 f"router's max_new_cap={self.max_new_cap}")
+        sampling = getattr(req, "sampling", GREEDY)
+        validate_sampling(req.rid, sampling)
         self.journal[req.rid] = JournalEntry(
             rid=req.rid, prompt=list(req.prompt), max_new=req.max_new,
-            seed=getattr(req, "seed", 0), submit_tick=self.tick)
+            sampling=sampling, seed=sampling.seed, submit_tick=self.tick)
         self.pending.append(req.rid)
 
     # -- dispatch ---------------------------------------------------------
@@ -265,8 +280,13 @@ class Router:
             # never re-committed
             r.committed[lr] = len(e.tokens)
             r.staged_mark[lr] = len(e.tokens)
+            # the replay carries the committed prefix; the SAME sampling
+            # params ride along, so the survivor's positional PRNG keys
+            # (seed × emit offset) line up with the dead replica's and
+            # the live continuation stays bit-exact for sampled streams
             r.sched.submit(Request(lr, list(e.prompt), e.max_new,
-                                   replay=list(e.tokens)))
+                                   replay=list(e.tokens),
+                                   sampling=e.sampling))
             e.replicas.append(r.idx)
             self.events.append((self.tick, "dispatch", rid, r.idx))
         self.pending.clear()

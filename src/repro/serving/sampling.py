@@ -1,0 +1,290 @@
+"""Per-request sampling over the fused head's merged top-k candidates.
+
+The fused LM-head tail streams each vocab shard into a ``[B, CAND_K]``
+(value, global index) candidate set and merges shards with ONE
+commutative k-merge ClusterReduce (``kernels.fused_head.topk``) — the
+``[B, V]`` logits never exist.  Everything stochastic happens HERE, on
+those k merged candidates, per slot:
+
+* :class:`SamplingParams` is the frozen per-request surface
+  (``temperature`` / ``top_k`` / ``top_p`` / ``seed``); the greedy
+  default makes every pre-existing token-exact test pass unchanged.
+* The per-slot params ride the decode state as ``state["sampling"]``
+  — five ``[B]`` leaves, exactly like ``cache_lens`` rides the batched
+  scalar-prefetch operand — so one ragged batch serves heterogeneous
+  sampling configs and the jitted decode signature never changes.
+* The PRNG stream is *positional*: slot ``b``'s key for its ``n``-th
+  emitted token is ``fold_in(PRNGKey(seed_b), n)`` — a pure function of
+  (seed, emit index), NOT of device history.  Fleet recovery replays a
+  journaled stream on a survivor replica with the same seed and the
+  same emit offsets, so the reconstructed stochastic stream is
+  bit-exact (DESIGN.md §9; the router journals ``sampling`` per
+  request).
+* ``finalize_candidates`` applies temperature → top-k (a rank mask —
+  candidates arrive sorted value-descending) → top-p (keep while the
+  cumulative probability BEFORE a candidate is < p; rank 0 always
+  kept) → Gumbel-max categorical.  ``temperature == 0`` bypasses the
+  PRNG entirely and takes candidate 0 — bit-identical to the PR-5
+  greedy tail.
+
+Exactness contract (DESIGN.md §8 pt 0, extended to k pairs): the fused
+and unfused paths build the SAME sorted candidate set (`select_topk`
+is one definition shared by the Pallas kernel, the jnp oracle and the
+shard merge), and the finalize is common code — so fused
+temperature/top-k/top-p decode is token-exact against a
+``fuse_head=False`` oracle under a forced PRNG stream, for any top_k ≤
+``CAND_K`` and top-p restricted to the ``CAND_K`` candidates.
+
+The greedy helpers (``greedy_sample`` / ``greedy_sample_pair`` and the
+pair-merge operator) moved here from ``serving.engine`` (PR-5);
+``engine`` re-exports them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import primitives as prim
+from repro.kernels.fused_head.topk import select_topk, topk_pair_merge
+from repro.models.ctx import ParallelCtx
+
+# Width of the streaming candidate partials — every fused-head launch
+# selects this many (value, index) pairs per slot regardless of the
+# per-slot params (the merge operator and the ICI byte model are sized
+# by it; autotune's block_v VMEM model carries the matching k term).
+# top_k > CAND_K is rejected at submit: the fused tail only ever holds
+# CAND_K candidates, and silently truncating would break the
+# fused-vs-oracle exactness contract.
+CAND_K = 8
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling surface (``Request.sampling``).
+
+    ``temperature == 0`` is greedy (candidate 0; the PRNG is bypassed).
+    ``top_k`` restricts sampling to the best ``top_k`` of the fused
+    head's ``CAND_K`` candidates (1 ≤ top_k ≤ CAND_K; the default keeps
+    all of them).  ``top_p`` is nucleus sampling over those candidates
+    (the best candidate is always kept).  ``seed`` anchors the
+    positional PRNG stream — journaled by the fleet router so recovery
+    reconstructs sampled streams bit-exactly."""
+    temperature: float = 0.0
+    top_k: int = CAND_K
+    top_p: float = 1.0
+    seed: int = 0
+
+
+GREEDY = SamplingParams()
+
+
+def validate_sampling(rid: int, sp: SamplingParams) -> None:
+    """Reject out-of-range params, naming the offending field (the PR-7
+    ``submit()`` validation style — shared by the scheduler and the
+    fleet router)."""
+    if sp.temperature < 0:
+        raise ValueError(
+            f"request {rid}: temperature must be ≥ 0 "
+            f"(got {sp.temperature})")
+    if sp.top_k < 1:
+        raise ValueError(
+            f"request {rid}: top_k must be ≥ 1 (got {sp.top_k})")
+    if sp.top_k > CAND_K:
+        raise ValueError(
+            f"request {rid}: top_k must be ≤ the fused head's candidate "
+            f"width CAND_K={CAND_K} (got {sp.top_k})")
+    if not 0.0 < sp.top_p <= 1.0:
+        raise ValueError(
+            f"request {rid}: top_p must be in (0, 1] (got {sp.top_p})")
+
+
+# ---------------------------------------------------------------------------
+# The per-slot params as decode-state leaves ([B] each, like cache_lens)
+# ---------------------------------------------------------------------------
+SAMPLING_LEAVES = ("temp", "topk", "topp", "seed", "step")
+_LEAF_DTYPES = {"temp": jnp.float32, "topk": jnp.int32,
+                "topp": jnp.float32, "seed": jnp.uint32,
+                "step": jnp.int32}
+_LEAF_DEFAULTS = {"temp": 0.0, "topk": CAND_K, "topp": 1.0,
+                  "seed": 0, "step": 0}
+
+
+def init_sampling_state(batch: int) -> Dict[str, jax.Array]:
+    """Greedy-default ``state["sampling"]`` leaves.  ``step`` counts
+    emitted tokens per slot — the emit offset the positional PRNG folds
+    in (0 = the admit emission)."""
+    return {name: jnp.full((batch,), _LEAF_DEFAULTS[name],
+                           _LEAF_DTYPES[name])
+            for name in SAMPLING_LEAVES}
+
+
+def reset_sampling_state(samp: Dict[str, jax.Array], mask: jax.Array
+                         ) -> Dict[str, jax.Array]:
+    """Retire: masked slots return to the greedy defaults."""
+    return {name: jnp.where(mask, jnp.asarray(_LEAF_DEFAULTS[name],
+                                              v.dtype), v)
+            for name, v in samp.items()}
+
+
+def admit_sampling_state(samp: Dict[str, jax.Array],
+                         incoming: Dict[str, jax.Array],
+                         adm: jax.Array) -> Dict[str, jax.Array]:
+    """Targeted insert: admitted slots take the incoming per-request
+    params (host-built arrays, ``step`` 0); others ride through."""
+    return {name: jnp.where(adm, incoming[name].astype(v.dtype), v)
+            for name, v in samp.items()}
+
+
+def host_sampling_rows(batch: int) -> Dict[str, np.ndarray]:
+    """Host-side greedy-default admit rows; the scheduler overwrites the
+    admitted slots' entries from each request's ``SamplingParams``."""
+    return {name: np.full((batch,), _LEAF_DEFAULTS[name],
+                          np.dtype(_LEAF_DTYPES[name]))
+            for name in SAMPLING_LEAVES}
+
+
+def fill_sampling_row(rows: Dict[str, np.ndarray], b: int,
+                      sp: SamplingParams) -> None:
+    rows["temp"][b] = sp.temperature
+    rows["topk"][b] = sp.top_k
+    rows["topp"][b] = sp.top_p
+    rows["seed"][b] = np.uint32(sp.seed)
+    rows["step"][b] = 0
+
+
+# ---------------------------------------------------------------------------
+# Candidate construction (the unfused oracle half) and the shard merge
+# ---------------------------------------------------------------------------
+def head_candidates(ctx: ParallelCtx, logits_loc: jax.Array,
+                    k: int = CAND_K) -> Tuple[jax.Array, jax.Array]:
+    """Unfused tail: top-k over vocab-sharded FULL logits → the same
+    sorted ``(values [B, k], global_indices [B, k])`` candidate set the
+    fused kernel streams — local ``select_topk``, lift to global vocab
+    (``+ shard · V_loc``), ONE tree ClusterReduce with the commutative
+    k-merge.  Shared selection + shared merge ⇒ fused ≡ unfused
+    candidates bit-for-bit (DESIGN.md §8 pt 0 at width k)."""
+    v_loc = logits_loc.shape[-1]
+    lf = logits_loc.astype(jnp.float32)
+    ids = jnp.broadcast_to(jnp.arange(v_loc, dtype=jnp.int32), lf.shape)
+    lv, li = select_topk(lf, ids, k)
+    li = li + ctx.model_index().astype(jnp.int32) * v_loc
+    if ctx.model is None:
+        return lv, li
+    return prim.cluster_reduce_pairs((lv, li), ctx.model, topk_pair_merge)
+
+
+# ---------------------------------------------------------------------------
+# Finalize: temperature / top-k / top-p / Gumbel-max on the k candidates
+# ---------------------------------------------------------------------------
+def finalize_candidates(vals: jax.Array, ids: jax.Array,
+                        samp: Dict[str, jax.Array]
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """``(values [B, K] sorted desc, global_indices [B, K], sampling
+    leaves)`` → ``(token [B] int32, head_val [B] f32)``.
+
+    ``head_val`` is the chosen token's RAW (pre-temperature) merged
+    logit — the value the ``check_finite`` sentinel tests and the
+    shadow-head probe re-derives against a pristine head copy
+    (serving/integrity.py), identical in meaning to the greedy pair's
+    max logit.
+
+    Every rank runs this on identical (replicated) candidates and
+    leaves, so ranks agree on the token without further collectives.
+    The Gumbel key is ``fold_in(PRNGKey(seed_b), step_b)`` — positional,
+    so journal replay re-derives the identical stream on any replica.
+    """
+    B, K = vals.shape
+    temp = samp["temp"]
+    rank = jnp.broadcast_to(jnp.arange(K, dtype=jnp.int32), (B, K))
+    # top-k: candidates are sorted value-descending, so the mask is a
+    # pure rank comparison
+    keep = rank < jnp.clip(samp["topk"], 1, K)[:, None]
+    scaled = vals / jnp.maximum(temp, 1e-6)[:, None]
+    scaled = jnp.where(keep, scaled, -jnp.inf)
+    # top-p (nucleus) on the surviving sorted candidates: keep while the
+    # cumulative probability BEFORE the candidate is < p; rank 0 always
+    # survives so the distribution is never empty
+    probs = jax.nn.softmax(scaled, axis=-1)
+    cum_before = jnp.cumsum(probs, axis=-1) - probs
+    keep_p = (cum_before < samp["topp"][:, None]) | (rank == 0)
+    scaled = jnp.where(keep_p, scaled, -jnp.inf)
+
+    def _gumbel(seed_b, step_b):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed_b), step_b)
+        return jax.random.gumbel(key, (K,), jnp.float32)
+
+    gum = jax.vmap(_gumbel)(samp["seed"], samp["step"])
+    choice = jnp.argmax(scaled + gum, axis=-1).astype(jnp.int32)
+    # temperature 0: bypass the PRNG, take candidate 0 (bit-identical
+    # to the greedy (max, argmax) pair)
+    j = jnp.where(temp > 0, choice, 0)
+    tok = jnp.take_along_axis(ids, j[:, None], axis=-1)[:, 0]
+    val = jnp.take_along_axis(vals, j[:, None], axis=-1)[:, 0]
+    return tok.astype(jnp.int32), val
+
+
+def advance_sampling_step(samp: Dict[str, jax.Array], active: jax.Array
+                          ) -> Dict[str, jax.Array]:
+    """Active slots' emit offset advances by one (free slots frozen) —
+    the decode-step counterpart of ``cache_lens + 1``."""
+    return dict(samp, step=jnp.where(active, samp["step"] + 1,
+                                     samp["step"]))
+
+
+# ---------------------------------------------------------------------------
+# Greedy pair reduce (moved verbatim from serving.engine, PR 5)
+# ---------------------------------------------------------------------------
+def _greedy_pair_merge(a, b):
+    """THE (value, index) reduce operator for greedy sampling: maximum
+    value, LOWEST global index among equal maxima.
+
+    The index tie-break makes the operator commutative as well as
+    associative, so every rank's tree association order yields the same
+    winner — without it, equal-max logits on different vocab shards
+    made ranks DISAGREE on the sampled token (each rank's tree folds
+    the shards in a different order, and a first-argument-wins tie kept
+    a different shard per rank).  One definition on purpose: the fused
+    head tail must reproduce ``greedy_sample`` exactly, and a divergent
+    copy would be a silent cross-path token mismatch on ties.  This IS
+    ``topk.select_topk``'s total order at k = 1; the k-wide merge
+    (``topk.topk_pair_merge``) generalizes it verbatim.
+    """
+    mv, mi = a
+    nv, ni = b
+    take_b = (nv > mv) | ((nv == mv) & (ni < mi))
+    return jnp.where(take_b, nv, mv), jnp.where(take_b, ni, mi)
+
+
+def greedy_sample_pair(ctx: ParallelCtx, logits_loc: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Greedy over vocab-sharded logits, returning BOTH halves of the
+    reduced (max_value, argmax_global_index) pair: the index is the
+    sampled token, the max logit is the cheapest per-slot health value
+    the ``check_finite`` sentinel can test (a NaN anywhere in a slot's
+    logits surfaces in its max under IEEE max-with-NaN or upstream in
+    the residual check).  Ties pick the lowest global index on every
+    rank (:func:`_greedy_pair_merge`)."""
+    v_loc = logits_loc.shape[-1]
+    shard = ctx.model_index()
+    lf = logits_loc.astype(jnp.float32)
+    loc_max = jnp.max(lf, axis=-1)
+    loc_idx = jnp.argmax(lf, axis=-1).astype(jnp.int32) + shard * v_loc
+    if ctx.model is None:
+        return loc_idx, loc_max
+    mx, idx = prim.cluster_reduce_pairs((loc_max, loc_idx), ctx.model,
+                                        _greedy_pair_merge)
+    return idx, mx
+
+
+def greedy_sample(ctx: ParallelCtx, logits_loc: jax.Array) -> jax.Array:
+    """Greedy over vocab-sharded logits: pair-wise tree reduce on
+    (max_value, argmax_global_index); ties pick the lowest global index
+    on every rank (:func:`_greedy_pair_merge`)."""
+    return greedy_sample_pair(ctx, logits_loc)[0]
+
+
+Sampling = Dict[str, Any]   # the state["sampling"] leaf dict

@@ -37,6 +37,9 @@ import jax
 import numpy as np
 
 from repro.launch.serve import EngineHandle
+from repro.serving.sampling import (GREEDY, SamplingParams,
+                                    fill_sampling_row, host_sampling_rows,
+                                    validate_sampling)
 
 
 @dataclass
@@ -54,11 +57,19 @@ class Request:
     against the journal (``replay_mismatch``); the journaled value is
     authoritative for both the result stream and the next decode input.
     ``max_new`` counts the replayed tokens, so a resumed request keeps
-    its original budget."""
+    its original budget.
+
+    ``sampling``: per-request :class:`SamplingParams`
+    (serving/sampling.py) — temperature / top-k / top-p / seed, default
+    greedy.  The params ride the admit call into the slot's device
+    state leaves and every emission of this request uses them; the PRNG
+    stream is positional (seed × emit offset), so a replayed request
+    re-derives its original sampled stream bit-exactly."""
     rid: int
     prompt: Sequence[int]
     max_new: int
     replay: Sequence[int] = ()
+    sampling: SamplingParams = GREEDY
 
 
 class SchedulerHooks:
@@ -116,6 +127,9 @@ class RequestResult:
     slot: int = -1
     admit_tick: int = -1
     finish_tick: int = -1
+    # effective per-request sampling params (what the device actually
+    # used — audit trail for sampled streams)
+    sampling: SamplingParams = GREEDY
 
 
 class SlotScheduler:
@@ -253,10 +267,12 @@ class SlotScheduler:
                 f"request {req.rid}: replay carries {len(req.replay)} "
                 f"tokens but max_new={req.max_new} — a resumed request "
                 "must have live tokens left to generate")
+        validate_sampling(req.rid, req.sampling)
         if req.rid in self.results:
             raise ValueError(f"request {req.rid}: duplicate request id")
         self.queue.append(req)
-        self.results[req.rid] = RequestResult(rid=req.rid)
+        self.results[req.rid] = RequestResult(rid=req.rid,
+                                              sampling=req.sampling)
 
     # -- lifecycle pieces -------------------------------------------------
     def _admit(self) -> None:
@@ -268,13 +284,15 @@ class SlotScheduler:
             return
         toks = np.zeros((self.n_slots, self.prompt_cap), np.int32)
         lens = np.zeros((self.n_slots,), np.int32)
+        samp = host_sampling_rows(self.n_slots)
         for b, req in admitted:
             toks[b, :len(req.prompt)] = np.asarray(req.prompt, np.int32)
             lens[b] = len(req.prompt)
+            fill_sampling_row(samp, b, req.sampling)
         if self.hooks is not None:
             toks, lens = self.hooks.admit_args(self, toks, lens)
         first, self.state = self.eng.admit_fn(
-            self.eng.params["train"], self.state, toks, lens)
+            self.eng.params["train"], self.state, toks, lens, samp)
         first = np.asarray(jax.device_get(first)).reshape(-1)
         for b, req in admitted:
             self.slots[b] = _Slot(rid=req.rid, remaining=req.max_new,

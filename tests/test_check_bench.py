@@ -36,6 +36,7 @@ def _report(**overrides):
         "ffn_fused_reduce_ici_bytes_per_step": 3072.0,
         "head_ici_bytes_per_step": 768.0,
         "head_hbm_logits_bytes_per_step": 0.0,
+        "head_sample_k": 8,
     }
     cell.update(overrides)
     return {"archs": {"llama2-7b": {"variants": {"pallas_prepack": cell}}}}
@@ -75,6 +76,20 @@ def test_counter_change_fails_both_directions(cb):
         assert not ok, launches
         assert "pallas_launches_per_step" in table
         assert "count changed" in table
+
+
+def test_head_sample_k_gates_exactly_both_directions(cb):
+    """The fused tail's candidate width is a count column: silently
+    widening (more ICI per step) or narrowing (smaller top-k/top-p
+    exactness envelope) both fail, even though the byte columns would
+    only catch the widening."""
+    for k in (4, 16):
+        ok, table = cb.check(_report(head_sample_k=k), _report())
+        assert not ok, k
+        assert "head_sample_k" in table
+        assert "count changed" in table
+    ok, _ = cb.check(_report(), _report())
+    assert ok
 
 
 def test_byte_increase_beyond_tolerance_fails(cb):

@@ -92,11 +92,11 @@ def test_fused_head_tie_breaks_to_lowest_index_across_tiles():
     tab = jnp.zeros((32, 8), jnp.float32).at[5, 0].set(7.0).at[21, 0].set(7.0)
     for bv in (4, 8, 16, 32):
         _, ik = fused_head(x, tab, ln, block_v=bv, interpret=True)
-        assert int(ik[0]) == 5, (bv, ik)
+        assert int(ik[0, 0]) == 5, (bv, ik)
     # within-tile tie too
     tab2 = jnp.zeros((32, 8), jnp.float32).at[9, 0].set(7.0).at[11, 0].set(7.0)
     _, ik2 = fused_head(x, tab2, ln, block_v=16, interpret=True)
-    assert int(ik2[0]) == 9
+    assert int(ik2[0, 0]) == 9
 
 
 @pytest.mark.slow
@@ -144,17 +144,24 @@ def test_fused_tail_matches_unfused_single_device(cap):
     tab = _mk(rng, (V, D), jnp.bfloat16, 0.05)
     ln = _mk(rng, (D,), jnp.float32, 0.1)
     w = df.PackedHeadWeights(table=tab, ln=ln)
-    got_tok, got_val = _fused_head_tail(ctx, cfg, scfg, w, x)
+    # the tail now returns the k-wide (values, indices) candidate lists,
+    # sorted value-descending; candidate 0 IS the greedy (max, argmax)
+    # pair, so both halves must match the PR-5 composition bit-for-bit
+    # (the value feeds the check_finite per-slot sentinel)
+    cand_v, cand_i = _fused_head_tail(ctx, cfg, scfg, w, x)
     logits = lm_head_logits(ctx, tab, rms_norm(x, ln, cfg.norm_eps))
     if cap:
         logits = softcap(logits, cap)
-    # both halves of the (token, max-logit) pair must match: the token
-    # is the sampled output, the max logit feeds the check_finite
-    # per-slot sentinel (serving/engine._finite_violations)
     want_tok, want_val = greedy_sample_pair(ctx, logits)
-    np.testing.assert_array_equal(np.asarray(got_tok), np.asarray(want_tok))
-    np.testing.assert_allclose(np.asarray(got_val), np.asarray(want_val),
-                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(cand_i[:, 0]),
+                                  np.asarray(want_tok))
+    np.testing.assert_allclose(np.asarray(cand_v[:, 0]),
+                               np.asarray(want_val), rtol=1e-6)
+    # candidates are strictly value-sorted and index-deduplicated
+    cv, ci = np.asarray(cand_v), np.asarray(cand_i)
+    assert (cv[:, :-1] >= cv[:, 1:]).all()
+    for b in range(cv.shape[0]):
+        assert len(set(ci[b].tolist())) == ci.shape[1]
 
 
 # ---------------------------------------------------------------------------
@@ -323,12 +330,13 @@ def test_fused_head_tail_cluster_sweep_token_exact():
                     tab_l = jax.lax.dynamic_slice_in_dim(
                         tab, r * v_loc, v_loc, axis=0)
                     w = df.PackedHeadWeights(table=tab_l, ln=ln)
-                    fused_tok, _ = _fused_head_tail(ctx, cfg, scfg, w, x)
+                    cv, ci = _fused_head_tail(ctx, cfg, scfg, w, x)
                     lg = lm_head_logits(ctx, tab_l,
                                         rms_norm(x, ln, cfg.norm_eps))
                     if cap:
                         lg = softcap(lg, cap)
-                    return fused_tok[None], greedy_sample(ctx, lg)[None]
+                    # candidate 0 of the k-wide merge IS the greedy token
+                    return ci[:, 0][None], greedy_sample(ctx, lg)[None]
 
                 got, want = jax.jit(shard_map(
                     body, mesh=mesh, in_specs=(P(),) * 3,
@@ -358,7 +366,7 @@ def test_engine_fused_head_token_exact_cluster_sweep():
     from repro.configs import get_config, reduced
     from repro.core import tracecount
     from repro.launch.mesh import make_test_mesh
-    from repro.launch.serve import build_engine_full
+    from repro.launch.serve import EngineOptions, build_engine_full
     for arch in ("llama2-7b", "gemma2-27b"):
         cfg = reduced(get_config(arch))
         period = len(cfg.block_pattern)
@@ -367,8 +375,9 @@ def test_engine_fused_head_token_exact_cluster_sweep():
             res = {}
             for label, fh in (("fused", True), ("nohead", False)):
                 h = build_engine_full(
-                    cfg, mesh, max_seq=32, batch_global=4, cluster=n,
-                    backend="pallas", interpret=True, fuse_head=fh)
+                    cfg, mesh, max_seq=32, batch_global=4,
+                    options=EngineOptions(cluster=n, backend="pallas",
+                                          interpret=True, fuse_head=fh))
                 tok0 = jnp.zeros((4,), jnp.int32)
                 with tracecount.counting() as c:
                     jax.eval_shape(h.decode_fn, h.params["serve"],

@@ -152,13 +152,15 @@ def _fleet():
 
         from repro.configs import get_config, reduced
         from repro.launch.mesh import make_test_mesh
-        from repro.launch.serve import build_replicas
+        from repro.launch.serve import EngineOptions, build_replicas
         cfg = reduced(get_config("llama2-7b"))
         if cfg.moe is not None:
             cfg = dataclasses.replace(cfg, moe=None)
         mesh = make_test_mesh(data=1, model=1)
-        _FLEET = cfg, build_replicas(cfg, mesh, n_replicas=2, max_seq=32,
-                                     batch_global=2, backend="xla")
+        _FLEET = cfg, build_replicas(
+            cfg, mesh, n_replicas=2, max_seq=32, batch_global=2,
+            options=EngineOptions(backend="xla", check_finite=True,
+                                  kv_fingerprint=True, shadow_head=True))
     return _FLEET
 
 
@@ -202,9 +204,11 @@ def test_engine_flags_gate_integrity_leaves_and_traces():
     mesh = make_test_mesh(data=1, model=1)
     counts = {}
     for flag in (False, True):
-        eng = build_engine_full(cfg, mesh, max_seq=16, batch_global=1,
-                                backend="xla", kv_fingerprint=flag,
-                                shadow_head=flag)
+        from repro.launch.serve import EngineOptions
+        eng = build_engine_full(
+            cfg, mesh, max_seq=16, batch_global=1,
+            options=EngineOptions(backend="xla", kv_fingerprint=flag,
+                                  shadow_head=flag))
         assert ("kv_fp" in eng.state) == flag
         assert ("head_resid" in eng.state) == flag
         with tracecount.counting() as c:

@@ -55,13 +55,15 @@ def _build_replicas(arch, **kw):
 
     from repro.configs import get_config, reduced
     from repro.launch.mesh import make_test_mesh
-    from repro.launch.serve import build_replicas
+    from repro.launch.serve import EngineOptions, build_replicas
     cfg = reduced(get_config(arch))
     if cfg.moe is not None:             # dense-MLA arm (deepseek minus MoE)
         cfg = dataclasses.replace(cfg, moe=None)
     mesh = kw.pop("mesh", None) or make_test_mesh(data=1, model=1)
+    opts = EngineOptions(backend="xla", check_finite=True,
+                         kv_fingerprint=True, shadow_head=True, **kw)
     return cfg, build_replicas(cfg, mesh, n_replicas=2, max_seq=32,
-                               batch_global=2, backend="xla", **kw)
+                               batch_global=2, options=opts)
 
 
 def _mk_trace(cfg, seed, n_req=6):
@@ -228,13 +230,14 @@ def test_check_finite_off_traces_no_guard():
     leaf."""
     from repro.configs import get_config, reduced
     from repro.launch.mesh import make_test_mesh
-    from repro.launch.serve import build_engine_full
+    from repro.launch.serve import EngineOptions, build_engine_full
     cfg = reduced(get_config("llama2-7b"))
     mesh = make_test_mesh(data=1, model=1)
     counts = {}
     for flag in (False, True):
-        eng = build_engine_full(cfg, mesh, max_seq=16, batch_global=1,
-                                backend="xla", check_finite=flag)
+        eng = build_engine_full(
+            cfg, mesh, max_seq=16, batch_global=1,
+            options=EngineOptions(backend="xla", check_finite=flag))
         assert ("nonfinite" in eng.state) == flag
         with tracecount.counting() as c:
             tok = np.zeros((1,), np.int32)
@@ -280,7 +283,7 @@ def test_chaos_matrix_cluster2(arch):
     from repro.configs import get_config, reduced
     from repro.core import tracecount
     from repro.launch.mesh import make_test_mesh
-    from repro.launch.serve import build_replicas
+    from repro.launch.serve import EngineOptions, build_replicas
     from repro.serving.faults import FAULT_KINDS, FaultInjector, FaultSpec
     from repro.serving.router import Router
     from repro.serving.scheduler import Request
@@ -289,8 +292,10 @@ def test_chaos_matrix_cluster2(arch):
     if cfg.moe is not None:
         cfg = dataclasses.replace(cfg, moe=None)
     mesh = make_test_mesh(data=1, model=2)
-    engines = build_replicas(cfg, mesh, n_replicas=2, max_seq=32,
-                             batch_global=2, backend="xla", cluster=2)
+    engines = build_replicas(
+        cfg, mesh, n_replicas=2, max_seq=32, batch_global=2,
+        options=EngineOptions(backend="xla", cluster=2, check_finite=True,
+                              kv_fingerprint=True, shadow_head=True))
     assert all(e.lay.cluster == 2 for e in engines)
     rng = np.random.default_rng(0)
     trace = []

@@ -1,0 +1,507 @@
+"""Per-request stochastic sampling over the fused head's k candidates
+(serving/sampling.py, kernels/fused_head/topk.py — DESIGN.md §7 sampled
+tail, §8 pt 0 at width k).
+
+* The k-merge ClusterReduce operator (``topk_pair_merge``): commutative,
+  associative under ANY tree association order, cross-shard ties resolve
+  to the LOWEST global index, -inf padding never survives against real
+  candidates — plus a ``_minihyp``-compatible property equating every
+  fold order with the flat ``select_topk`` spec.
+* ``SamplingParams`` validation: out-of-range fields raise ``ValueError``
+  naming the offending field at ``submit()``.
+* ``finalize_candidates`` semantics: temperature 0 ≡ candidate 0
+  (bit-identical greedy); top-k restricts support by rank; top-p keeps
+  rank 0 unconditionally; the positional PRNG makes streams a pure
+  function of (seed, emit offset).
+* ``EngineOptions``: the legacy-kwargs deprecation shim warns ONCE,
+  rejects unknown kwargs by name, and builds an engine token-identical
+  to the options-built one.
+* Scheduler: per-request params ride admission into the device leaves;
+  heterogeneous batches record effective params on ``RequestResult``;
+  same seed ⇒ same stream, different seed ⇒ different stream.
+* Fused-vs-oracle EXACTNESS with heterogeneous per-slot params (incl. a
+  retired slot) at cluster {1, 2, 4} on 8 emulated devices: the fused
+  candidate path and the ``fuse_head=False`` full-logits path emit
+  token-identical SAMPLED streams — the k-candidate contract.
+* Chaos tier: kill a replica mid-stream while temperature > 0 requests
+  are in flight — the router's journaled ``SamplingParams`` + positional
+  PRNG reconstruct every sampled stream byte-equal to a fault-free
+  oracle (DESIGN.md §9).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # tier-1 container: deterministic shim
+    from _minihyp import given, settings, strategies as st
+
+from helpers import run_multidevice
+
+from repro.kernels.fused_head.topk import select_topk, topk_pair_merge
+from repro.serving.sampling import (CAND_K, GREEDY, SamplingParams,
+                                    finalize_candidates,
+                                    init_sampling_state, validate_sampling)
+
+
+# ---------------------------------------------------------------------------
+# The k-merge ClusterReduce operator
+# ---------------------------------------------------------------------------
+def _mk_shard(rng, b, m, k, shard, v_loc):
+    """A sorted candidate set from one vocab shard: ids drawn inside the
+    shard's disjoint global range ``[shard·v_loc, (shard+1)·v_loc)``."""
+    vals = jnp.asarray(rng.standard_normal((b, m)), jnp.float32)
+    ids = jnp.asarray(
+        np.stack([rng.choice(v_loc, size=m, replace=False)
+                  for _ in range(b)]) + shard * v_loc, jnp.int32)
+    return select_topk(vals, ids, k)
+
+
+def test_topk_pair_merge_commutative():
+    rng = np.random.default_rng(0)
+    for k in (1, 2, 4, 8):
+        a = _mk_shard(rng, 3, 16, k, shard=0, v_loc=32)
+        b = _mk_shard(rng, 3, 16, k, shard=1, v_loc=32)
+        ab_v, ab_i = topk_pair_merge(a, b)
+        ba_v, ba_i = topk_pair_merge(b, a)
+        np.testing.assert_array_equal(np.asarray(ab_v), np.asarray(ba_v))
+        np.testing.assert_array_equal(np.asarray(ab_i), np.asarray(ba_i))
+
+
+def test_topk_pair_merge_associative_any_tree_order():
+    """Four shards folded left-to-right, right-to-left and as a balanced
+    tree (every association a rank's ClusterReduce could pick) must all
+    yield the spec: flat ``select_topk`` over the full concatenation."""
+    rng = np.random.default_rng(1)
+    for k in (1, 3, 8):
+        shards = [_mk_shard(rng, 2, 12, k, shard=s, v_loc=16)
+                  for s in range(4)]
+        flat_v = jnp.concatenate([v for v, _ in shards], axis=-1)
+        flat_i = jnp.concatenate([i for _, i in shards], axis=-1)
+        spec = select_topk(flat_v, flat_i, k)
+        folds = {
+            "ltr": topk_pair_merge(topk_pair_merge(topk_pair_merge(
+                shards[0], shards[1]), shards[2]), shards[3]),
+            "rtl": topk_pair_merge(shards[0], topk_pair_merge(
+                shards[1], topk_pair_merge(shards[2], shards[3]))),
+            "tree": topk_pair_merge(topk_pair_merge(shards[0], shards[1]),
+                                    topk_pair_merge(shards[2], shards[3])),
+            "perm": topk_pair_merge(topk_pair_merge(shards[2], shards[0]),
+                                    topk_pair_merge(shards[3], shards[1])),
+        }
+        for name, (gv, gi) in folds.items():
+            np.testing.assert_array_equal(np.asarray(spec[0]),
+                                          np.asarray(gv), err_msg=name)
+            np.testing.assert_array_equal(np.asarray(spec[1]),
+                                          np.asarray(gi), err_msg=name)
+
+
+def test_topk_merge_cross_shard_tie_break_lowest_index():
+    """Equal values planted on DIFFERENT shards must resolve to the
+    lowest global index at every rank of the merged set — the k-wide
+    generalization of the ``_greedy_pair_merge`` tie-break fix."""
+    k = 4
+    # shard 0 holds ids {8, 9}, shard 1 holds ids {3, 5} globally lower?
+    # no — make shard 1's ids HIGHER so order of args must not matter.
+    a = (jnp.asarray([[7.0, 2.0, -jnp.inf, -jnp.inf]]),
+         jnp.asarray([[5, 1, 2 ** 31 - 1, 2 ** 31 - 1]], jnp.int32))
+    b = (jnp.asarray([[7.0, 2.0, -jnp.inf, -jnp.inf]]),
+         jnp.asarray([[21, 9, 2 ** 31 - 1, 2 ** 31 - 1]], jnp.int32))
+    for x, y in ((a, b), (b, a)):
+        mv, mi = topk_pair_merge(x, y)
+        # both 7.0s kept, lowest index FIRST; both 2.0s likewise
+        np.testing.assert_array_equal(np.asarray(mv),
+                                      [[7.0, 7.0, 2.0, 2.0]])
+        np.testing.assert_array_equal(np.asarray(mi), [[5, 21, 1, 9]])
+    assert int(topk_pair_merge(a, b)[1][0, 0]) == 5   # the greedy slot
+
+
+def test_select_topk_padding_never_beats_real_candidates():
+    """M < k pads with (-inf, INT32_MAX); merging padding against real
+    candidates must keep every real one."""
+    v, i = select_topk(jnp.asarray([[1.0, 3.0]]),
+                       jnp.asarray([[4, 2]], jnp.int32), k=4)
+    np.testing.assert_array_equal(np.asarray(v)[0, :2], [3.0, 1.0])
+    np.testing.assert_array_equal(np.asarray(i)[0, :2], [2, 4])
+    assert np.isneginf(np.asarray(v)[0, 2:]).all()
+    real = (jnp.asarray([[2.0, 0.5, -1.0, -2.0]]),
+            jnp.asarray([[10, 11, 12, 13]], jnp.int32))
+    mv, mi = topk_pair_merge((v, i), real)
+    np.testing.assert_array_equal(np.asarray(mv), [[3.0, 2.0, 1.0, 0.5]])
+    np.testing.assert_array_equal(np.asarray(mi), [[2, 10, 4, 11]])
+
+
+@given(st.integers(0, 2 ** 31), st.integers(1, 8), st.integers(1, 4))
+@settings(max_examples=20, deadline=None)
+def test_topk_merge_property_any_fold_equals_spec(seed, k, n_shards):
+    """Property (hypothesis or the _minihyp shim): for random candidate
+    sets over disjoint shard id ranges, folding shard-by-shard with the
+    pair merge — in arrival order OR reversed — equals flat
+    ``select_topk`` over everything at once."""
+    rng = np.random.default_rng(seed)
+    shards = [_mk_shard(rng, 2, 8, k, shard=s, v_loc=16)
+              for s in range(n_shards)]
+    spec = select_topk(jnp.concatenate([v for v, _ in shards], axis=-1),
+                       jnp.concatenate([i for _, i in shards], axis=-1), k)
+    for order in (shards, shards[::-1]):
+        acc = order[0]
+        for nxt in order[1:]:
+            acc = topk_pair_merge(acc, nxt)
+        np.testing.assert_array_equal(np.asarray(spec[0]),
+                                      np.asarray(acc[0]))
+        np.testing.assert_array_equal(np.asarray(spec[1]),
+                                      np.asarray(acc[1]))
+
+
+# ---------------------------------------------------------------------------
+# SamplingParams validation — errors name the offending field
+# ---------------------------------------------------------------------------
+def test_sampling_params_validation_names_offending_field():
+    validate_sampling(0, GREEDY)
+    validate_sampling(0, SamplingParams(temperature=0.7, top_k=4,
+                                        top_p=0.9, seed=3))
+    for sp, field in (
+            (SamplingParams(temperature=-0.1), "temperature"),
+            (SamplingParams(top_k=0), "top_k"),
+            (SamplingParams(top_k=CAND_K + 1), "top_k"),
+            (SamplingParams(top_p=0.0), "top_p"),
+            (SamplingParams(top_p=1.5), "top_p")):
+        with pytest.raises(ValueError, match=field) as ei:
+            validate_sampling(7, sp)
+        assert "request 7" in str(ei.value)
+    # the CAND_K cap is explained, not just enforced
+    with pytest.raises(ValueError, match="CAND_K"):
+        validate_sampling(0, SamplingParams(top_k=99))
+
+
+# ---------------------------------------------------------------------------
+# finalize_candidates semantics (pure jnp, single device)
+# ---------------------------------------------------------------------------
+def _cands(rng, b=4, k=CAND_K, v=64):
+    vals = jnp.asarray(
+        np.sort(rng.standard_normal((b, k)))[:, ::-1].copy(), jnp.float32)
+    ids = jnp.asarray(
+        np.stack([rng.choice(v, size=k, replace=False)
+                  for _ in range(b)]), jnp.int32)
+    return vals, ids
+
+
+def _leaves(b, **over):
+    samp = init_sampling_state(b)
+    for name, val in over.items():
+        samp[name] = jnp.asarray(val, samp[name].dtype)
+    return samp
+
+
+def test_finalize_greedy_default_is_candidate_zero():
+    rng = np.random.default_rng(2)
+    vals, ids = _cands(rng)
+    tok, hv = finalize_candidates(vals, ids, _leaves(4))
+    np.testing.assert_array_equal(np.asarray(tok), np.asarray(ids[:, 0]))
+    np.testing.assert_array_equal(np.asarray(hv), np.asarray(vals[:, 0]))
+
+
+def test_finalize_topk_restricts_support_by_rank():
+    """temp > 0 with top_k = j must only ever emit one of the first j
+    candidates; head_val is the RAW pre-temperature logit."""
+    rng = np.random.default_rng(3)
+    vals, ids = _cands(rng, b=1)
+    for j in (1, 2, 3):
+        for seed in range(24):
+            tok, hv = finalize_candidates(
+                vals[:1], ids[:1],
+                _leaves(1, temp=[1.5], topk=[j], seed=[seed]))
+            r = list(np.asarray(ids)[0, :j])
+            assert int(tok[0]) in r, (j, seed)
+            rank = r.index(int(tok[0]))
+            assert float(hv[0]) == float(vals[0, rank])
+
+
+def test_finalize_topp_keeps_rank_zero_always():
+    """A top_p below the best candidate's own probability collapses the
+    nucleus to rank 0 — never an empty distribution."""
+    rng = np.random.default_rng(4)
+    vals, ids = _cands(rng, b=2)
+    for seed in range(16):
+        tok, _ = finalize_candidates(
+            vals, ids, _leaves(2, temp=[1.0, 2.0], topp=[1e-6, 1e-6],
+                               seed=[seed, seed + 100]))
+        np.testing.assert_array_equal(np.asarray(tok),
+                                      np.asarray(ids[:, 0]))
+
+
+def test_finalize_positional_prng_is_pure_in_seed_and_step():
+    """Same (seed, step) ⇒ same token regardless of history; stepping
+    the emit offset varies the stream; distinct seeds give distinct
+    streams — the property fleet replay rests on."""
+    rng = np.random.default_rng(5)
+    vals, ids = _cands(rng, b=1)
+
+    def tok(seed, step):
+        t, _ = finalize_candidates(
+            vals, ids, _leaves(1, temp=[1.2], seed=[seed], step=[step]))
+        return int(t[0])
+
+    for seed in (0, 7, 123):
+        for step in (0, 1, 9):
+            assert tok(seed, step) == tok(seed, step)
+    stream_a = [tok(7, s) for s in range(12)]
+    stream_b = [tok(8, s) for s in range(12)]
+    assert len(set(stream_a)) > 1          # the offset actually varies it
+    assert stream_a != stream_b            # and so does the seed
+
+
+# ---------------------------------------------------------------------------
+# EngineOptions + the legacy-kwargs deprecation shim (1-device engine)
+# ---------------------------------------------------------------------------
+def _tiny_engine(**kw):
+    from repro.configs import get_config, reduced
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.serve import build_engine_full
+    cfg = reduced(get_config("llama2-7b"))
+    mesh = make_test_mesh(data=1, model=1)
+    return cfg, build_engine_full(cfg, mesh, max_seq=32, batch_global=2,
+                                  **kw)
+
+
+def test_engine_options_legacy_shim_warns_once_and_matches():
+    import warnings
+
+    from repro.launch import serve
+    from repro.launch.serve import EngineOptions
+    serve._LEGACY_KWARGS_WARNED = False
+    with pytest.warns(DeprecationWarning, match="EngineOptions"):
+        cfg, legacy = _tiny_engine(backend="xla", track_work=True)
+    with warnings.catch_warnings():       # once per process, not per call
+        warnings.simplefilter("error")
+        _, modern = _tiny_engine(
+            options=EngineOptions(backend="xla", track_work=True))
+        _tiny_engine(backend="xla")       # legacy again: still silent
+    # the shimmed engine is the SAME engine: token-identical streams
+    prompts = np.asarray([[3, 5, 7, 2], [11, 2, 9, 4]], np.int32)
+    streams = []
+    for eng in (legacy, modern):
+        nxt, stt = eng.prefill_fn(eng.params["train"], eng.state, prompts,
+                                  None)
+        out = [np.asarray(nxt)]
+        for t in range(4):
+            o, stt = eng.decode_fn(eng.params["serve"], stt,
+                                   jnp.asarray([t + 1, t + 2], jnp.int32))
+            out.append(np.asarray(o))
+        streams.append(np.stack(out))
+    np.testing.assert_array_equal(streams[0], streams[1])
+
+
+def test_engine_options_unknown_kwarg_raises_by_name():
+    with pytest.raises(TypeError, match="fuse_hea"):
+        _tiny_engine(backend="xla", fuse_hea=True)
+
+
+def test_engine_options_mixed_with_options_object():
+    """options= plus legacy kwargs: the kwargs override ON TOP of the
+    given options (dataclasses.replace semantics)."""
+    from repro.launch import serve
+    from repro.launch.serve import EngineOptions
+    serve._LEGACY_KWARGS_WARNED = False
+    with pytest.warns(DeprecationWarning):
+        _, eng = _tiny_engine(options=EngineOptions(backend="xla"),
+                              track_work=True)
+    assert eng.state.get("work_blocks") is not None
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: per-request params ride admission; streams are seeded
+# ---------------------------------------------------------------------------
+_SCHED_ENGINE = None
+
+
+def _sched_engine():
+    global _SCHED_ENGINE
+    if _SCHED_ENGINE is None:
+        from repro.launch.serve import EngineOptions
+        _SCHED_ENGINE = _tiny_engine(
+            options=EngineOptions(backend="xla", track_work=True))
+    return _SCHED_ENGINE
+
+
+def _run_sched(trace, prompt_cap=6):
+    from repro.serving.scheduler import SlotScheduler, replay_trace
+    cfg, eng = _sched_engine()
+    sched = SlotScheduler(eng, prompt_cap=prompt_cap)
+    return replay_trace(sched, trace)
+
+
+def test_scheduler_submit_rejects_bad_sampling_by_name():
+    from repro.serving.scheduler import Request, SlotScheduler
+    cfg, eng = _sched_engine()
+    sched = SlotScheduler(eng, prompt_cap=6)
+    with pytest.raises(ValueError, match="top_k"):
+        sched.submit(Request(0, [1, 2], 3,
+                             sampling=SamplingParams(top_k=CAND_K + 3)))
+    with pytest.raises(ValueError, match="temperature"):
+        sched.submit(Request(1, [1, 2], 3,
+                             sampling=SamplingParams(temperature=-1.0)))
+
+
+def test_scheduler_heterogeneous_sampling_recorded_and_seeded():
+    """One batch, one greedy + one sampled request: effective params land
+    on RequestResult; the sampled stream reruns bit-equal under the same
+    seed and moves under a different seed; greedy rides along unchanged
+    (slot independence of the sampling leaves)."""
+    from repro.serving.scheduler import Request
+    sp = SamplingParams(temperature=0.9, top_k=6, top_p=0.95, seed=41)
+    prompts = ([5, 9, 2, 8], [4, 4, 1])
+
+    def trace(seed):
+        s = SamplingParams(temperature=0.9, top_k=6, top_p=0.95,
+                           seed=seed)
+        return [(0, Request(0, list(prompts[0]), 8)),
+                (0, Request(1, list(prompts[1]), 8, sampling=s))]
+
+    res = _run_sched(trace(41))
+    assert res[0].sampling == GREEDY
+    assert res[1].sampling == sp
+    res2 = _run_sched(trace(41))
+    assert res2[1].tokens == res[1].tokens       # same seed ⇒ same stream
+    assert res2[0].tokens == res[0].tokens
+    res3 = _run_sched(trace(1234))
+    assert res3[0].tokens == res[0].tokens       # greedy slot untouched
+    assert res3[1].tokens != res[1].tokens       # seed moved the stream
+    # the sampled stream is NOT the greedy stream (temperature mattered)
+    res_g = _run_sched([(0, Request(0, list(prompts[0]), 8)),
+                        (0, Request(1, list(prompts[1]), 8))])
+    assert res[1].tokens != res_g[1].tokens
+
+
+# ---------------------------------------------------------------------------
+# Fused vs unfused oracle: heterogeneous per-slot params, cluster sweep
+# ---------------------------------------------------------------------------
+@pytest.mark.multidevice
+def test_fused_sampling_token_exact_heterogeneous_cluster_sweep():
+    """The exactness contract at width k (DESIGN.md §8 pt 0): the fused
+    candidate path and the ``fuse_head=False`` full-logits oracle emit
+    IDENTICAL sampled streams for a batch mixing greedy, top-k, top-p
+    and distinct seeds — including a retired slot — at cluster {1,2,4}.
+    Also proves the stochastic slots actually left the greedy stream."""
+    run_multidevice("""
+    from repro.configs import get_config, reduced
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.serve import EngineOptions, build_engine_full
+    for arch in ("llama2-7b", "gemma2-27b"):
+        cfg = reduced(get_config(arch))
+        mesh = make_test_mesh()
+        for n in (1, 2, 4):
+            res = {}
+            for label, fh in (("fused", True), ("nohead", False)):
+                h = build_engine_full(
+                    cfg, mesh, max_seq=32, batch_global=4,
+                    options=EngineOptions(cluster=n, backend="pallas",
+                                          interpret=True, fuse_head=fh))
+                key = jax.random.PRNGKey(0)
+                prompts = jax.random.randint(key, (4, 12), 0,
+                                             cfg.vocab_size)
+                nxt, st = h.prefill_fn(h.params["train"], h.state,
+                                       prompts, None)
+                # retire slot 2 (its meaningless token must still agree)
+                st = h.retire_fn(st, jnp.asarray([0, 0, 1, 0], jnp.int32))
+                # heterogeneous per-slot params: slot 0 greedy, slot 1
+                # temp+top-k, slot 2 retired-but-parameterized, slot 3
+                # temp+top-p — exactly what a mixed continuous batch
+                # has.  State leaves ride the lifted [dp, model, B_loc]
+                # layout (launch/specs.state_spec_tree) with the batch
+                # split over dp — fold the global per-slot row into it.
+                def set_leaf(old, row):
+                    dp, ms, bl = old.shape
+                    r = jnp.asarray(row, old.dtype).reshape(dp, 1, bl)
+                    return jnp.broadcast_to(r, old.shape)
+                st["sampling"] = dict(
+                    st["sampling"],
+                    temp=set_leaf(st["sampling"]["temp"],
+                                  [0.0, 0.9, 0.8, 0.7]),
+                    topk=set_leaf(st["sampling"]["topk"], [8, 4, 8, 8]),
+                    topp=set_leaf(st["sampling"]["topp"],
+                                  [1.0, 1.0, 1.0, 0.6]),
+                    seed=set_leaf(st["sampling"]["seed"], [0, 11, 5, 3]))
+                toks = jax.random.randint(jax.random.PRNGKey(3), (5, 4),
+                                          0, cfg.vocab_size)
+                outs = []
+                for t in range(5):
+                    o, st = h.decode_fn(h.params["serve"], st, toks[t])
+                    outs.append(np.asarray(o))
+                res[label] = np.stack(outs)
+                if fh:
+                    # greedy rerun for the did-it-actually-sample check
+                    _, st_g = h.prefill_fn(h.params["train"], h.state,
+                                           prompts, None)
+                    st_g = h.retire_fn(st_g,
+                                       jnp.asarray([0, 0, 1, 0],
+                                                   jnp.int32))
+                    g = []
+                    for t in range(5):
+                        o, st_g = h.decode_fn(h.params["serve"], st_g,
+                                              toks[t])
+                        g.append(np.asarray(o))
+                    res["greedy"] = np.stack(g)
+            np.testing.assert_array_equal(res["fused"], res["nohead"])
+            assert res["fused"][:, 0].tolist() == \\
+                res["greedy"][:, 0].tolist(), (arch, n)   # slot 0 greedy
+            assert res["fused"][:, 1].tolist() != \\
+                res["greedy"][:, 1].tolist(), (arch, n)   # slot 1 sampled
+            print("HETEROGENEOUS SAMPLING EXACT", arch, "N =", n)
+    """, timeout=1800)
+
+
+# ---------------------------------------------------------------------------
+# Chaos tier: kill mid-stream at temperature > 0 → byte-equal replay
+# ---------------------------------------------------------------------------
+def test_sampled_streams_survive_replica_kill_byte_equal():
+    """Fleet recovery of STOCHASTIC streams (DESIGN.md §9 + the
+    positional PRNG): kill replica 0 two ticks in while temperature > 0
+    requests are mid-flight; the survivor replays each journaled prefix
+    and continues sampling from the journaled SamplingParams + emit
+    offsets — every stream byte-equals the fault-free oracle."""
+    from repro.configs import get_config, reduced
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.serve import EngineOptions, build_replicas
+    from repro.serving.faults import FaultInjector, FaultSpec
+    from repro.serving.router import Router
+    from repro.serving.scheduler import Request
+
+    cfg = reduced(get_config("llama2-7b"))
+    mesh = make_test_mesh(data=1, model=1)
+    engines = build_replicas(
+        cfg, mesh, n_replicas=2, max_seq=32, batch_global=2,
+        options=EngineOptions(backend="xla", check_finite=True,
+                              kv_fingerprint=True, shadow_head=True))
+    rng = np.random.default_rng(6)
+    trace = []
+    for rid in range(5):
+        sp = SamplingParams(temperature=0.9, top_k=6, top_p=0.9,
+                            seed=rid * 7 + 1)
+        plen = int(rng.integers(2, 7))
+        trace.append((int(rng.integers(0, 3)), Request(
+            rid, [int(t) for t in rng.integers(1, cfg.vocab_size, plen)],
+            int(rng.integers(4, 8)), sampling=sp)))
+
+    def run(injectors=None):
+        return Router(engines, prompt_cap=8, max_new_cap=8,
+                      injectors=injectors).run(
+            [(t, Request(r.rid, r.prompt, r.max_new, sampling=r.sampling))
+             for t, r in trace])
+
+    oracle = run()
+    assert all(e.sampling.temperature == 0.9 for e in oracle.values())
+    inj = FaultInjector([FaultSpec("kill", step=2, target=0, replica=0)])
+    journal = run(injectors={0: inj})
+    assert len(inj.fired) == 1
+    got = {rid: list(e.tokens) for rid, e in journal.items()}
+    want = {rid: list(e.tokens) for rid, e in oracle.items()}
+    assert got == want
+    # at least one sampled stream was actually cut over mid-flight
+    requeued = [e for e in journal.values() if e.requeues]
+    assert requeued
+    assert all(e.replicas[-1] == 1 for e in requeued)
+    # and the journal carries the params that made the replay exact
+    assert all(e.sampling.seed == e.rid * 7 + 1
+               for e in journal.values())

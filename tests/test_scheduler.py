@@ -21,7 +21,7 @@ from helpers import run_multidevice
 
 from repro.configs import get_config, reduced
 from repro.launch.mesh import make_test_mesh
-from repro.launch.serve import build_engine_full
+from repro.launch.serve import EngineOptions, build_engine_full
 from repro.serving.scheduler import Request, SlotScheduler, replay_trace
 
 
@@ -79,9 +79,9 @@ def _random_trace(rng, n_req, vocab, prompt_cap, max_new_cap):
 def _build(arch="llama2-7b", n_slots=3, max_seq=48, **kw):
     cfg = reduced(get_config(arch))
     mesh = make_test_mesh(data=1, model=1)
-    eng = build_engine_full(cfg, mesh, max_seq=max_seq,
-                            batch_global=n_slots, backend="xla",
-                            track_work=True, **kw)
+    eng = build_engine_full(
+        cfg, mesh, max_seq=max_seq, batch_global=n_slots,
+        options=EngineOptions(backend="xla", track_work=True, **kw))
     return cfg, eng
 
 
@@ -285,7 +285,7 @@ def test_scheduler_backend_parity_pallas_prepack():
     run_multidevice("""
     from repro.configs import get_config, reduced
     from repro.launch.mesh import make_test_mesh
-    from repro.launch.serve import build_engine_full
+    from repro.launch.serve import EngineOptions, build_engine_full
     from repro.serving.scheduler import Request, SlotScheduler, replay_trace
     cfg = reduced(get_config("llama2-7b"))
     rng = np.random.default_rng(11)
@@ -298,10 +298,11 @@ def test_scheduler_backend_parity_pallas_prepack():
     outs = {}
     for backend in ("xla", "pallas"):
         mesh = make_test_mesh(data=1, model=2)
-        eng = build_engine_full(cfg, mesh, max_seq=32, batch_global=2,
-                                backend=backend,
-                                interpret=(backend == "pallas"),
-                                track_work=True)
+        eng = build_engine_full(
+            cfg, mesh, max_seq=32, batch_global=2,
+            options=EngineOptions(backend=backend,
+                                  interpret=(backend == "pallas"),
+                                  track_work=True))
         assert eng.scfg.prepack == (backend == "pallas")
         sched = SlotScheduler(eng, prompt_cap=8)
         res = replay_trace(sched, trace)
